@@ -1,0 +1,39 @@
+"""Paper §5.4 — failure and recovery robustness.
+
+One client of four "fails" (its pushes are lost) for a window of rounds and
+then recovers, continuing from its snapshot against the freshly-pulled
+shared state — the client-failover protocol.  The run must converge to a
+perplexity comparable with the no-failure run (the paper's production
+requirement: pre-emption is routine on the shared cluster)."""
+
+from __future__ import annotations
+
+from repro.core import lda
+
+from benchmarks import common
+
+
+def run(quick: bool = True) -> None:
+    tokens, mask, _, ccfg = common.default_corpus(quick, seed=7)
+    cfg = lda.LDAConfig(n_topics=ccfg.n_topics, vocab_size=ccfg.vocab_size,
+                        alpha=0.1, beta=0.01, mh_steps=2)
+    n_rounds = 12 if quick else 24
+
+    baseline = common.run_multiclient(
+        common.lda_hooks(cfg), tokens, mask, n_clients=4, n_rounds=n_rounds,
+        method="mhw", eval_every=max(1, n_rounds // 4))
+    failed = common.run_multiclient(
+        common.lda_hooks(cfg), tokens, mask, n_clients=4, n_rounds=n_rounds,
+        method="mhw", eval_every=max(1, n_rounds // 4),
+        drop_client=(1, n_rounds // 4, n_rounds // 2))
+
+    common.emit("failover_54", variant="baseline",
+                perplexity_final=baseline.perplexities[-1])
+    common.emit("failover_54", variant="client1_fails",
+                perplexity_final=failed.perplexities[-1],
+                degradation=failed.perplexities[-1]
+                / baseline.perplexities[-1])
+
+
+if __name__ == "__main__":
+    run(quick=False)

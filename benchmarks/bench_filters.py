@@ -1,0 +1,55 @@
+"""Paper §5.3 — communication filters: bytes on the wire vs convergence.
+
+LDA runs with the dense push, the magnitude-priority top-k filter (+ uniform
+anti-starvation rows), and a threshold filter.  Reported: estimated sync
+bytes per round per client, final perplexity, and the compression ratio.
+The paper's claim: filtered synchronization preserves convergence at a
+fraction of the traffic."""
+
+from __future__ import annotations
+
+from repro.core import lda, ps
+
+from benchmarks import common
+
+
+def run(quick: bool = True) -> None:
+    tokens, mask, _, ccfg = common.default_corpus(quick, seed=6)
+    cfg = lda.LDAConfig(n_topics=ccfg.n_topics, vocab_size=ccfg.vocab_size,
+                        alpha=0.1, beta=0.01, mh_steps=2)
+    n_rounds = 10 if quick else 20
+    dense_bytes = ccfg.vocab_size * ccfg.n_topics * 4
+
+    variants = [
+        ("dense", ps.FilterSpec()),
+        ("topk", ps.FilterSpec(kind="topk", k_rows=ccfg.vocab_size // 8,
+                               random_rows=ccfg.vocab_size // 32)),
+        ("topk_small", ps.FilterSpec(kind="topk",
+                                     k_rows=ccfg.vocab_size // 32,
+                                     random_rows=ccfg.vocab_size // 64)),
+        ("threshold", ps.FilterSpec(kind="threshold", threshold=2.0)),
+    ]
+    base_ppl = None
+    for label, spec in variants:
+        hooks = common.lda_hooks(cfg)
+        res = common.run_multiclient(
+            hooks, tokens, mask, n_clients=4, n_rounds=n_rounds,
+            method="mhw", filter_spec=spec,
+            eval_every=max(1, n_rounds // 4))
+        if spec.kind == "topk":
+            rows = spec.k_rows + spec.random_rows
+            wire = rows * (ccfg.n_topics * 4 + 4)
+        else:
+            wire = dense_bytes
+        ppl = res.perplexities[-1]
+        if label == "dense":
+            base_ppl = ppl
+        common.emit("filters_53", filter=label,
+                    wire_bytes_per_round=wire,
+                    compression_x=dense_bytes / wire,
+                    perplexity_final=ppl,
+                    ppl_vs_dense=ppl / base_ppl)
+
+
+if __name__ == "__main__":
+    run(quick=False)

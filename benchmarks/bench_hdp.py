@@ -1,0 +1,33 @@
+"""Paper Fig 7 — HDP-LDA convergence at two client-group sizes (paper: 200
+and 500 clients; CPU-scaled to 2 and 8).  The hierarchical DP resamples CRT
+table counts and the root topic distribution θ0 every round."""
+
+from __future__ import annotations
+
+from repro.core import hdp
+
+from benchmarks import common
+
+
+def run(quick: bool = True) -> None:
+    tokens, mask, _, ccfg = common.default_corpus(quick, seed=2)
+    cfg = hdp.HDPConfig(n_topics=ccfg.n_topics * 2,
+                        vocab_size=ccfg.vocab_size, b0=1.0, b1=2.0,
+                        mh_steps=4)
+    n_rounds = 10 if quick else 25
+    for n_clients in ((2, 8) if not quick else (2, 4)):
+        hooks = common.hdp_hooks(cfg, project=True)
+        res = common.run_multiclient(
+            hooks, tokens, mask, n_clients=n_clients, n_rounds=n_rounds,
+            method="mhw", eval_every=max(1, n_rounds // 4))
+        common.emit(
+            "hdp_fig7", sampler="alias_hdp", clients=n_clients,
+            perplexity_first=res.perplexities[0],
+            perplexity_final=res.perplexities[-1],
+            topics_per_word_final=res.topics_per_word[-1],
+            s_per_iter=sum(res.iter_times[1:]) / max(len(res.iter_times) - 1, 1),
+            tokens_per_s=res.tokens_per_s)
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,48 @@
+"""Paper Fig 4 — AliasLDA vs YahooLDA across client counts.
+
+For each client count the two samplers (method="exact" ≙ YahooLDA's
+full-conditional sparse sampler; method="mhw" ≙ AliasLDA) run the same
+number of rounds on the same sharded corpus.  Reported per run:
+perplexity convergence, average topics/word, per-iteration wall time and
+token throughput — the four panels of Fig 4 (CPU-scaled).
+"""
+
+from __future__ import annotations
+
+from repro.core import lda
+
+from benchmarks import common
+
+
+def run(quick: bool = True) -> None:
+    tokens, mask, _, ccfg = common.default_corpus(quick)
+    cfg = lda.LDAConfig(n_topics=ccfg.n_topics, vocab_size=ccfg.vocab_size,
+                        alpha=0.1, beta=0.01, mh_steps=2)
+    client_counts = (2, 4) if quick else (2, 4, 8)
+    n_rounds = 12 if quick else 30
+
+    for n_clients in client_counts:
+        results = {}
+        for method, label in (("exact", "yahoo_lda"), ("mhw", "alias_lda")):
+            hooks = common.lda_hooks(cfg)
+            res = common.run_multiclient(
+                hooks, tokens, mask, n_clients=n_clients, n_rounds=n_rounds,
+                method=method, eval_every=max(1, n_rounds // 4))
+            results[label] = res
+            common.emit(
+                "lda_fig4", sampler=label, clients=n_clients,
+                perplexity_first=res.perplexities[0],
+                perplexity_final=res.perplexities[-1],
+                topics_per_word_final=res.topics_per_word[-1],
+                s_per_iter=sum(res.iter_times[1:]) / max(len(res.iter_times) - 1, 1),
+                tokens_per_s=res.tokens_per_s)
+        speedup = (sum(results["yahoo_lda"].iter_times[1:])
+                   / max(sum(results["alias_lda"].iter_times[1:]), 1e-9))
+        ppl_ratio = (results["alias_lda"].perplexities[-1]
+                     / results["yahoo_lda"].perplexities[-1])
+        common.emit("lda_fig4_summary", clients=n_clients,
+                    alias_speedup_x=speedup, alias_ppl_ratio=ppl_ratio)
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,45 @@
+"""§Roofline reporting — renders the dry-run JSON (produced by
+``repro.launch.dryrun --json``) as the per-(arch × shape × mesh) roofline
+table: three terms in seconds, dominant bottleneck, MODEL_FLOPS/HLO_FLOPs
+useful-compute ratio.  This benchmark only *reads* compiled artifacts; it
+never compiles (the dry-run is a separate, slow, 512-device process)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks import common
+
+DEFAULT_PATHS = ("dryrun_single.json", "dryrun_multi.json")
+
+
+def run(quick: bool = True, paths: tuple[str, ...] = DEFAULT_PATHS) -> None:
+    records = []
+    for p in paths:
+        if os.path.exists(p):
+            records.extend(json.load(open(p)))
+    if not records:
+        common.emit("roofline", status="no dry-run JSON found — run "
+                    "PYTHONPATH=src python -m repro.launch.dryrun --json ...")
+        return
+    n_ok = n_fail = 0
+    for r in records:
+        if r["status"] == "skip":
+            continue
+        if r["status"] == "fail":
+            n_fail += 1
+            common.emit("roofline_fail", arch=r["arch"], shape=r["shape"],
+                        mesh=r["mesh"], error=r.get("error", "?")[:80])
+            continue
+        n_ok += 1
+        common.emit(
+            "roofline", arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+            t_compute_s=r["t_compute_s"], t_memory_s=r["t_memory_s"],
+            t_collective_s=r["t_collective_s"], bottleneck=r["bottleneck"],
+            useful_ratio=r["useful_ratio"])
+    common.emit("roofline_summary", ok=n_ok, fail=n_fail)
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,132 @@
+"""Paper §6.3 / §3 — sampling complexity: alias (MHW) vs full-conditional.
+
+The paper's core algorithmic claim: the exact sampler costs O(K) per token
+while MHW costs amortized O(k_d + 1), so exact slows down with the topic
+count while MHW stays ~flat.  We time one jitted sweep per method across K
+and report per-token cost plus the MH acceptance rate (the approximation-
+quality diagnostic of §3.3 — it must stay high or the chain mixes slowly).
+
+Also reports alias-table build throughput (tables/s) — the producer side of
+the paper's producer/consumer thread-pool design (§5.1).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import alias as alias_mod
+from repro.core import lda
+from repro.data.synthetic import CorpusConfig, make_topic_corpus
+
+from benchmarks import common
+
+
+def time_sweeps(cfg, tokens, mask, method, n_iter=5):
+    local, shared = lda.init_state(cfg, tokens, mask, jax.random.PRNGKey(0))
+    tables, stale = lda.build_alias(cfg, shared)
+    # warmup/compile
+    out = lda.sweep(cfg, local, shared, tables, stale, tokens, mask,
+                    jax.random.PRNGKey(1), method=method)
+    jax.block_until_ready(out[1])
+    t0 = time.perf_counter()
+    for i in range(n_iter):
+        local, dwk, dk = lda.sweep(cfg, local, shared, tables, stale, tokens,
+                                   mask, jax.random.fold_in(jax.random.PRNGKey(2), i),
+                                   method=method)
+        shared = lda.apply_delta(shared, dwk, dk)
+    jax.block_until_ready(shared.n_wk)
+    return (time.perf_counter() - t0) / n_iter
+
+
+def run(quick: bool = True) -> None:
+    vocab = 300 if quick else 1000
+    ccfg = CorpusConfig(n_topics=8, vocab_size=vocab,
+                        n_docs=64 if quick else 128,
+                        doc_len=48 if quick else 64, seed=5)
+    tokens, mask, _ = make_topic_corpus(ccfg)
+    tokens, mask = jnp.asarray(tokens), jnp.asarray(mask)
+    n_tok = int(mask.sum())
+
+    ks = (16, 64) if quick else (16, 64, 256, 1024)
+    per_token = {}
+    for k in ks:
+        cfg = lda.LDAConfig(n_topics=k, vocab_size=vocab, mh_steps=2)
+        for method in ("exact", "mhw"):
+            dt = time_sweeps(cfg, tokens, mask, method,
+                             n_iter=3 if quick else 5)
+            per_token[(method, k)] = dt / n_tok
+            common.emit("throughput_scaling", sampler=method, n_topics=k,
+                        us_per_token=dt / n_tok * 1e6,
+                        tokens_per_s=n_tok / dt)
+    # Scaling exponent proxy: cost growth exact vs mhw from smallest to
+    # largest K (paper: exact grows ~linearly, alias ~flat on CPU clusters;
+    # on TPU both are dense K-lane ops, so the ratio narrows — DESIGN.md §2).
+    k0, k1 = ks[0], ks[-1]
+    common.emit("throughput_summary",
+                exact_growth=per_token[("exact", k1)] / per_token[("exact", k0)],
+                mhw_growth=per_token[("mhw", k1)] / per_token[("mhw", k0)],
+                k_ratio=k1 / k0)
+
+    # Alias build throughput (producer pool, §5.1).
+    cfg = lda.LDAConfig(n_topics=64, vocab_size=vocab)
+    _, shared = lda.init_state(cfg, tokens, mask, jax.random.PRNGKey(0))
+    t, _ = lda.build_alias(cfg, shared)
+    jax.block_until_ready(t.prob)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        t, _ = lda.build_alias(cfg, shared)
+    jax.block_until_ready(t.prob)
+    dt = (time.perf_counter() - t0) / 3
+    common.emit("alias_build", vocab=vocab, n_topics=64,
+                tables_per_s=vocab / dt, s_per_build=dt)
+
+    # MH acceptance rate vs staleness (§3.3): how far can the alias table
+    # lag before the chain stops moving?  This is the napkin math behind the
+    # `alias_refresh_every` knob — the paper rebuilds after l/n draws.
+    from repro.core import mhw as mhw_mod
+    cfg = lda.LDAConfig(n_topics=64, vocab_size=vocab, mh_steps=4)
+    local, shared = lda.init_state(cfg, tokens, mask, jax.random.PRNGKey(0))
+    # Burn in so the state is not pure noise (drift then measures sweeps
+    # *between refreshes*, the operational staleness).
+    for i in range(5):
+        tables, stale = lda.build_alias(cfg, shared)
+        local, dwk, dk = lda.sweep(cfg, local, shared, tables, stale, tokens,
+                                   mask, jax.random.fold_in(jax.random.PRNGKey(3), i))
+        shared = lda.apply_delta(shared, dwk, dk)
+
+    w = tokens.reshape(-1)[:512]
+    docs0 = jnp.zeros_like(w)
+    for drift_sweeps in (0, 1, 2, 4):
+        tables, stale = lda.build_alias(cfg, shared)   # fresh table
+        drift = shared
+        for i in range(drift_sweeps):
+            local, dwk, dk = lda.sweep(
+                cfg, local, drift, tables, stale, tokens, mask,
+                jax.random.fold_in(jax.random.PRNGKey(31), i))
+            drift = lda.apply_delta(drift, dwk, dk)
+        n_dk_rows = local.n_dk[docs0]
+        lm = lda.language_model(cfg, drift)
+        # Exactly the sweep's proposal (eq. 4): exact sparse term
+        # n_dk·lm_fresh + stale dense term α·lm_stale via the alias table.
+        sparse_w = n_dk_rows * lm[w]
+        prop = mhw_mod.MixtureProposal(sparse_weights=sparse_w,
+                                       dense_tables=tables, dense_rows=w)
+
+        def log_p(t, lm=lm, n_dk_rows=n_dk_rows):
+            rows = jnp.arange(w.shape[0])
+            return jnp.log((n_dk_rows[rows, t] + cfg.alpha)
+                           * lm[w, t] + 1e-30)
+
+        z_init = jax.random.randint(jax.random.PRNGKey(8), w.shape, 0,
+                                    cfg.n_topics)
+        _, rate = mhw_mod.mh_chain_with_stats(
+            jax.random.PRNGKey(9), z_init, prop, stale, log_p, 4)
+        common.emit("mh_acceptance", sweeps_of_drift=drift_sweeps,
+                    acceptance=float(rate))
+
+
+if __name__ == "__main__":
+    run(quick=False)

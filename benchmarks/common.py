@@ -1,0 +1,327 @@
+"""Shared benchmark harness.
+
+``simulate_clients`` reproduces the distributed round of
+``repro.core.distributed`` semantically on a single device: C clients each
+sweep τ times against a frozen snapshot of the shared statistics (applying
+their *own* deltas locally between sweeps), their filtered deltas are summed
+(the psum), applied, and optionally projected.  This is bit-compatible with
+the shard_map driver modulo client RNG streams, and it is what lets the
+paper's multi-client staleness/consistency experiments (Figs 4-8) run on the
+CPU container.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hdp, lda, pdp, projection, ps
+from repro.data.synthetic import CorpusConfig, make_topic_corpus, shard_corpus
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# CSV / reporting helpers
+# ---------------------------------------------------------------------------
+
+_ROWS: list[dict] = []
+
+
+def emit(bench: str, **fields) -> None:
+    row = {"bench": bench, **fields}
+    _ROWS.append(row)
+    parts = [f"{k}={v:.6g}" if isinstance(v, float) else f"{k}={v}"
+             for k, v in fields.items()]
+    print(f"[{bench}] " + " ".join(parts), flush=True)
+
+
+def rows() -> list[dict]:
+    return _ROWS
+
+
+def write_csv(path: str) -> None:
+    keys: list[str] = []
+    for r in _ROWS:
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    with open(path, "w") as f:
+        f.write(",".join(keys) + "\n")
+        for r in _ROWS:
+            f.write(",".join(str(r.get(k, "")) for k in keys) + "\n")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.elapsed = time.perf_counter() - self.t0
+
+
+# ---------------------------------------------------------------------------
+# Model adapters (same shape as repro.core.distributed.ADAPTERS, plus the
+# per-model eval + alias hooks the benchmark loop needs)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ModelHooks:
+    name: str
+    init: Callable          # (tokens, mask, key) -> (local, shared)
+    build_alias: Callable   # shared -> (tables, stale_dense)
+    sweep: Callable         # (local, shared, tables, stale, tok, mask, key, method)
+    apply: Callable         # (shared, deltas) -> shared
+    delta_zero: Callable    # shared -> zero-deltas pytree
+    perplexity: Callable    # (shared, tokens, mask, key) -> scalar
+    topics_per_word: Callable | None = None
+    project: Callable | None = None       # shared -> shared (Alg 1/2)
+    count_violations: Callable | None = None
+    post_round: Callable | None = None    # (local, shared, key) -> (local, shared)
+
+
+def lda_hooks(cfg: lda.LDAConfig) -> ModelHooks:
+    def sweep(local, shared, tables, stale, tok, mask, key, method):
+        local2, dwk, dk = lda.sweep(cfg, local, shared, tables, stale, tok,
+                                    mask, key, method=method)
+        return local2, {"n_wk": dwk}
+
+    def apply(shared, d):
+        n_wk = shared.n_wk + d["n_wk"]
+        return lda.SharedStats(n_wk=n_wk, n_k=n_wk.sum(0))
+
+    return ModelHooks(
+        name="lda",
+        init=lambda t, m, k: lda.init_state(cfg, t, m, k),
+        build_alias=lambda s: lda.build_alias(cfg, s),
+        sweep=sweep, apply=apply,
+        delta_zero=lambda s: {"n_wk": jnp.zeros_like(s.n_wk)},
+        perplexity=lambda s, t, m, k: lda.perplexity(cfg, s, t, m, k),
+        topics_per_word=lambda s: lda.topics_per_word(s),
+    )
+
+
+def pdp_hooks(cfg: pdp.PDPConfig, project: bool = True) -> ModelHooks:
+    def sweep(local, shared, tables, stale, tok, mask, key, method):
+        local2, dm, ds = pdp.sweep(cfg, local, shared, tables, stale, tok,
+                                   mask, key, method=method)
+        return local2, {"m_wk": dm, "s_wk": ds}
+
+    def apply(shared, d):
+        m_wk = shared.m_wk + d["m_wk"]
+        s_wk = shared.s_wk + d["s_wk"]
+        return pdp.SharedStats(m_wk=m_wk, s_wk=s_wk, m_k=m_wk.sum(0),
+                               s_k=s_wk.sum(0))
+
+    def proj(shared):
+        stats = projection.project(
+            {"m_wk": shared.m_wk, "s_wk": shared.s_wk,
+             "m_k": shared.m_k, "s_k": shared.s_k},
+            projection.PDP_RULES, projection.PDP_AGGREGATES)
+        return pdp.SharedStats(**stats)
+
+    return ModelHooks(
+        name="pdp",
+        init=lambda t, m, k: pdp.init_state(cfg, t, m, k),
+        build_alias=lambda s: pdp.build_alias(cfg, s),
+        sweep=sweep, apply=apply,
+        delta_zero=lambda s: {"m_wk": jnp.zeros_like(s.m_wk),
+                              "s_wk": jnp.zeros_like(s.s_wk)},
+        perplexity=lambda s, t, m, k: pdp.perplexity(cfg, s, t, m, k),
+        topics_per_word=lambda s: lda.topics_per_word(
+            lda.SharedStats(n_wk=s.m_wk, n_k=s.m_k)),
+        project=proj if project else None,
+        count_violations=lambda s: projection.count_violations(
+            {"m_wk": s.m_wk, "s_wk": s.s_wk}, projection.PDP_RULES),
+    )
+
+
+def hdp_hooks(cfg: hdp.HDPConfig, project: bool = True) -> ModelHooks:
+    def sweep(local, shared, tables, stale, tok, mask, key, method):
+        local2, dwk, dk = hdp.sweep(cfg, local, shared, tables, stale, tok,
+                                    mask, key, method=method)
+        return local2, {"n_wk": dwk}
+
+    def apply(shared, d):
+        n_wk = shared.n_wk + d["n_wk"]
+        return hdp.SharedStats(n_wk=n_wk, n_k=n_wk.sum(0),
+                               m_k=shared.m_k, theta0=shared.theta0)
+
+    def proj(shared):
+        n_wk = jnp.maximum(shared.n_wk, 0.0)       # nonneg rule
+        return hdp.SharedStats(n_wk=n_wk, n_k=n_wk.sum(0),
+                               m_k=shared.m_k, theta0=shared.theta0)
+
+    def post_round(locals_, shared, key):
+        """CRT table resampling per client; m_k sums across clients (it is a
+        shared aggregation parameter, paper §5.2), then theta0 | m_k."""
+        m_k_total = None
+        for c in range(len(locals_)):
+            locals_[c], m_k = hdp.resample_tables(
+                cfg, locals_[c], shared, jax.random.fold_in(key, c))
+            m_k_total = m_k if m_k_total is None else m_k_total + m_k
+        theta0 = hdp.resample_theta0(cfg, m_k_total,
+                                     jax.random.fold_in(key, 101))
+        shared = hdp.SharedStats(n_wk=shared.n_wk, n_k=shared.n_k,
+                                 m_k=m_k_total, theta0=theta0)
+        return locals_, shared
+
+    return ModelHooks(
+        name="hdp",
+        init=lambda t, m, k: hdp.init_state(cfg, t, m, k),
+        build_alias=lambda s: hdp.build_alias(cfg, s),
+        sweep=sweep, apply=apply,
+        delta_zero=lambda s: {"n_wk": jnp.zeros_like(s.n_wk)},
+        perplexity=lambda s, t, m, k: hdp.perplexity(cfg, s, t, m, k),
+        topics_per_word=lambda s: lda.topics_per_word(
+            lda.SharedStats(n_wk=s.n_wk, n_k=s.n_k)),
+        project=proj if project else None,
+        count_violations=lambda s: projection.count_violations(
+            {"n_wk": s.n_wk}, (projection.Rule("nonneg", "n_wk"),)),
+        post_round=post_round,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The multi-client simulated round
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RunResult:
+    perplexities: list[float] = field(default_factory=list)
+    topics_per_word: list[float] = field(default_factory=list)
+    iter_times: list[float] = field(default_factory=list)
+    violations: list[float] = field(default_factory=list)
+    tokens: int = 0
+
+    @property
+    def tokens_per_s(self) -> float:
+        t = float(np.mean(self.iter_times)) if self.iter_times else 1.0
+        return self.tokens / max(t, 1e-9)
+
+
+def run_multiclient(hooks: ModelHooks, tokens, mask, *, n_clients: int,
+                    n_rounds: int, tau: int = 1, method: str = "mhw",
+                    alias_refresh_every: int = 1,
+                    filter_spec: ps.FilterSpec | None = None,
+                    eval_every: int = 5, eval_docs: int = 32,
+                    drop_client: tuple[int, int, int] | None = None,
+                    key=None, project_every: int = 1) -> RunResult:
+    """The paper's distributed round, simulated client-by-client.
+
+    drop_client: (client_id, from_round, to_round) — failure injection
+    (paper §5.4): that client's deltas are lost for those rounds; on
+    recovery it re-pulls the shared state (its local z/n_dk survive in
+    practice since snapshots are per-client — we keep them, matching the
+    client-failover protocol of re-reading its shard from the snapshot).
+    """
+    key = key if key is not None else jax.random.PRNGKey(0)
+    shards = shard_corpus(np.asarray(tokens), np.asarray(mask), n_clients)
+    shards = [(jnp.asarray(t), jnp.asarray(m)) for t, m in shards]
+
+    # init() builds per-shard stats; the canonical shared state is their sum.
+    locals_ = [hooks.init(t, m, jax.random.fold_in(key, c))[0]
+               for c, (t, m) in enumerate(shards)]
+    shared = _sum_shared(hooks, shards, locals_, key)
+
+    eval_t, eval_m = tokens[:eval_docs], mask[:eval_docs]
+    res = RunResult(tokens=int(np.asarray(mask).sum()))
+    tables = stale = None
+    # Error-feedback residuals (ps.residual_update): what a communication
+    # filter withholds is carried to the next round, never dropped — count
+    # mass must be conserved or the statistics drift negative (paper §5.3's
+    # eventual-consistency contract).
+    residuals = [None] * n_clients
+
+    for r in range(n_rounds):
+        with Timer() as tm:
+            if tables is None or r % alias_refresh_every == 0:
+                tables, stale = hooks.build_alias(shared)
+            snapshot = shared
+            total_delta = None
+            for c in range(n_clients):
+                if drop_client and c == drop_client[0] and \
+                        drop_client[1] <= r < drop_client[2]:
+                    continue  # failed client: contributes nothing this round
+                t, m = shards[c]
+                local_shared = snapshot
+                acc = None
+                for s in range(tau):
+                    k = jax.random.fold_in(key, r * 131 + c * 17 + s)
+                    locals_[c], d = hooks.sweep(locals_[c], local_shared,
+                                                tables, stale, t, m, k, method)
+                    local_shared = hooks.apply(local_shared, d)
+                    acc = d if acc is None else {
+                        n: acc[n] + d[n] for n in d}
+                if filter_spec is not None and filter_spec.kind != "dense":
+                    kf = jax.random.fold_in(key, 7000 + r * 131 + c)
+                    if residuals[c] is not None:
+                        acc = {n: acc[n] + residuals[c][n] for n in acc}
+                    sent = {n: ps.filter_delta(v, filter_spec,
+                                               jax.random.fold_in(kf, i))
+                            for i, (n, v) in enumerate(acc.items())}
+                    residuals[c] = {n: acc[n] - sent[n] for n in acc}
+                    acc = sent
+                total_delta = acc if total_delta is None else {
+                    n: total_delta[n] + acc[n] for n in acc}
+            if total_delta is not None:
+                shared = hooks.apply(shared, total_delta)
+            if hooks.project is not None and project_every and \
+                    r % project_every == 0:
+                shared = hooks.project(shared)
+            if hooks.post_round is not None:
+                locals_, shared = hooks.post_round(
+                    locals_, shared, jax.random.fold_in(key, 9000 + r))
+            jax.block_until_ready(jax.tree.leaves(_stats_dict(shared))[0])
+        res.iter_times.append(tm.elapsed)
+
+        if r % eval_every == 0 or r == n_rounds - 1:
+            pp = float(hooks.perplexity(shared, eval_t, eval_m,
+                                        jax.random.PRNGKey(42)))
+            res.perplexities.append(pp)
+            if hooks.topics_per_word:
+                res.topics_per_word.append(float(hooks.topics_per_word(shared)))
+            if hooks.count_violations:
+                res.violations.append(float(hooks.count_violations(shared)))
+    return res
+
+
+def _stats_dict(shared) -> dict:
+    return shared._asdict() if hasattr(shared, "_asdict") else dict(shared)
+
+
+def _sum_shared(hooks: ModelHooks, shards, locals_, key):
+    """Canonical shared stats = sum over client shards (re-init per shard)."""
+    shared = None
+    for c, (t, m) in enumerate(shards):
+        _, sh = hooks.init(t, m, jax.random.fold_in(key, c))
+        if shared is None:
+            shared = sh
+        else:
+            d = _stats_dict(sh)
+            cur = _stats_dict(shared)
+            merged = {}
+            for n in cur:
+                if cur[n].shape == () or n == "theta0":
+                    merged[n] = cur[n]
+                else:
+                    merged[n] = cur[n] + d[n]
+            shared = type(shared)(**merged)
+    return shared
+
+
+def default_corpus(quick: bool, seed: int = 0):
+    cfg = CorpusConfig(
+        n_topics=8 if quick else 16,
+        vocab_size=400 if quick else 1200,
+        n_docs=128 if quick else 512,
+        doc_len=48 if quick else 96,
+        seed=seed)
+    tokens, mask, phi = make_topic_corpus(cfg)
+    return jnp.asarray(tokens), jnp.asarray(mask), phi, cfg

@@ -1,0 +1,67 @@
+"""Benchmark driver — one module per paper table/figure.
+
+  python -m benchmarks.run             # quick sizes (CI / CPU container)
+  python -m benchmarks.run --full      # paper-scaled (slow)
+  python -m benchmarks.run --only lda,projection
+
+Mapping to the paper:
+  bench_lda         Fig 4  AliasLDA vs YahooLDA (ppl, topics/word, time)
+  bench_pdp         Fig 5  PDP convergence with projection
+  bench_hdp         Fig 7  HDP at two client-group sizes
+  bench_projection  Fig 8  projection vs no projection
+  bench_scaling     Fig 6  client-count scaling (doc log-likelihood)
+  bench_throughput  §3/§6.3 sampler complexity vs K + alias build + MH rate
+  bench_filters     §5.3   communication-filter traffic/quality trade
+  bench_failover    §5.4   client failure + recovery robustness
+  bench_stale_sync  beyond-paper: PS pattern on LM gradient sync
+  bench_roofline    §Roofline table from the dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import common
+
+MODULES = ("lda", "pdp", "hdp", "projection", "scaling", "throughput",
+           "filters", "failover", "stale_sync", "roofline")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true", help="paper-scaled sizes")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset")
+    ap.add_argument("--csv", default="bench_results.csv")
+    args = ap.parse_args(argv)
+
+    only = set(args.only.split(",")) if args.only else set(MODULES)
+    failures = []
+    for name in MODULES:
+        if name not in only:
+            continue
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        print(f"\n=== bench_{name} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod.run(quick=not args.full)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+        print(f"=== bench_{name} done in {time.time() - t0:.1f}s ===",
+              flush=True)
+
+    if args.csv:
+        common.write_csv(args.csv)
+        print(f"\nwrote {args.csv} ({len(common.rows())} rows)")
+    if failures:
+        print(f"FAILED benchmarks: {failures}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

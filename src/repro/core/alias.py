@@ -1,0 +1,173 @@
+"""Walker's alias method (Vose variant) in pure JAX.
+
+The alias method preprocesses a categorical distribution ``p`` over ``K``
+outcomes into a table of ``K`` (prob, alias) pairs so that subsequent draws
+cost O(1) each.  This is the "Walker" half of the paper's
+Metropolis-Hastings-Walker sampler (paper §3.1).
+
+The construction here is the functional, fixed-shape analogue of the
+classical two-stack algorithm so it can be ``vmap``-ed across rows (one table
+per token-type) and lowered to TPU.  ``repro.kernels.alias_build`` contains
+the Pallas kernel version; this module is the reference implementation and
+the public API.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AliasTable(NamedTuple):
+    """Alias table for one (or a batch of) categorical distribution(s).
+
+    Attributes:
+      prob:  (..., K) float32 — acceptance threshold per slot, in [0, 1].
+      alias: (..., K) int32   — alternative outcome per slot.
+      mass:  (...,)   float32 — total unnormalized mass of the distribution
+             (kept so callers can form mixture weights between several
+             alias tables without renormalizing, as the sparse+dense split
+             in the paper requires).
+    """
+
+    prob: jax.Array
+    alias: jax.Array
+    mass: jax.Array
+
+
+def _build_one(p: jax.Array) -> AliasTable:
+    """Build an alias table for a single unnormalized distribution ``p``.
+
+    Functional two-stack (small/large) construction with a fixed iteration
+    count of K so it is jit/vmap friendly.  Matches Vose's algorithm; any
+    numerically-leftover slots default to (prob=1, alias=self), which is the
+    standard robust finish.
+    """
+    k = p.shape[0]
+    mass = jnp.sum(p)
+    # Guard against all-zero rows: fall back to uniform.
+    safe = mass > 0
+    pn = jnp.where(safe, p / jnp.where(safe, mass, 1.0), jnp.full_like(p, 1.0 / k))
+    scaled = pn * k  # mean 1.0
+
+    idx = jnp.arange(k, dtype=jnp.int32)
+    is_small = scaled < 1.0
+    # Stable partition of indices into a "small" stack and a "large" stack.
+    order = jnp.argsort(is_small)  # larges first, smalls last
+    stack = idx[order].astype(jnp.int32)
+    n_small = jnp.sum(is_small).astype(jnp.int32)
+    n_large = (k - n_small).astype(jnp.int32)
+    # Layout: stack[0 : n_large] are larges; stack[k - n_small :] are smalls.
+    # Treat them as two stacks growing toward each other via pointers.
+    large_top = n_large - 1          # index of current top of large stack
+    small_top = k - n_small          # index of current top of small stack
+
+    prob = jnp.ones((k,), jnp.float32)
+    alias = idx.copy()
+    assigned = jnp.zeros((k,), jnp.bool_)
+
+    def body(_, carry):
+        prob, alias, assigned, scaled, stack, large_top, small_top, n_small, n_large = carry
+        active = (n_small > 0) & (n_large > 0)
+
+        i = stack[jnp.clip(small_top, 0, k - 1)]     # a small entry
+        j = stack[jnp.clip(large_top, 0, k - 1)]     # a large entry
+
+        new_prob = jnp.where(active, prob.at[i].set(scaled[i]), prob)
+        new_alias = jnp.where(active, alias.at[i].set(j), alias)
+        new_assigned = jnp.where(active, assigned.at[i].set(True), assigned)
+        # Large donor absorbs the slack of the small slot.
+        sj = scaled[j] - (1.0 - scaled[i])
+        new_scaled = jnp.where(active, scaled.at[j].set(sj), scaled)
+
+        # Pop the small; pop the large; re-push the large onto whichever
+        # stack it now belongs to.
+        j_is_small = sj < 1.0
+        # Popping small: small_top moves up (stack grows downward from k-1).
+        small_top2 = small_top + 1
+        n_small2 = n_small - 1
+        large_top2 = large_top - 1
+        n_large2 = n_large - 1
+        # Re-push j.
+        #   if j is now small: place at small_top2 - 1.
+        #   else:              place back at large_top2 + 1.
+        push_small_pos = small_top2 - 1
+        push_large_pos = large_top2 + 1
+        pos = jnp.where(j_is_small, push_small_pos, push_large_pos)
+        new_stack = jnp.where(active, stack.at[jnp.clip(pos, 0, k - 1)].set(j), stack)
+        small_top3 = jnp.where(j_is_small, push_small_pos, small_top2)
+        n_small3 = jnp.where(j_is_small, n_small2 + 1, n_small2)
+        large_top3 = jnp.where(j_is_small, large_top2, push_large_pos)
+        n_large3 = jnp.where(j_is_small, n_large2, n_large2 + 1)
+
+        small_top3 = jnp.where(active, small_top3, small_top)
+        n_small3 = jnp.where(active, n_small3, n_small)
+        large_top3 = jnp.where(active, large_top3, large_top)
+        n_large3 = jnp.where(active, n_large3, n_large)
+
+        return (new_prob, new_alias, new_assigned, new_scaled, new_stack,
+                large_top3, small_top3, n_small3, n_large3)
+
+    init = (prob, alias, assigned, scaled, stack, large_top, small_top, n_small, n_large)
+    prob, alias, assigned, scaled, *_ = jax.lax.fori_loop(0, k, body, init)
+
+    # Anything never assigned (leftover larges, numerical leftovers) keeps
+    # prob=1 / alias=self.
+    prob = jnp.where(assigned, prob, 1.0)
+    alias = jnp.where(assigned, alias, idx)
+    return AliasTable(prob=prob.astype(jnp.float32), alias=alias.astype(jnp.int32),
+                      mass=mass.astype(jnp.float32))
+
+
+@partial(jax.jit, static_argnames=())
+def build(p: jax.Array) -> AliasTable:
+    """Build alias table(s) for ``p`` with shape (..., K) (unnormalized)."""
+    flat = p.reshape((-1, p.shape[-1]))
+    tables = jax.vmap(_build_one)(flat.astype(jnp.float32))
+    batch = p.shape[:-1]
+    return AliasTable(
+        prob=tables.prob.reshape(batch + (p.shape[-1],)),
+        alias=tables.alias.reshape(batch + (p.shape[-1],)),
+        mass=tables.mass.reshape(batch),
+    )
+
+
+def sample(table: AliasTable, key: jax.Array, shape: tuple[int, ...] = ()) -> jax.Array:
+    """Draw samples from a single alias table in O(1) per draw.
+
+    ``table`` has K slots; returns int32 array of ``shape``.
+    """
+    k = table.prob.shape[-1]
+    k_slot, k_coin = jax.random.split(key)
+    slot = jax.random.randint(k_slot, shape, 0, k, dtype=jnp.int32)
+    coin = jax.random.uniform(k_coin, shape)
+    take_slot = coin < table.prob[..., slot] if table.prob.ndim == 1 else None
+    if table.prob.ndim != 1:
+        raise ValueError("sample() expects a single table; use sample_rows for batches")
+    return jnp.where(take_slot, slot, table.alias[slot]).astype(jnp.int32)
+
+
+def sample_rows(tables: AliasTable, rows: jax.Array, key: jax.Array) -> jax.Array:
+    """Draw one sample per entry of ``rows`` from per-row alias tables.
+
+    ``tables`` holds (R, K) tables; ``rows`` is an int32 array of row indices
+    (one draw per element).  This is the access pattern of the sampler: each
+    token draws from the alias table of *its own* token-type.
+    """
+    k = tables.prob.shape[-1]
+    k_slot, k_coin = jax.random.split(key)
+    slot = jax.random.randint(k_slot, rows.shape, 0, k, dtype=jnp.int32)
+    coin = jax.random.uniform(k_coin, rows.shape)
+    prob = tables.prob[rows, slot]
+    alias = tables.alias[rows, slot]
+    return jnp.where(coin < prob, slot, alias).astype(jnp.int32)
+
+
+def logpdf_rows(p_rows: jax.Array, rows: jax.Array, outcome: jax.Array) -> jax.Array:
+    """Unnormalized log-density of ``outcome`` under the *exact* distribution
+    rows ``p_rows[rows]`` — used by MH acceptance when the alias table acts as
+    a stale proposal (paper §3.2)."""
+    return jnp.log(p_rows[rows, outcome] + 1e-30)

@@ -1,0 +1,289 @@
+"""Distributed collapsed Gibbs sampling on a device mesh (paper §5.2-§5.3).
+
+Clients = shards of the ``data`` mesh axis, each holding a document shard
+and a stale replica of the shared statistics.  A *round* is:
+
+  1. pull   — snapshot the shared statistics (frozen for the round),
+  2. sample — ``tau`` local Gibbs sweeps against the snapshot, applying own
+              deltas locally (bounded-staleness eventual consistency),
+  3. filter — communication filter on the accumulated delta (paper §5.3),
+  4. push   — psum of filtered deltas across clients (or the compressed
+              all-gather transport), applied to the canonical statistics,
+  5. project— distributed constraint projection (paper §5.5, Algorithm 2).
+
+Failure injection (paper §5.4): a boolean per-client ``alive`` mask zeroes a
+failed client's contribution for the round — the recovery path (reload from
+snapshot, re-pull, continue) is exercised in tests/benchmarks.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import lda, pdp, hdp, projection, ps
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class DistConfig:
+    model: str = "lda"                 # "lda" | "pdp" | "hdp"
+    tau: int = 1                       # sweeps per sync round (staleness)
+    alias_refresh_every: int = 1       # rounds between alias-table rebuilds
+    filter: ps.FilterSpec = field(default_factory=ps.FilterSpec)
+    project_every: int = 1             # rounds between projections (0 = never)
+
+
+# --------------------------------------------------------------------------
+# Model adapters: uniform (sweep, deltas, apply, rules) per model family.
+# --------------------------------------------------------------------------
+
+class _LDAAdapter:
+    cfg_mod = lda
+    rules = projection.LDA_RULES
+    aggregates = projection.LDA_AGGREGATES
+    delta_names = ("n_wk",)
+
+    @staticmethod
+    def stats_dict(shared):
+        return {"n_wk": shared.n_wk, "n_k": shared.n_k}
+
+    @staticmethod
+    def from_dict(d):
+        return lda.SharedStats(n_wk=d["n_wk"], n_k=d["n_k"])
+
+    @staticmethod
+    def sweep(cfg, local, shared, tables, stale, tokens, mask, key, method):
+        local2, dwk, dk = lda.sweep(cfg, local, shared, tables, stale,
+                                    tokens, mask, key, method=method)
+        return local2, {"n_wk": dwk}
+
+    @staticmethod
+    def apply(shared, deltas):
+        n_wk = shared.n_wk + deltas["n_wk"]
+        return lda.SharedStats(n_wk=n_wk, n_k=n_wk.sum(0))
+
+
+class _PDPAdapter:
+    cfg_mod = pdp
+    rules = projection.PDP_RULES
+    aggregates = projection.PDP_AGGREGATES
+    delta_names = ("m_wk", "s_wk")
+
+    @staticmethod
+    def stats_dict(shared):
+        return {"m_wk": shared.m_wk, "s_wk": shared.s_wk,
+                "m_k": shared.m_k, "s_k": shared.s_k}
+
+    @staticmethod
+    def from_dict(d):
+        return pdp.SharedStats(m_wk=d["m_wk"], s_wk=d["s_wk"],
+                               m_k=d["m_k"], s_k=d["s_k"])
+
+    @staticmethod
+    def sweep(cfg, local, shared, tables, stale, tokens, mask, key, method):
+        local2, dm, dsb = pdp.sweep(cfg, local, shared, tables, stale,
+                                    tokens, mask, key, method=method)
+        return local2, {"m_wk": dm, "s_wk": dsb}
+
+    @staticmethod
+    def apply(shared, deltas):
+        m_wk = shared.m_wk + deltas["m_wk"]
+        s_wk = shared.s_wk + deltas["s_wk"]
+        return pdp.SharedStats(m_wk=m_wk, s_wk=s_wk,
+                               m_k=m_wk.sum(0), s_k=s_wk.sum(0))
+
+
+class _HDPAdapter:
+    cfg_mod = hdp
+    rules = (projection.Rule("nonneg", "n_wk"),)
+    aggregates = (projection.Aggregate("n_wk", "n_k", 0),)
+    delta_names = ("n_wk",)
+
+    @staticmethod
+    def stats_dict(shared):
+        return {"n_wk": shared.n_wk, "n_k": shared.n_k,
+                "m_k": shared.m_k, "theta0": shared.theta0}
+
+    @staticmethod
+    def from_dict(d):
+        return hdp.SharedStats(n_wk=d["n_wk"], n_k=d["n_k"],
+                               m_k=d["m_k"], theta0=d["theta0"])
+
+    @staticmethod
+    def sweep(cfg, local, shared, tables, stale, tokens, mask, key, method):
+        local2, dwk, dk = hdp.sweep(cfg, local, shared, tables, stale,
+                                    tokens, mask, key, method=method)
+        return local2, {"n_wk": dwk}
+
+    @staticmethod
+    def apply(shared, deltas):
+        n_wk = shared.n_wk + deltas["n_wk"]
+        return hdp.SharedStats(n_wk=n_wk, n_k=n_wk.sum(0),
+                               m_k=shared.m_k, theta0=shared.theta0)
+
+
+ADAPTERS = {"lda": _LDAAdapter, "pdp": _PDPAdapter, "hdp": _HDPAdapter}
+
+
+# --------------------------------------------------------------------------
+# The distributed round
+# --------------------------------------------------------------------------
+
+def client_round(model_cfg, adapter, dist_cfg: DistConfig, local, snapshot,
+                 tables, stale_dense, tokens, mask, key, method="mhw"):
+    """One client's work for a sync round: ``tau`` sweeps against the frozen
+    snapshot, applying its own deltas locally between sweeps (the paper's
+    clients update their local replica immediately and push asynchronously).
+
+    Returns (local', accumulated_deltas)."""
+    shared_local = snapshot
+    acc = None
+    for s in range(dist_cfg.tau):
+        k = jax.random.fold_in(key, s)
+        local, deltas = adapter.sweep(model_cfg, local, shared_local, tables,
+                                      stale_dense, tokens, mask, k, method)
+        shared_local = adapter.apply(shared_local, deltas)
+        acc = deltas if acc is None else {n: acc[n] + deltas[n] for n in deltas}
+    return local, acc
+
+
+def make_round_fn(model_cfg, dist_cfg: DistConfig, mesh: Mesh,
+                  method: str = "mhw", data_axis: str = "data",
+                  model_axis: str = "model"):
+    """Build the jitted distributed round.
+
+    Sharding contract (see module docstring):
+      tokens/mask/local state — sharded over ``data`` on the document dim.
+      shared stats            — canonical copy sharded over ``model`` rows.
+    The round returns (local', shared', diagnostics).
+    """
+    adapter = ADAPTERS[dist_cfg.model]
+    n_clients = mesh.shape[data_axis]
+
+    row_sharding = NamedSharding(mesh, P(model_axis, None))
+    vec_sharding = NamedSharding(mesh, P())
+    doc_sharding = NamedSharding(mesh, P(data_axis, None))
+
+    def round_fn(local, shared, tables, stale_dense, tokens, mask, key,
+                 alive):
+        """alive: (n_clients,) bool — failure-injection mask (paper §5.4)."""
+        # 1. pull: the snapshot is the shared state made available to every
+        #    client — expressed as a replication constraint (all-gather).
+        snapshot = jax.tree.map(
+            lambda x: jax.lax.with_sharding_constraint(x, vec_sharding), shared)
+
+        # 2-3. sample + filter, client-parallel over the data axis.
+        from jax.experimental.shard_map import shard_map
+
+        stats_template = adapter.stats_dict(shared)
+
+        def one_client(local_shard, tokens_shard, mask_shard, key_shard,
+                       alive_shard, snapshot_rep, tables_rep, stale_rep):
+            local2, deltas = client_round(
+                model_cfg, adapter, dist_cfg, local_shard, snapshot_rep,
+                tables_rep, stale_rep, tokens_shard, mask_shard,
+                key_shard[0], method)
+            a = alive_shard[0].astype(jnp.float32)
+            k_filter = jax.random.fold_in(key_shard[0], 7)
+            out = {}
+            for i, name in enumerate(adapter.delta_names):
+                filt = ps.filter_delta(deltas[name], dist_cfg.filter,
+                                       jax.random.fold_in(k_filter, i))
+                # 4. push: eventual-consistency reduce across clients.
+                out[name] = jax.lax.psum(filt * a, data_axis)
+            return local2, out
+
+        spec_local = jax.tree.map(lambda _: P(data_axis), local)
+        fn = shard_map(
+            one_client, mesh=mesh,
+            in_specs=(spec_local, P(data_axis, None), P(data_axis, None),
+                      P(data_axis), P(data_axis), P(), P(), P()),
+            out_specs=(spec_local, P()),
+            check_rep=False,
+        )
+        keys = jax.random.split(key, n_clients)
+        local2, summed = fn(local, tokens, mask, keys, alive, snapshot,
+                            tables, stale_dense)
+
+        shared2 = adapter.apply(shared, summed)
+
+        # 5. distributed projection (Algorithm 2) over the model axis rows.
+        stats = adapter.stats_dict(shared2)
+        if dist_cfg.project_every:
+            row_specs = {n: P(model_axis, None)
+                         for n in stats if stats[n].ndim == 2}
+            for n in stats:
+                if stats[n].ndim != 2:
+                    row_specs[n] = P()
+            projectable = {n: v for n, v in stats.items()}
+            elem_rules = [r for r in adapter.rules
+                          if projectable.get(r.a) is not None]
+            stats = _project_alg2(projectable, elem_rules, adapter.aggregates,
+                                  mesh, model_axis, row_specs)
+        shared3 = adapter.from_dict(stats)
+
+        # Canonical storage: keep the server copy sharded over model rows.
+        shared3 = jax.tree.map(
+            lambda x: jax.lax.with_sharding_constraint(
+                x, row_sharding if x.ndim == 2 else vec_sharding),
+            shared3)
+        return local2, shared3
+
+    return jax.jit(round_fn)
+
+
+def _project_alg2(stats, rules, aggregates, mesh, model_axis, row_specs):
+    """Algorithm 2: rows partitioned over the model axis, projected locally,
+    aggregates re-derived with a psum."""
+    from jax.experimental.shard_map import shard_map
+
+    agg_outs = {a.out for a in aggregates}
+    elem = {n: v for n, v in stats.items() if n not in agg_outs}
+
+    in_specs = ({n: row_specs[n] for n in elem},)
+    out_specs = {n: row_specs[n] for n in elem}
+    for a in aggregates:
+        out_specs[a.out] = P()
+
+    def local_fn(e):
+        out = dict(e)
+        for rule in rules:
+            if rule.a in out and (rule.b is None or rule.b in out):
+                out = projection._apply_rule(out, rule)
+        for a in aggregates:
+            out[a.out] = jax.lax.psum(out[a.src].sum(a.axis), model_axis)
+        return out
+
+    fn = shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_rep=False)
+    result = fn(elem)
+    # Preserve non-projected passthrough stats (e.g. theta0).
+    for n, v in stats.items():
+        if n not in result:
+            result[n] = v
+    return result
+
+
+# --------------------------------------------------------------------------
+# Compressed transport (paper §5.3 filter as an actual smaller collective)
+# --------------------------------------------------------------------------
+
+def sync_compressed(delta: Array, spec: ps.FilterSpec, key: Array,
+                    data_axis: str = "data") -> Array:
+    """Inside shard_map: compress this client's delta to (indices, values),
+    all-gather the compressed representation, and scatter-add — the wire
+    carries n_clients·k·K floats instead of V·K.  Returns the dense summed
+    delta on every client."""
+    comp = ps.compress_delta(delta, spec, key)
+    all_idx = jax.lax.all_gather(comp.indices, data_axis)   # (C, k)
+    all_val = jax.lax.all_gather(comp.values, data_axis)    # (C, k, K)
+    dense = jnp.zeros_like(delta)
+    return dense.at[all_idx.reshape(-1)].add(
+        all_val.reshape(-1, delta.shape[1]))

@@ -1,0 +1,119 @@
+"""Metropolis-Hastings-Walker sampling (paper §3).
+
+The MHW sampler draws from a slowly-changing categorical distribution ``p``
+in amortized O(1) by treating a *stale* snapshot ``q`` of ``p`` (stored as an
+alias table) as a stationary MH proposal and correcting with accept/reject:
+
+    Pr{move i -> j} = min(1, q(i) p(j) / (q(j) p(i)))          (paper eq. 7)
+
+For topic models the proposal is the paper's sparse+dense mixture (eq. 4):
+a document-sparse term sampled exactly and a corpus-dense term sampled from
+the stale alias table; acceptance only needs *point* evaluations of p and q,
+which cost O(1) gathers.
+
+This module is generic over the point-evaluation callables so the same chain
+drives LDA, PDP and HDP.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import alias as alias_mod
+
+Array = jax.Array
+
+
+class MixtureProposal(NamedTuple):
+    """The paper's sparse+dense proposal for one batch of tokens.
+
+    sparse_weights: (B, K) unnormalized sparse-term weights (e.g. n_dk rows).
+      Zero rows are fine (coin then always selects dense).
+    dense_tables: per-row alias tables, (R, K).
+    dense_rows:  (B,) row index (token-type) into ``dense_tables`` per token.
+    """
+
+    sparse_weights: Array
+    dense_tables: alias_mod.AliasTable
+    dense_rows: Array
+
+    def sample(self, key: Array) -> Array:
+        """Draw one proposal per token: (B,) int32."""
+        b = self.sparse_weights.shape[0]
+        k_coin, k_sparse, k_dense = jax.random.split(key, 3)
+        sparse_mass = jnp.sum(self.sparse_weights, axis=-1)
+        dense_mass = self.dense_tables.mass[self.dense_rows]
+        total = sparse_mass + dense_mass
+        pick_sparse = jax.random.uniform(k_coin, (b,)) * total < sparse_mass
+        # Sparse draw: vectorized categorical over K lanes (TPU analogue of
+        # the O(k_d) sparse walk; see DESIGN.md §2).
+        gumbel = jax.random.gumbel(k_sparse, self.sparse_weights.shape)
+        logw = jnp.log(self.sparse_weights + 1e-30)
+        sparse_draw = jnp.argmax(logw + gumbel, axis=-1).astype(jnp.int32)
+        dense_draw = alias_mod.sample_rows(self.dense_tables, self.dense_rows, k_dense)
+        return jnp.where(pick_sparse, sparse_draw, dense_draw)
+
+    def log_q(self, outcome: Array, dense_probs: Array) -> Array:
+        """Unnormalized log proposal density at ``outcome`` (B,).
+
+        ``dense_probs`` is the (R, K) *stale* unnormalized dense distribution
+        the alias tables were built from (needed for point evaluation — the
+        table itself only supports sampling).
+        """
+        b = jnp.arange(outcome.shape[0])
+        sparse_val = self.sparse_weights[b, outcome]
+        dense_val = dense_probs[self.dense_rows, outcome]
+        return jnp.log(sparse_val + dense_val + 1e-30)
+
+
+def mh_chain(
+    key: Array,
+    init: Array,
+    proposal: MixtureProposal,
+    dense_probs: Array,
+    log_p: Callable[[Array], Array],
+    n_steps: int,
+) -> Array:
+    """Run ``n_steps`` of stationary-proposal MH for a batch of tokens.
+
+    init: (B,) current states (e.g. current topic assignments).
+    log_p: maps (B,) outcomes -> (B,) unnormalized log target density.
+    Returns the final (B,) states.
+    """
+
+    def step(carry, k):
+        z = carry
+        k_prop, k_acc = jax.random.split(k)
+        cand = proposal.sample(k_prop)
+        log_ratio = (
+            log_p(cand) - log_p(z)
+            + proposal.log_q(z, dense_probs) - proposal.log_q(cand, dense_probs)
+        )
+        accept = jnp.log(jax.random.uniform(k_acc, z.shape) + 1e-30) < log_ratio
+        return jnp.where(accept, cand, z), accept
+
+    keys = jax.random.split(key, n_steps)
+    z, accepts = jax.lax.scan(step, init, keys)
+    return z
+
+
+def mh_chain_with_stats(key, init, proposal, dense_probs, log_p, n_steps):
+    """Like mh_chain but also returns the mean acceptance rate (diagnostics)."""
+
+    def step(carry, k):
+        z = carry
+        k_prop, k_acc = jax.random.split(k)
+        cand = proposal.sample(k_prop)
+        log_ratio = (
+            log_p(cand) - log_p(z)
+            + proposal.log_q(z, dense_probs) - proposal.log_q(cand, dense_probs)
+        )
+        accept = jnp.log(jax.random.uniform(k_acc, z.shape) + 1e-30) < log_ratio
+        return jnp.where(accept, cand, z), jnp.mean(accept.astype(jnp.float32))
+
+    keys = jax.random.split(key, n_steps)
+    z, rates = jax.lax.scan(step, init, keys)
+    return z, jnp.mean(rates)

@@ -1,0 +1,61 @@
+"""Generalized Stirling numbers for Pitman-Yor / Poisson-Dirichlet samplers.
+
+The paper's PDP conditional (eqs. 5-6) uses ratios of generalized Stirling
+numbers S^N_{M,a} with the recurrence
+
+    S^{N+1}_{M,a} = S^N_{M-1,a} + (N - M a) S^N_{M,a},
+    S^N_{M,a} = 0 for M > N,   S^0_{0,a} = 1.
+
+They grow super-exponentially, so we precompute a log-space table on the
+host (float64) once per discount value and look up ratios with cheap gathers
+inside the jitted sampler.  Counts are clamped to the table size; at the
+scales where the clamp binds the ratio is within O(1/N) of its asymptote,
+which is far below sampler noise (the paper's own implementation uses a
+bounded cache as well, cf. [5]).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+@functools.lru_cache(maxsize=8)
+def log_stirling_table(n_max: int, a: float) -> "np.ndarray":
+    """Return logS with shape (n_max+1, n_max+1): logS[N, M] = log S^N_{M,a}."""
+    logS = np.full((n_max + 1, n_max + 1), NEG_INF, dtype=np.float64)
+    logS[0, 0] = 0.0
+    for n in range(0, n_max):
+        m = np.arange(0, n + 2)
+        # term1: S^n_{m-1}
+        t1 = np.full(n + 2, NEG_INF)
+        t1[1:] = logS[n, 0 : n + 1]
+        # term2: (n - m a) S^n_m
+        coef = n - m * a
+        t2 = np.where(coef > 0, np.log(np.maximum(coef, 1e-300)) + logS[n, 0 : n + 2], NEG_INF)
+        logS[n + 1, 0 : n + 2] = np.logaddexp(t1, t2)
+    return logS
+
+
+def as_jax(n_max: int, a: float) -> jnp.ndarray:
+    return jnp.asarray(log_stirling_table(n_max, a), dtype=jnp.float32)
+
+
+def log_ratio_same(table: jnp.ndarray, n: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
+    """log S^{n+1}_{m} - log S^{n}_{m}  (paper eq. 5 ratio), clamped to table."""
+    hi = table.shape[0] - 2
+    n_c = jnp.clip(n, 0, hi).astype(jnp.int32)
+    m_c = jnp.clip(m, 0, hi + 1).astype(jnp.int32)
+    return table[n_c + 1, m_c] - table[n_c, m_c]
+
+
+def log_ratio_incr(table: jnp.ndarray, n: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
+    """log S^{n+1}_{m+1} - log S^{n}_{m}  (paper eq. 6 ratio), clamped."""
+    hi = table.shape[0] - 2
+    n_c = jnp.clip(n, 0, hi).astype(jnp.int32)
+    m_c = jnp.clip(m, 0, hi).astype(jnp.int32)
+    return table[n_c + 1, m_c + 1] - table[n_c, m_c]

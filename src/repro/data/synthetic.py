@@ -1,0 +1,135 @@
+"""Synthetic data: power-law topic-model corpora and LM token streams.
+
+The topic-model generator follows the paper's data regime: Zipf-distributed
+word frequencies inside each topic (the power-law the PDP models), Dirichlet
+document-topic mixtures, shardable into per-client document shards.  Word
+draws use our own (numpy) alias tables, so corpus generation is O(1) per
+token even at millions of tokens — the paper's method eating its own tail.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class CorpusConfig:
+    n_topics: int = 16
+    vocab_size: int = 2048
+    n_docs: int = 1024
+    doc_len: int = 128          # padded length; actual lengths vary
+    theta_conc: float = 0.2     # document Dirichlet
+    zipf_a: float = 1.2         # within-topic word-frequency power law
+    min_len_frac: float = 0.5
+    seed: int = 0
+
+
+def _np_alias_build(p: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    k = p.shape[0]
+    p = p / p.sum()
+    scaled = p * k
+    prob = np.ones(k)
+    alias = np.arange(k)
+    small = [i for i in range(k) if scaled[i] < 1.0]
+    large = [i for i in range(k) if scaled[i] >= 1.0]
+    while small and large:
+        i = small.pop()
+        j = large.pop()
+        prob[i] = scaled[i]
+        alias[i] = j
+        scaled[j] -= 1.0 - scaled[i]
+        (small if scaled[j] < 1.0 else large).append(j)
+    return prob, alias
+
+
+def _np_alias_sample(prob, alias, n, rng):
+    slot = rng.integers(0, prob.shape[0], size=n)
+    coin = rng.random(n)
+    return np.where(coin < prob[slot], slot, alias[slot])
+
+
+def make_topic_corpus(cfg: CorpusConfig):
+    """Returns (tokens (D, L) int32, mask (D, L) bool, true_phi (K, V))."""
+    rng = np.random.default_rng(cfg.seed)
+    k, v = cfg.n_topics, cfg.vocab_size
+
+    # Power-law topics: each topic permutes a Zipf profile over a random
+    # subset ordering of the vocabulary (overlapping supports).
+    ranks = np.arange(1, v + 1, dtype=np.float64)
+    zipf = ranks ** (-cfg.zipf_a)
+    phi = np.zeros((k, v))
+    for t in range(k):
+        perm = rng.permutation(v)
+        phi[t, perm] = zipf / zipf.sum()
+
+    tables = [_np_alias_build(phi[t]) for t in range(k)]
+    tokens = np.zeros((cfg.n_docs, cfg.doc_len), np.int32)
+    mask = np.zeros((cfg.n_docs, cfg.doc_len), bool)
+    min_len = max(1, int(cfg.doc_len * cfg.min_len_frac))
+    for d in range(cfg.n_docs):
+        length = rng.integers(min_len, cfg.doc_len + 1)
+        theta = rng.dirichlet(np.full(k, cfg.theta_conc))
+        zs = rng.choice(k, size=length, p=theta)
+        for t in np.unique(zs):
+            idx = np.nonzero(zs == t)[0]
+            prob, alias = tables[t]
+            tokens[d, idx] = _np_alias_sample(prob, alias, idx.size, rng)
+        mask[d, :length] = True
+    return tokens, mask, phi
+
+
+def shard_corpus(tokens, mask, n_shards: int):
+    """Split documents into per-client shards (paper §5.2 data layout)."""
+    d = tokens.shape[0]
+    per = d // n_shards
+    return [(tokens[i * per:(i + 1) * per], mask[i * per:(i + 1) * per])
+            for i in range(n_shards)]
+
+
+# ---------------------------------------------------------------------------
+# LM token stream (for the assigned-architecture trainer)
+# ---------------------------------------------------------------------------
+
+def lm_batches(vocab_size: int, batch: int, seq_len: int, n_batches: int,
+               seed: int = 0, kind: str = "markov", noise: float = 0.1):
+    """Synthetic language streams without external data.
+
+    kind="affine": next = (3·cur + 1) mod V with ``noise`` random tokens —
+      near-deterministic, learnable to ~1-2 nats within tens of steps (used
+      by convergence tests / examples).
+    kind="markov": sparse random 2nd-order Markov chain — harder, used for
+      longer training runs.
+    """
+    rng = np.random.default_rng(seed)
+    if kind == "affine":
+        for _ in range(n_batches):
+            out = np.zeros((batch, seq_len), np.int64)
+            out[:, 0] = rng.integers(0, vocab_size, size=batch)
+            flip = rng.random((batch, seq_len)) < noise
+            rnd = rng.integers(0, vocab_size, size=(batch, seq_len))
+            for t in range(1, seq_len):
+                nxt = (out[:, t - 1] * 3 + 1) % vocab_size
+                out[:, t] = np.where(flip[:, t], rnd[:, t], nxt)
+            yield {"tokens": out.astype(np.int32)}
+        return
+    branch = 8
+    # successor table: each (context hash) -> `branch` candidate tokens.
+    # Context count scales with vocab so small test vocabularies stay
+    # learnable within tens of steps.
+    n_ctx = min(1 << 16, 4 * vocab_size)
+    succ = rng.integers(0, vocab_size, size=(n_ctx, branch), dtype=np.int64)
+
+    def hash_ctx(a, b):
+        return ((a * 1000003) ^ b) % n_ctx
+
+    for i in range(n_batches):
+        out = np.zeros((batch, seq_len), np.int64)
+        out[:, 0] = rng.integers(0, vocab_size, size=batch)
+        out[:, 1] = rng.integers(0, vocab_size, size=batch)
+        choice = rng.integers(0, branch, size=(batch, seq_len))
+        for t in range(2, seq_len):
+            ctx = hash_ctx(out[:, t - 2], out[:, t - 1])
+            out[:, t] = succ[ctx, choice[:, t]]
+        yield {"tokens": out.astype(np.int32)}

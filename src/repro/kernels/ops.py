@@ -1,0 +1,62 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True so the kernels validate on CPU; on a real TPU
+runtime set ``repro.kernels.ops.INTERPRET = False`` (or pass explicitly) and
+the same BlockSpecs lower to Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.alias import AliasTable
+from repro.kernels import alias_build as _build
+from repro.kernels import alias_sample as _sample
+from repro.kernels import mh_accept as _accept
+
+INTERPRET = True
+
+
+def build_tables(p: jax.Array, *, tile_r: int = 8,
+                 interpret: bool | None = None) -> AliasTable:
+    """Kernel-backed replacement for ``repro.core.alias.build`` (2-D input)."""
+    prob, alias, mass = _build.alias_build(
+        p, tile_r=tile_r,
+        interpret=INTERPRET if interpret is None else interpret)
+    return AliasTable(prob=prob, alias=alias, mass=mass)
+
+
+def build_tables_fused_lda(n_wk: jax.Array, n_k: jax.Array, *, alpha: float,
+                           beta: float, vocab_size: int, tile_r: int = 8,
+                           interpret: bool | None = None
+                           ) -> tuple[AliasTable, jax.Array]:
+    """Fused dense-term + alias build; also returns the dense term mass-
+    consistent stale matrix (recomputed cheaply for MH point evaluation)."""
+    prob, alias, mass = _build.alias_build_fused(
+        n_wk, n_k, alpha=alpha, beta=beta, vocab_size=vocab_size,
+        tile_r=tile_r, interpret=INTERPRET if interpret is None else interpret)
+    stale_dense = alpha * (n_wk + beta) / (n_k[None, :] + beta * vocab_size)
+    return AliasTable(prob=prob, alias=alias, mass=mass), stale_dense
+
+
+def sample_rows(tables: AliasTable, rows: jax.Array, key: jax.Array, *,
+                tile_v: int = 64, tile_b: int = 1024,
+                interpret: bool | None = None) -> jax.Array:
+    """Kernel-backed replacement for ``repro.core.alias.sample_rows``."""
+    k = tables.prob.shape[-1]
+    k_slot, k_coin = jax.random.split(key)
+    slot = jax.random.randint(k_slot, rows.shape, 0, k, dtype=jnp.int32)
+    coin = jax.random.uniform(k_coin, rows.shape)
+    return _sample.alias_sample(
+        tables.prob, tables.alias, rows, slot, coin, tile_v=tile_v,
+        tile_b=tile_b, interpret=INTERPRET if interpret is None else interpret)
+
+
+def mh_accept(z, cand, log_p_z, log_p_cand, log_q_z, log_q_cand, key, *,
+              tile_b: int = 4096, interpret: bool | None = None):
+    """Kernel-backed fused MH accept step."""
+    u = jax.random.uniform(key, z.shape)
+    return _accept.mh_accept(
+        z, cand, log_p_z, log_p_cand, log_q_z, log_q_cand, u,
+        tile_b=tile_b, interpret=INTERPRET if interpret is None else interpret)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each kernel in this package has a reference implementation here; tests sweep
+shapes/dtypes and assert allclose between the kernel (interpret=True on CPU)
+and these oracles.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import alias as alias_mod
+
+
+def alias_build_ref(p: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Reference alias-table construction: (prob, alias, mass) per row."""
+    t = alias_mod.build(p)
+    return t.prob, t.alias, t.mass
+
+
+def dense_probs_ref(n_wk: jax.Array, n_k: jax.Array, alpha: float,
+                    beta: float, vocab_size: int) -> jax.Array:
+    """Dense LDA proposal term α(n_wk+β)/(n_k+β̄) — fused into alias_build."""
+    beta_bar = beta * vocab_size
+    return alpha * (n_wk + beta) / (n_k[None, :] + beta_bar)
+
+
+def alias_build_fused_ref(n_wk, n_k, alpha, beta, vocab_size):
+    """Oracle for the fused dense-term + alias-table build."""
+    return alias_build_ref(dense_probs_ref(n_wk, n_k, alpha, beta, vocab_size))
+
+
+def alias_sample_ref(prob: jax.Array, alias: jax.Array, rows: jax.Array,
+                     slot: jax.Array, coin: jax.Array) -> jax.Array:
+    """Reference O(1) alias draws with *given* uniforms.
+
+    rows: (B,) table-row per draw; slot: (B,) int in [0,K); coin: (B,) in
+    [0,1).  Deterministic given the uniforms, so kernel vs oracle compare
+    exactly.
+    """
+    p = prob[rows, slot]
+    a = alias[rows, slot]
+    return jnp.where(coin < p, slot, a).astype(jnp.int32)
+
+
+def mh_accept_ref(z: jax.Array, cand: jax.Array, log_p_z: jax.Array,
+                  log_p_cand: jax.Array, log_q_z: jax.Array,
+                  log_q_cand: jax.Array, u: jax.Array) -> jax.Array:
+    """Reference MH accept step (paper eq. 7) with given uniforms."""
+    log_ratio = log_p_cand - log_p_z + log_q_z - log_q_cand
+    accept = jnp.log(u + 1e-30) < log_ratio
+    return jnp.where(accept, cand, z).astype(jnp.int32)

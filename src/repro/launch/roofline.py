@@ -1,0 +1,387 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = FLOPs      / (chips × 197e12 bf16 FLOP/s)
+    memory     = HBM bytes  / (chips × 819e9  B/s)
+    collective = coll bytes / 50e9 B/s per-chip ICI
+
+Measurement sources and their caveats (this is a CPU container; the dry-run
+compiles for 512 forced host devices, so numbers are *structural*, not
+wall-clock):
+
+* ``compiled.cost_analysis()`` counts a ``while`` body ONCE, but our models
+  scan over layers and microbatches — HLO FLOPs/bytes undercount by up to
+  L × n_mb.  We therefore compute the FLOPs and HBM-traffic terms from the
+  *analytic* workload model (parameter matmuls + attention/SSM terms +
+  optimizer/cache traffic) and report the raw HLO numbers alongside.
+* Collective bytes are parsed from the optimized HLO.  Collectives inside
+  ``while`` bodies execute trip-count times; we recover the trip count from
+  each while's condition region (the loop-bound constant) and multiply —
+  the ``xN`` correction recorded per record as ``coll_loop_corrected``.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape like 'bf16[16,2048,512]' or a tuple thereof."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+# ---------------------------------------------------------------------------
+# HLO parsing: collectives with while-loop trip-count correction
+# ---------------------------------------------------------------------------
+
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+) \(.*\) -> .+ \{$")
+_INSTR_RE = re.compile(r"%?[\w.\-]+ = (.+?) ([\w\-]+)\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\), condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"[su]\d+\[\]\{?\}? constant\((\d+)\)")
+
+
+def _parse_computations(hlo: str) -> dict[str, list[str]]:
+    """computation name -> its instruction lines."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = _COMP_RE.match(stripped)
+        if m and stripped.endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Loop bound heuristic: the largest integer constant in the condition
+    region (the canonical `i < N` bound).  Clamped to a sane range."""
+    best = 1
+    for line in cond_lines:
+        for m in _CONST_RE.finditer(line):
+            best = max(best, int(m.group(1)))
+    return min(best, 1_000_000)
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict[str, int] = field(default_factory=dict)
+    count_by_kind: dict[str, int] = field(default_factory=dict)
+    loop_corrected: bool = False
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum *output* shape sizes of every collective op, scaled by the while
+    trip counts of the regions containing it."""
+    comps = _parse_computations(hlo_text)
+
+    # Map body-computation -> trip count, and find each computation's parent
+    # multiplier by walking while nests from the leaves of call sites.
+    body_trip: dict[str, int] = {}
+    called_by: dict[str, str] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m:
+                cond, body = m.groups()
+                body_trip[body] = _trip_count(comps.get(cond, []))
+                called_by[body] = name
+                called_by[cond] = name
+            # calls into fusions/regions don't multiply
+
+    def multiplier(comp: str) -> int:
+        mult, seen = 1, set()
+        while comp in called_by and comp not in seen:
+            seen.add(comp)
+            if comp in body_trip:
+                mult *= body_trip[comp]
+            comp = called_by[comp]
+        return min(mult, 10_000_000)
+
+    stats = CollectiveStats()
+    for name, lines in comps.items():
+        mult = multiplier(name)
+        if mult > 1:
+            stats.loop_corrected = True
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            shape_str, op = m.groups()
+            for kind in _COLLECTIVES:
+                if op == kind or op == kind + "-start":
+                    stats.bytes_by_kind[kind] = (
+                        stats.bytes_by_kind.get(kind, 0)
+                        + _shape_bytes(shape_str) * mult)
+                    stats.count_by_kind[kind] = (
+                        stats.count_by_kind.get(kind, 0) + mult)
+                    break
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Analytic workload model (FLOPs + HBM bytes)
+# ---------------------------------------------------------------------------
+
+def _attn_layers(cfg) -> float:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return cfg.n_layers
+    if cfg.family == "hybrid":
+        return cfg.n_layers / max(cfg.attn_every, 1)
+    if cfg.family == "audio":
+        return cfg.n_layers            # decoder self-attn (cross added apart)
+    return 0.0
+
+
+def analytic_flops(cfg, shape) -> dict[str, float]:
+    """Per-step global FLOPs: parameter matmuls + attention + SSM scan.
+
+    Multipliers: forward = 1 pass; train = fwd + per-layer remat re-fwd +
+    bwd = 4× forward matmul traffic (2·N → 8·N per token).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    n_act = cfg.active_param_count()
+    h, hd = cfg.n_heads, cfg.head_dim_
+    la = _attn_layers(cfg)
+
+    def attn_fwd(sq, kv_len, causal=True):
+        eff = (kv_len + 1) / 2 if (causal and kv_len == sq) else kv_len
+        if cfg.sliding_window and kv_len > cfg.sliding_window:
+            eff = min(eff, cfg.sliding_window)
+        return 4.0 * b * sq * eff * h * hd * la
+
+    ssm_fwd = 0.0
+    if cfg.family == "ssm":
+        ssm_fwd = 6.0 * cfg.n_layers * b * s * cfg.d_model * hd if hd else \
+            6.0 * cfg.n_layers * b * s * cfg.d_model * 64
+    if cfg.family == "hybrid":
+        ssm_fwd = 6.0 * cfg.n_layers * b * s * cfg.d_model * cfg.ssm_state
+
+    if shape.kind == "train":
+        tokens = b * s
+        mat = 8.0 * n_act * tokens                   # 2 fwd + 2 remat + 4 bwd
+        attn = 4.0 * attn_fwd(s, s)
+        extra = 4.0 * ssm_fwd
+        if cfg.family == "audio":
+            f = cfg.n_frames or 1500
+            attn += 4.0 * (4.0 * b * s * f * h * hd * cfg.n_layers      # cross
+                           + 4.0 * b * f * f * h * hd * cfg.encoder_layers)
+        return {"flops": mat + attn + extra, "matmul": mat, "attn": attn}
+    if shape.kind == "prefill":
+        tokens = b * s
+        mat = 2.0 * n_act * tokens
+        attn = attn_fwd(s, s)
+        if cfg.family == "audio":
+            f = cfg.n_frames or 1500
+            attn += (4.0 * b * s * f * h * hd * cfg.n_layers
+                     + 4.0 * b * f * f * h * hd * cfg.encoder_layers)
+        return {"flops": mat + attn + ssm_fwd, "matmul": mat, "attn": attn}
+    # decode: one token per sequence
+    mat = 2.0 * n_act * b
+    kv_len = min(s, cfg.sliding_window) if cfg.sliding_window else s
+    if cfg.family == "ssm":
+        attn = 0.0
+    else:
+        attn = 4.0 * b * kv_len * h * hd * la
+    return {"flops": mat + attn + ssm_fwd / max(s, 1), "matmul": mat,
+            "attn": attn}
+
+
+def analytic_hbm_bytes(cfg, shape, chips: int, n_microbatches: int = 1
+                       ) -> float:
+    """Per-device HBM traffic per step (floor estimate)."""
+    b, s = shape.global_batch, shape.seq_len
+    p = cfg.param_count()
+    d, l = cfg.d_model, cfg.n_layers
+    if shape.kind == "train":
+        # f32 master weights re-read per microbatch (fwd+bwd), optimizer
+        # update ~6 passes (read g,m,v + write p,m,v), activations ~2 r/w of
+        # one (tokens, d) tensor per layer in bf16 with remat.
+        weights = p * 4.0 * (2.0 * n_microbatches + 6.0) / chips
+        acts = 4.0 * l * b * s * d / chips
+        return weights + acts
+    if shape.kind == "prefill":
+        weights = p * 2.0 / chips                    # bf16 serving weights
+        acts = 4.0 * l * b * s * d / chips
+        kv = 4.0 * l * b * s * cfg.n_kv_heads * cfg.head_dim_ / chips
+        return weights + acts + kv
+    # decode
+    kv_len = min(s, cfg.sliding_window) if cfg.sliding_window else s
+    weights = p * 2.0 / chips
+    if cfg.family == "ssm":
+        hd = cfg.head_dim_ or 64
+        state = 4.0 * l * b * (d // max(hd, 1)) * hd * hd / chips
+    elif cfg.family == "hybrid":
+        state = 4.0 * l * b * d * cfg.ssm_state / chips \
+            + 4.0 * (l / max(cfg.attn_every, 1)) * b * kv_len \
+            * cfg.n_kv_heads * cfg.head_dim_ / chips
+    else:
+        state = 4.0 * l * b * kv_len * cfg.n_kv_heads * cfg.head_dim_ / chips
+    return weights + state
+
+
+# ---------------------------------------------------------------------------
+# Roofline record
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    model_flops: float
+    analytic_flops_total: float = 0.0
+    analytic_hbm: float = 0.0
+    coll_by_kind: dict[str, int] = field(default_factory=dict)
+    coll_counts: dict[str, int] = field(default_factory=dict)
+    coll_loop_corrected: bool = False
+    per_device_hbm_bytes: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        """Analytic FLOPs (HLO undercounts while bodies)."""
+        return self.analytic_flops_total / (self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def t_compute_hlo(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.analytic_hbm / HBM_BW
+
+    @property
+    def t_memory_hlo(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        # collective bytes here are per-device (HLO shapes are per-shard)
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / analytic compiled FLOPs — remat/attention overhead."""
+        return (self.model_flops / self.analytic_flops_total
+                if self.analytic_flops_total else 0.0)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step-time lower bound: max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline bound."""
+        denom = self.step_time * self.chips * PEAK_FLOPS_BF16
+        return self.model_flops / denom if denom else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "analytic_flops": self.analytic_flops_total,
+            "analytic_hbm_bytes_per_dev": self.analytic_hbm,
+            "coll_bytes": self.coll_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "t_compute_hlo_s": self.t_compute_hlo,
+            "t_memory_hlo_s": self.t_memory_hlo,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_step_s": self.step_time,
+            "mfu_bound": self.mfu,
+            "coll_by_kind": self.coll_by_kind,
+            "coll_counts": self.coll_counts,
+            "coll_loop_corrected": self.coll_loop_corrected,
+            "per_device_hbm_bytes": self.per_device_hbm_bytes,
+        }
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """MODEL_FLOPS = 6·N·D for training, 2·N·D for forward-only (prefill)
+    and 2·N per token for decode; N = active params."""
+    n = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token
+
+
+def analyze(compiled, lowered_text: str, *, cfg, shape, mesh_name: str,
+            chips: int, n_microbatches: int = 1) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byt = float(cost.get("bytes accessed", 0.0))
+    stats = collective_bytes(lowered_text)
+    mem = compiled.memory_analysis()
+    per_dev = 0.0
+    if mem is not None:
+        per_dev = (getattr(mem, "argument_size_in_bytes", 0)
+                   + getattr(mem, "output_size_in_bytes", 0)
+                   + getattr(mem, "temp_size_in_bytes", 0))
+    af = analytic_flops(cfg, shape)
+    ah = analytic_hbm_bytes(cfg, shape, chips, n_microbatches)
+    return Roofline(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byt,
+        coll_bytes=float(stats.total_bytes),
+        model_flops=model_flops(cfg, shape, shape.kind),
+        analytic_flops_total=af["flops"],
+        analytic_hbm=ah,
+        coll_by_kind=stats.bytes_by_kind,
+        coll_counts=stats.count_by_kind,
+        coll_loop_corrected=stats.loop_corrected,
+        per_device_hbm_bytes=per_dev,
+    )

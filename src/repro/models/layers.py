@@ -1,0 +1,292 @@
+"""Shared neural building blocks (pure functional JAX).
+
+Weight layout notes:
+- Attention projections are stored 4-D as (d_model, n_heads, head_dim) so
+  sharding can target either the head axis (when divisible by the mesh) or
+  the head_dim axis (GQA KV heads rarely divide a 16-way axis; head_dim
+  does) — see ``repro.train.sharding``.
+- All matmuls run in bf16 with f32 accumulation (``preferred_element_type``);
+  master weights stay f32 and are cast at use.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Array = jax.Array
+Params = dict[str, Any]
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def cast(x: Array) -> Array:
+    return x.astype(COMPUTE_DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraint (zero_seq mode; see train/sharding.py).
+# Lives here (not model.py) so sdpa can adapt its q-chunking: with the
+# sequence dim sharded, slicing q into chunks would re-shard every chunk —
+# the per-device q is already S/16 long, so chunking is disabled instead.
+# ---------------------------------------------------------------------------
+
+_ACT_SPEC = None
+_BLOCK_SPECS = None   # storage PartitionSpecs for params["blocks"] etc.
+_MESH = None          # the mesh being lowered against (shard_map dispatch)
+
+
+def set_activation_spec(spec, block_specs=None, mesh=None) -> None:
+    global _ACT_SPEC, _BLOCK_SPECS, _MESH
+    _ACT_SPEC = spec
+    _BLOCK_SPECS = block_specs
+    _MESH = mesh
+
+
+def get_activation_spec():
+    return _ACT_SPEC
+
+
+def get_block_specs():
+    return _BLOCK_SPECS
+
+
+def get_mesh():
+    return _MESH
+
+
+def constrain(x: Array) -> Array:
+    if _ACT_SPEC is not None and x.ndim == 3:
+        return jax.lax.with_sharding_constraint(x, _ACT_SPEC)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def init_rms_norm(d: int) -> Array:
+    return jnp.ones((d,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional sliding window / qk-norm / bias), q-chunked
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, key: Array) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(h * hd)
+    p = {
+        "wq": jax.random.normal(k1, (d, h, hd), jnp.float32) * s_in,
+        "wk": jax.random.normal(k2, (d, kv, hd), jnp.float32) * s_in,
+        "wv": jax.random.normal(k3, (d, kv, hd), jnp.float32) * s_in,
+        "wo": jax.random.normal(k4, (h, hd, d), jnp.float32) * s_out,
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((h, hd), jnp.float32)
+        p["bk"] = jnp.zeros((kv, hd), jnp.float32)
+        p["bv"] = jnp.zeros((kv, hd), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms_norm(hd)
+        p["k_norm"] = init_rms_norm(hd)
+    return p
+
+
+def qkv_project(cfg: ModelConfig, p: Params, x: Array, positions: Array,
+                rope: bool = True) -> tuple[Array, Array, Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"]),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", x, cast(p["wk"]),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", x, cast(p["wv"]),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if cfg.attn_bias:
+        q = q + cast(p["bq"])
+        k = k + cast(p["bk"])
+        v = v + cast(p["bv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def sdpa(q: Array, k: Array, v: Array, *, causal: bool, window: int = 0,
+         q_offset: Array | int = 0, kv_len: Array | None = None,
+         q_chunk: int = 1024) -> Array:
+    """Grouped-query scaled dot-product attention, chunked over queries.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd).  ``q_offset`` is the absolute
+    position of q[0] (decode: cache length so far).  ``kv_len`` optionally
+    masks the valid prefix of the KV buffers (decode with preallocated
+    caches).  Chunking over Sq bounds the transient score buffer to
+    (B, KV, rep, q_chunk, Sk) — the TPU VMEM-friendly shape — instead of the
+    full Sq×Sk matrix.
+    """
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    rep = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, sq, kv, rep, hd)
+    kpos = jnp.arange(sk)
+
+    def attend(q_blk: Array, blk_offset: Array) -> Array:
+        c = q_blk.shape[1]
+        scores = jnp.einsum("bqgrh,bkgh->bgrqk", q_blk, k,
+                            preferred_element_type=jnp.float32) * scale
+        qpos = blk_offset + jnp.arange(c) + q_offset
+        mask = jnp.ones((c, sk), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        if kv_len is not None:
+            mask &= kpos[None, :] < kv_len
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bgrqk,bkgh->bqgrh", probs.astype(q.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out.astype(q.dtype).reshape(b, c, h, hd)
+
+    seq_sharded = _ACT_SPEC is not None and len(_ACT_SPEC) > 1 \
+        and _ACT_SPEC[1] is not None
+    if sq <= q_chunk or seq_sharded:
+        # zero_seq: q's sequence dim is model-sharded; chunking would
+        # re-shard every chunk (measured: ×4 trip over every layer's K/V
+        # gather).  The per-device transient is (B/d, KV, rep, S/m, S) —
+        # already 1/(d·m) of the global score tensor.
+        return attend(qg, jnp.asarray(0))
+
+    # Largest divisor of Sq not exceeding q_chunk (Sq=1500 → 750): keeps the
+    # scan uniform without padding (whisper's 1500 encoder frames, etc.).
+    while sq % q_chunk:
+        q_chunk -= 1
+    n_chunks = sq // q_chunk
+    # Scan over q chunks with a rematerialized body: the backward pass
+    # recomputes each chunk's scores/probs instead of storing the stacked
+    # (B, KV, rep, q_chunk, Sk) residuals — the flash-attention memory
+    # profile, structurally (kernels/ carries the Pallas version).
+    qg_chunks = qg.reshape(b, n_chunks, q_chunk, kv, rep, hd).transpose(
+        1, 0, 2, 3, 4, 5)
+    attend_ckpt = jax.checkpoint(attend)
+
+    def body(_, xs):
+        q_blk, i = xs
+        return None, attend_ckpt(q_blk, i * q_chunk)
+
+    _, out = jax.lax.scan(body, None, (qg_chunks, jnp.arange(n_chunks)))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+def attention_block(cfg: ModelConfig, p: Params, x: Array, positions: Array,
+                    *, causal: bool = True, rope: bool = True,
+                    window: int | None = None) -> Array:
+    q, k, v = qkv_project(cfg, p, x, positions, rope=rope)
+    w = cfg.sliding_window if window is None else window
+    out = sdpa(q, k, v, causal=causal, window=w)
+    return jnp.einsum("bshk,hkd->bsd", out, cast(p["wo"]),
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def cross_attention_block(cfg: ModelConfig, p: Params, x: Array,
+                          mem_k: Array, mem_v: Array) -> Array:
+    """Decoder cross-attention over precomputed encoder K/V (no rope)."""
+    positions = jnp.arange(x.shape[1])
+    q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"]),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    out = sdpa(q, mem_k, mem_v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, cast(p["wo"]),
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key: Array, kind: str = "swiglu") -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    if kind == "swiglu":
+        return {
+            "w_gate": jax.random.normal(k1, (d, f), jnp.float32) * s_in,
+            "w_up": jax.random.normal(k2, (d, f), jnp.float32) * s_in,
+            "w_down": jax.random.normal(k3, (f, d), jnp.float32) * s_out,
+        }
+    return {  # gelu (whisper)
+        "w_up": jax.random.normal(k1, (d, f), jnp.float32) * s_in,
+        "w_down": jax.random.normal(k2, (f, d), jnp.float32) * s_out,
+    }
+
+
+def mlp_block(p: Params, x: Array) -> Array:
+    if "w_gate" in p:
+        gate = jnp.einsum("bsd,df->bsf", x, cast(p["w_gate"]),
+                          preferred_element_type=jnp.float32)
+        up = jnp.einsum("bsd,df->bsf", x, cast(p["w_up"]),
+                        preferred_element_type=jnp.float32)
+        h = (jax.nn.silu(gate) * up).astype(x.dtype)
+    else:
+        up = jnp.einsum("bsd,df->bsf", x, cast(p["w_up"]),
+                        preferred_element_type=jnp.float32)
+        h = jax.nn.gelu(up).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, cast(p["w_down"]),
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(cfg: ModelConfig, key: Array) -> Array:
+    return (jax.random.normal(key, (cfg.padded_vocab, cfg.d_model), jnp.float32)
+            * (1.0 / math.sqrt(cfg.d_model)))
+
+
+def embed(table: Array, tokens: Array) -> Array:
+    return cast(table)[tokens]
+
+
+def unembed(table: Array, h: Array) -> Array:
+    """Logits against the (possibly tied) embedding table: (B, S, Vp)."""
+    return jnp.einsum("bsd,vd->bsv", h, cast(table),
+                      preferred_element_type=jnp.float32)

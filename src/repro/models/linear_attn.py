@@ -1,0 +1,163 @@
+"""Chunked linear attention with (data-dependent) decay.
+
+Shared engine for RWKV-6 (vector decay per key channel, exclusive recurrence
+with a current-token bonus ``u``) and Mamba-2 / SSD (scalar decay per head,
+inclusive recurrence):
+
+    S_t = diag(w_t) · S_{t-1} + k_t v_tᵀ              (state: K×P per head)
+    RWKV-6:  out_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ)
+    Mamba-2: out_t = r_t · S_t
+
+A naive scan over time is O(S) sequential steps; the chunked form processes
+``chunk`` tokens per step with dense contractions — the standard TPU-native
+formulation (intra-chunk masked attention with decay ratios + inter-chunk
+state carry).
+
+Numerical-stability design: the textbook separable form
+``(r_t e^{L_t})·(k_s e^{-L_s})`` overflows once cumulative decay within a
+chunk exceeds ~88 nats (Mamba-2 decays routinely reach hundreds).  Instead
+the intra-chunk term uses the *direct pairwise* ratio exp(L_t − L_s), whose
+exponent is ≤ 0 for every causal (t, s) pair because L is non-increasing —
+unconditionally overflow-free.  The pairwise tensor is blocked over the key
+dimension (``K_BLOCK``) to bound the transient to (B,H,C,C,K_BLOCK).  The
+inter-chunk factors are all ≤ 1 by the same monotonicity.  (A Pallas kernel
+could recover MXU matmuls with sub-block rebasing; the roofline for SSM
+archs is HBM-bound, so the VPU form does not move the bottleneck.)
+
+``linear_attention_ref`` is the step-by-step oracle used by tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+MIN_LOG_W = -60.0   # per-step floor: e^-60 is already an exact-zero carry in f32
+K_BLOCK = 32        # key-dim blocking for the pairwise intra-chunk tensor
+
+
+def linear_attention_ref(r, k, v, log_w, *, inclusive: bool,
+                         u: Array | None = None, initial_state=None):
+    """Oracle: sequential scan.  r/k: (B,S,H,K), v: (B,S,H,P),
+    log_w: (B,S,H,K) or (B,S,H,1).  Returns (out (B,S,H,P), state (B,H,K,P))."""
+    b, s, h, kd = k.shape
+    p = v.shape[-1]
+    log_w = jnp.broadcast_to(jnp.clip(log_w, MIN_LOG_W, 0.0), (b, s, h, kd))
+    state0 = (jnp.zeros((b, h, kd, p), jnp.float32) if initial_state is None
+              else initial_state.astype(jnp.float32))
+
+    def step(state, inp):
+        r_t, k_t, v_t, lw_t = inp  # (B,H,K), (B,H,K), (B,H,P), (B,H,K)
+        outer = k_t[..., :, None] * v_t[..., None, :]       # (B,H,K,P)
+        new_state = jnp.exp(lw_t)[..., None] * state + outer
+        if inclusive:
+            out = jnp.einsum("bhk,bhkp->bhp", r_t, new_state)
+        else:
+            base = state + (u[None, :, :, None] * outer if u is not None else 0.0)
+            out = jnp.einsum("bhk,bhkp->bhp", r_t, base)
+        return new_state, out
+
+    xs = (r.transpose(1, 0, 2, 3).astype(jnp.float32),
+          k.transpose(1, 0, 2, 3).astype(jnp.float32),
+          v.transpose(1, 0, 2, 3).astype(jnp.float32),
+          log_w.transpose(1, 0, 2, 3).astype(jnp.float32))
+    state, outs = jax.lax.scan(step, state0, xs)
+    return outs.transpose(1, 0, 2, 3), state
+
+
+def linear_attention(r, k, v, log_w, *, chunk: int = 64, inclusive: bool,
+                     u: Array | None = None, initial_state=None):
+    """Chunked evaluation; same contract as ``linear_attention_ref``."""
+    b, s, h, kd = k.shape
+    p = v.shape[-1]
+    if s % chunk:
+        raise ValueError(f"seq {s} must be a multiple of chunk {chunk}")
+    n = s // chunk
+    log_w = jnp.broadcast_to(jnp.clip(log_w, MIN_LOG_W, 0.0),
+                             (b, s, h, kd)).astype(jnp.float32)
+
+    rc = r.reshape(b, n, chunk, h, kd).astype(jnp.float32)
+    kc = k.reshape(b, n, chunk, h, kd).astype(jnp.float32)
+    vc = v.reshape(b, n, chunk, h, p).astype(jnp.float32)
+    lwc = log_w.reshape(b, n, chunk, h, kd)
+
+    state0 = (jnp.zeros((b, h, kd, p), jnp.float32) if initial_state is None
+              else initial_state.astype(jnp.float32))
+
+    t_idx = jnp.arange(chunk)
+    if inclusive:
+        pair_mask = t_idx[:, None] >= t_idx[None, :]   # s ≤ t
+    else:
+        pair_mask = t_idx[:, None] > t_idx[None, :]    # s < t
+
+    n_kb = max(1, kd // K_BLOCK)
+    while kd % n_kb:
+        n_kb -= 1
+    kb = kd // n_kb
+
+    def chunk_step(state, inp):
+        r_i, k_i, v_i, lw_i = inp      # (B,C,H,K) / (B,C,H,P)
+        lw_cum = jnp.cumsum(lw_i, axis=1)              # inclusive cumsum L_t
+        lw_tot = lw_cum[:, -1]                         # (B,H,K)
+
+        # Inter-chunk: carry-in state contribution.
+        #   exclusive: out_t += (r_t ⊙ P_{t-1}) S_prev  with P_{t-1}=exp(L_t - lw_t)
+        #   inclusive: out_t += (r_t ⊙ P_t) S_prev
+        l_q = lw_cum if inclusive else lw_cum - lw_i   # ≤ 0 everywhere
+        q_tilde = r_i * jnp.exp(l_q)
+        out = jnp.einsum("bchk,bhkp->bchp", q_tilde, state)
+
+        # Intra-chunk, direct pairwise (overflow-free: exponent ≤ 0 on the
+        # causal mask), blocked over the key dim.
+        def k_block(i, att):
+            sl = jax.lax.dynamic_slice_in_dim
+            r_b = sl(r_i, i * kb, kb, axis=3)
+            k_b = sl(k_i, i * kb, kb, axis=3)
+            lq_b = sl(l_q, i * kb, kb, axis=3)
+            lk_b = sl(lw_cum, i * kb, kb, axis=3)
+            d = lq_b[:, :, None] - lk_b[:, None, :, :]   # (B,C,C,H,kb), ≤0 causal
+            term = jnp.einsum("bchk,bdhk,bcdhk->bhcd", r_b, k_b,
+                              jnp.exp(jnp.minimum(d, 0.0)))
+            return att + term
+
+        att = jax.lax.fori_loop(0, n_kb, k_block,
+                                jnp.zeros((b, h, chunk, chunk), jnp.float32))
+        att = jnp.where(pair_mask[None, None], att, 0.0)
+        out = out + jnp.einsum("bhcd,bdhp->bchp", att, v_i)
+
+        if not inclusive and u is not None:
+            # current-token bonus (RWKV-6 ``u``)
+            bonus = jnp.einsum("bchk,bchk->bch", r_i * u[None, None], k_i)
+            out = out + bonus[..., None] * v_i
+
+        # State carry: S' = diag(exp(L_C)) S + Σ_s exp(L_C - L_s) k_s v_sᵀ
+        k_carry = k_i * jnp.exp(lw_tot[:, None] - lw_cum)
+        new_state = (jnp.exp(lw_tot)[..., None] * state
+                     + jnp.einsum("bchk,bchp->bhkp", k_carry, v_i))
+        return new_state, out
+
+    xs = (rc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), lwc.transpose(1, 0, 2, 3, 4))
+    state, outs = jax.lax.scan(chunk_step, state0, xs)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return out, state
+
+
+def linear_attention_step(r_t, k_t, v_t, log_w_t, state, *, inclusive: bool,
+                          u: Array | None = None):
+    """Single decode step.  r_t/k_t: (B,H,K), v_t: (B,H,P), state (B,H,K,P).
+    Returns (out (B,H,P), new_state)."""
+    log_w_t = jnp.clip(log_w_t, MIN_LOG_W, 0.0)
+    lw = jnp.broadcast_to(log_w_t, k_t.shape).astype(jnp.float32)
+    outer = k_t[..., :, None] * v_t[..., None, :]
+    new_state = jnp.exp(lw)[..., None] * state.astype(jnp.float32) + outer
+    if inclusive:
+        out = jnp.einsum("bhk,bhkp->bhp", r_t, new_state)
+    else:
+        base = state.astype(jnp.float32)
+        if u is not None:
+            base = base + u[None, :, :, None] * outer
+        out = jnp.einsum("bhk,bhkp->bhp", r_t, base)
+    return out, new_state

@@ -1,0 +1,737 @@
+"""Model assembly: init / forward / prefill / decode for every architecture
+family (dense, moe, ssm, hybrid, audio enc-dec, vlm).
+
+Design choices that matter at scale:
+- **Scan over layers** with stacked (L, ...) parameter leaves: keeps the HLO
+  size O(1) in depth (an 80-layer model compiles as fast as a 2-layer one)
+  and is what makes the 512-chip dry-run tractable.
+- **Remat per layer** (``jax.checkpoint`` around the block body) so the
+  backward pass stores only layer inputs.
+- Forward returns *hidden states*, not logits: the cross-entropy loss
+  computes vocab-sharded logits in sequence chunks (``repro.train.loss``) so
+  the (B, S, V) tensor never materializes.
+- Decode caches are ring buffers when the config has a sliding window
+  (mixtral natively; zamba2's shared attention at the long_500k shape).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (attention_block, cast, cross_attention_block,
+                                 embed, init_attention, init_embed, init_mlp,
+                                 init_rms_norm, mlp_block, qkv_project,
+                                 rms_norm, sdpa, unembed)
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+# Activation sharding constraint (zero_seq mode): the holder lives in
+# layers.py (sdpa adapts its chunking to it); re-exported here for the
+# launch layer.
+from repro.models.layers import (constrain as _constrain,  # noqa: E402
+                                 get_activation_spec, get_block_specs,
+                                 set_activation_spec)
+
+
+def _maybe_cast_blocks(tree: Params, key: str = "blocks") -> Params:
+    """zero modes: convert block weights to bf16 BEFORE the layer scan so
+    the per-layer ZeRO all-gather moves bf16, not f32 — halves the dominant
+    collective (measured in §Perf).  The bf16 copy is pinned to the same
+    storage sharding (otherwise XLA sinks the convert back inside the loop
+    and gathers f32 — measured).  Master f32 weights are untouched; grads
+    flow back through the cast."""
+    if get_activation_spec() is None:
+        return tree
+    specs = (get_block_specs() or {}).get(key)
+
+    def one(x, spec=None):
+        if x.dtype != jnp.float32:
+            return x
+        x = x.astype(jnp.bfloat16)
+        if spec is not None:
+            x = jax.lax.with_sharding_constraint(x, spec)
+        return x
+
+    if specs is None:
+        return jax.tree.map(one, tree)
+    return jax.tree.map(one, tree, specs)
+
+
+# ===========================================================================
+# Init
+# ===========================================================================
+
+def _stack_init(init_fn, key: Array, n: int) -> Params:
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _init_dense_block(cfg: ModelConfig, key: Array) -> Params:
+    k1, k2 = jax.random.split(key)
+    block = {
+        "ln1": init_rms_norm(cfg.d_model),
+        "attn": init_attention(cfg, k1),
+        "ln2": init_rms_norm(cfg.d_model),
+    }
+    if cfg.family == "moe":
+        block["moe"] = moe_mod.init_moe(cfg, k2)
+    else:
+        block["mlp"] = init_mlp(cfg, k2)
+    return block
+
+
+def _init_rwkv_block(cfg: ModelConfig, key: Array) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rms_norm(cfg.d_model),
+        "tmix": ssm_mod.init_rwkv6_time_mix(cfg, k1),
+        "ln2": init_rms_norm(cfg.d_model),
+        "cmix": ssm_mod.init_rwkv6_channel_mix(cfg, k2),
+    }
+
+
+def _init_mamba_block(cfg: ModelConfig, key: Array) -> Params:
+    return {"ln": init_rms_norm(cfg.d_model),
+            "mamba": ssm_mod.init_mamba2(cfg, key)}
+
+
+def _init_encdec_block(cfg: ModelConfig, key: Array, *, cross: bool) -> Params:
+    ks = jax.random.split(key, 3)
+    block = {
+        "ln1": init_rms_norm(cfg.d_model),
+        "attn": init_attention(cfg, ks[0]),
+        "ln2": init_rms_norm(cfg.d_model),
+        "mlp": init_mlp(cfg, ks[1], kind="gelu"),
+    }
+    if cross:
+        block["ln_x"] = init_rms_norm(cfg.d_model)
+        block["xattn"] = init_attention(cfg, ks[2])
+    return block
+
+
+def init_params(cfg: ModelConfig, key: Array) -> Params:
+    k_embed, k_blocks, k_extra, k_head = jax.random.split(key, 4)
+    params: Params = {"embed": init_embed(cfg, k_embed),
+                      "final_norm": init_rms_norm(cfg.d_model)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_embed(cfg, k_head)
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        params["blocks"] = _stack_init(
+            lambda k: _init_dense_block(cfg, k), k_blocks, cfg.n_layers)
+        if fam == "vlm":
+            kp1, kp2 = jax.random.split(k_extra)
+            params["projector"] = {
+                "w1": jax.random.normal(kp1, (cfg.vision_dim, cfg.d_model),
+                                        jnp.float32) / math.sqrt(cfg.vision_dim),
+                "w2": jax.random.normal(kp2, (cfg.d_model, cfg.d_model),
+                                        jnp.float32) / math.sqrt(cfg.d_model),
+            }
+    elif fam == "ssm":
+        params["blocks"] = _stack_init(
+            lambda k: _init_rwkv_block(cfg, k), k_blocks, cfg.n_layers)
+    elif fam == "hybrid":
+        params["blocks"] = _stack_init(
+            lambda k: _init_mamba_block(cfg, k), k_blocks, cfg.n_layers)
+        params["shared_attn"] = _init_dense_block(
+            cfg.replace(family="dense"), k_extra)
+    elif fam == "audio":
+        params["blocks"] = _stack_init(
+            lambda k: _init_encdec_block(cfg, k, cross=True), k_blocks,
+            cfg.n_layers)
+        ke1, ke2 = jax.random.split(k_extra)
+        params["encoder"] = {
+            "blocks": _stack_init(
+                lambda k: _init_encdec_block(cfg, k, cross=False), ke1,
+                cfg.encoder_layers),
+            "norm": init_rms_norm(cfg.d_model),
+            "in_proj": jax.random.normal(
+                ke2, (1280 if cfg.d_model == 1280 else cfg.d_model,
+                      cfg.d_model), jnp.float32) / math.sqrt(cfg.d_model),
+        }
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+    return params
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Closed-form parameter count (used for MODEL_FLOPS = 6·N·D)."""
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.head_dim_
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    attn = d * hd * (h + 2 * kv) + h * hd * d
+    mlp = 3 * d * f
+    if cfg.family == "moe":
+        e = cfg.top_k if active_only else cfg.n_experts
+        mlp = e * 3 * d * f + d * cfg.n_experts
+    per_layer = attn + mlp + 2 * d
+    if cfg.family == "ssm":
+        lora = max(32, d // 16)
+        tmix = 5 * d * d + 2 * d * lora + 3 * d
+        cmix = 2 * d * f
+        per_layer = tmix + cmix + 2 * d
+    if cfg.family == "hybrid":
+        d_inner, hs, _ = ssm_mod.mamba2_dims(cfg)
+        n = cfg.ssm_state
+        per_layer = (d * (2 * d_inner + 2 * n + hs) + d_inner * d
+                     + cfg.ssm_conv * d_inner + 3 * hs + 2 * d_inner + d)
+    total = cfg.n_layers * per_layer
+    if cfg.family == "hybrid":
+        total += attn + 3 * d * f + 2 * d      # one shared block
+    if cfg.family == "audio":
+        # decoder blocks use a 2-matrix gelu MLP (not swiglu) and carry an
+        # extra cross-attention + its norm.
+        total -= cfg.n_layers * (d * f)        # swiglu → gelu correction
+        total += cfg.n_layers * (attn + d)     # cross attention + ln_x
+        total += cfg.encoder_layers * (attn + 2 * d * f + 2 * d)
+        total += d * d + d                     # encoder in_proj + final norm
+    if cfg.family == "vlm":
+        total += cfg.vision_dim * d + d * d
+    total += cfg.padded_vocab * d * (1 if cfg.tie_embeddings else 2)
+    return int(total)
+
+
+# ===========================================================================
+# Forward (train / prefill)
+# ===========================================================================
+
+def _sinusoidal(positions: Array, d: int) -> Array:
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / half)
+    ang = positions[:, None].astype(jnp.float32) * freqs[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+def _dense_block_fn(cfg: ModelConfig, bp: Params, x: Array, positions: Array
+                    ) -> tuple[Array, Array]:
+    h = attention_block(cfg, bp["attn"], rms_norm(x, bp["ln1"], cfg.norm_eps),
+                        positions)
+    x = x + h
+    inner = rms_norm(x, bp["ln2"], cfg.norm_eps)
+    if "moe" in bp:
+        m, aux = moe_mod.moe_block(cfg, bp["moe"], inner)
+    else:
+        m, aux = mlp_block(bp["mlp"], inner), jnp.zeros((), jnp.float32)
+    return x + m, aux
+
+
+def _rwkv_block_fn(cfg, bp, x):
+    h, _, _ = ssm_mod.rwkv6_time_mix(cfg, bp["tmix"],
+                                     rms_norm(x, bp["ln1"], cfg.norm_eps))
+    x = x + h
+    c, _ = ssm_mod.rwkv6_channel_mix(cfg, bp["cmix"],
+                                     rms_norm(x, bp["ln2"], cfg.norm_eps))
+    return x + c
+
+
+def _mamba_block_fn(cfg, bp, x):
+    h, _, _ = ssm_mod.mamba2_block(cfg, bp["mamba"],
+                                   rms_norm(x, bp["ln"], cfg.norm_eps))
+    return x + h
+
+
+def _scan_blocks(body, params_stacked: Params, x: Array, remat: bool):
+    if remat:
+        body = jax.checkpoint(body)
+
+    def step(carry, bp):
+        x, aux = carry
+        x2, aux2 = body(bp, _constrain(x))
+        return (_constrain(x2), aux + aux2), None
+
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)),
+                               params_stacked)
+    return x, aux
+
+
+def forward(cfg: ModelConfig, params: Params, batch: dict[str, Array], *,
+            remat: bool = True) -> tuple[Array, Array]:
+    """Returns (hidden (B, S, D), aux_loss).  ``batch`` needs "tokens" plus
+    "patch_embeds" (vlm) or "frames" (audio)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.arange(s)
+    x = _constrain(embed(params["embed"], tokens))
+
+    fam = cfg.family
+    if fam == "vlm":
+        pe = batch["patch_embeds"]                       # (B, P, vision_dim)
+        proj = jnp.einsum("bpv,vd->bpd", cast(pe), cast(params["projector"]["w1"]))
+        proj = jax.nn.gelu(proj)
+        proj = jnp.einsum("bpd,de->bpe", proj, cast(params["projector"]["w2"]))
+        x = jax.lax.dynamic_update_slice(x, proj.astype(x.dtype), (0, 0, 0))
+
+    blocks = _maybe_cast_blocks(params["blocks"])
+    if fam in ("dense", "moe", "vlm"):
+        x, aux = _scan_blocks(
+            lambda bp, h: _dense_block_fn(cfg, bp, h, positions),
+            blocks, x, remat)
+    elif fam == "ssm":
+        x, aux = _scan_blocks(
+            lambda bp, h: (_rwkv_block_fn(cfg, bp, h), jnp.zeros((), jnp.float32)),
+            blocks, x, remat)
+    elif fam == "hybrid":
+        x, aux = _hybrid_forward(cfg, dict(params, blocks=blocks,
+                                           shared_attn=_maybe_cast_blocks(
+                                               params["shared_attn"],
+                                               "shared_attn")),
+                                 x, positions, remat)
+    elif fam == "audio":
+        x, aux = _audio_forward(cfg, dict(params,
+                                          blocks=blocks,
+                                          encoder=_maybe_cast_blocks(
+                                              params["encoder"],
+                                              "encoder")),
+                                x, batch["frames"], positions, remat)
+    else:
+        raise ValueError(fam)
+
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def _hybrid_forward(cfg, params, x, positions, remat):
+    """Zamba2: groups of ``attn_every`` mamba layers, each followed by the
+    SHARED attention block (same weights every application)."""
+    g = cfg.attn_every
+    n_groups = cfg.n_layers // g
+    grouped = jax.tree.map(
+        lambda a: a.reshape((n_groups, g) + a.shape[1:]), params["blocks"])
+    shared = params["shared_attn"]
+
+    def group_body(bp_group, h):
+        def inner(carry, bp):
+            return _mamba_block_fn(cfg, bp, carry), None
+        h, _ = jax.lax.scan(inner, h, bp_group)
+        h2, _ = _dense_block_fn(cfg, shared, h, positions)
+        return h2, jnp.zeros((), jnp.float32)
+
+    return _scan_blocks(group_body, grouped, x, remat)
+
+
+def _audio_forward(cfg, params, x, frames, positions, remat):
+    """Whisper: encode stub frame embeddings, then causal decoder with
+    cross-attention.  Sinusoidal positions on both sides (DESIGN.md notes
+    the learned-table deviation)."""
+    enc = params["encoder"]
+    fpos = jnp.arange(frames.shape[1])
+    mem = cast(frames) @ cast(enc["in_proj"])
+    mem = mem + _sinusoidal(fpos, cfg.d_model)[None].astype(mem.dtype)
+
+    def enc_body(bp, h):
+        a = attention_block(cfg, bp["attn"], rms_norm(h, bp["ln1"], cfg.norm_eps),
+                            fpos, causal=False, rope=False)
+        h = h + a
+        m = mlp_block(bp["mlp"], rms_norm(h, bp["ln2"], cfg.norm_eps))
+        return h + m, jnp.zeros((), jnp.float32)
+
+    mem, _ = _scan_blocks(enc_body, enc["blocks"], mem, remat)
+    mem = rms_norm(mem, enc["norm"], cfg.norm_eps)
+
+    x = x + _sinusoidal(positions, cfg.d_model)[None].astype(x.dtype)
+
+    def dec_body(bp, h):
+        a = attention_block(cfg, bp["attn"], rms_norm(h, bp["ln1"], cfg.norm_eps),
+                            positions, causal=True, rope=False)
+        h = h + a
+        mk = jnp.einsum("bfd,dhk->bfhk", mem, cast(bp["xattn"]["wk"]))
+        mv = jnp.einsum("bfd,dhk->bfhk", mem, cast(bp["xattn"]["wv"]))
+        c = cross_attention_block(cfg, bp["xattn"],
+                                  rms_norm(h, bp["ln_x"], cfg.norm_eps),
+                                  mk.astype(h.dtype), mv.astype(h.dtype))
+        h = h + c
+        m = mlp_block(bp["mlp"], rms_norm(h, bp["ln2"], cfg.norm_eps))
+        return h + m, jnp.zeros((), jnp.float32)
+
+    return _scan_blocks(dec_body, params["blocks"], x, remat)
+
+
+def logits_fn(cfg: ModelConfig, params: Params, hidden: Array) -> Array:
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(table, hidden)
+
+
+# ===========================================================================
+# Decode (serve_step): one token against a preallocated cache
+# ===========================================================================
+
+def cache_len(cfg: ModelConfig, max_len: int) -> int:
+    if cfg.sliding_window and cfg.sliding_window < max_len:
+        return cfg.sliding_window
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    """Zeros/empty cache pytree for ``decode_step`` (also the ShapeDtypeStruct
+    template for the dry run)."""
+    hd, kv = cfg.head_dim_, cfg.n_kv_heads
+    s = cache_len(cfg, max_len)
+    fam = cfg.family
+    cache: Params = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.sliding_window and cfg.sliding_window < max_len:
+        cache["key_pos"] = jnp.full((s,), -1, jnp.int32)
+
+    def attn_cache(n, seq):
+        return {"k": jnp.zeros((n, batch, seq, kv, hd), dtype),
+                "v": jnp.zeros((n, batch, seq, kv, hd), dtype)}
+
+    if fam in ("dense", "moe", "vlm"):
+        cache["layers"] = attn_cache(cfg.n_layers, s)
+    elif fam == "ssm":
+        h, p = ssm_mod.rwkv_dims(cfg)
+        cache["layers"] = {
+            "state": jnp.zeros((cfg.n_layers, batch, h, p, p), jnp.float32),
+            "shift1": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model),
+                                jnp.float32),
+            "shift2": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model),
+                                jnp.float32),
+        }
+    elif fam == "hybrid":
+        d_inner, h, p = ssm_mod.mamba2_dims(cfg)
+        n_groups = cfg.n_layers // cfg.attn_every
+        cache["layers"] = {
+            "state": jnp.zeros((cfg.n_layers, batch, h, cfg.ssm_state, p),
+                               jnp.float32),
+            "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1, d_inner),
+                              jnp.float32),
+        }
+        cache["shared_attn"] = attn_cache(n_groups, s)
+    elif fam == "audio":
+        cache["layers"] = attn_cache(cfg.n_layers, s)
+        cache["cross"] = attn_cache(cfg.n_layers, cfg.n_frames)
+    return cache
+
+
+# ===========================================================================
+# Prefill: full-sequence forward that also materializes the decode cache
+# ===========================================================================
+
+def prefill(cfg: ModelConfig, params: Params, batch: dict[str, Array],
+            max_len: int) -> tuple[Array, Params]:
+    """Run the prompt through the model and build the decode cache.
+
+    Returns (last-token logits (B, 1, Vp), cache with pos = S).  For
+    sliding-window configs only the last ``window`` keys are retained
+    (ring-buffer layout, aligned so subsequent decode writes continue it).
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.arange(s)
+    x = _constrain(embed(params["embed"], tokens))
+    fam = cfg.family
+    s_cache = cache_len(cfg, max_len)
+    cache: Params = {"pos": jnp.asarray(s, jnp.int32)}
+
+    def clip_kv(k):  # keep the last s_cache positions, ring-aligned
+        if s <= s_cache:
+            pad = s_cache - s
+            return jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        tail = k[:, s - s_cache:]
+        shift = s % s_cache
+        return jnp.roll(tail, shift, axis=1)
+
+    if cfg.sliding_window and cfg.sliding_window < max_len:
+        # Position stored in ring slot i is the largest p < s with
+        # p % s_cache == i (or -1 if that slot is still empty).
+        i = jnp.arange(s_cache)
+        last = s - 1 - ((s - 1 - i) % s_cache)
+        cache["key_pos"] = jnp.where((last >= 0) & (last >= s - s_cache),
+                                     last, -1).astype(jnp.int32)
+
+    if fam in ("dense", "moe", "vlm"):
+        if fam == "vlm":
+            pe = batch["patch_embeds"]
+            proj = jnp.einsum("bpv,vd->bpd", cast(pe),
+                              cast(params["projector"]["w1"]))
+            proj = jax.nn.gelu(proj)
+            proj = jnp.einsum("bpd,de->bpe", proj,
+                              cast(params["projector"]["w2"]))
+            x = jax.lax.dynamic_update_slice(x, proj.astype(x.dtype), (0, 0, 0))
+
+        def body(carry, bp):
+            h = carry
+            xn = rms_norm(h, bp["ln1"], cfg.norm_eps)
+            q, k, v = qkv_project(cfg, bp["attn"], xn, positions)
+            o = sdpa(q, k, v, causal=True, window=cfg.sliding_window)
+            h = h + jnp.einsum("bshk,hkd->bsd", o, cast(bp["attn"]["wo"]),
+                               preferred_element_type=jnp.float32
+                               ).astype(h.dtype)
+            inner = rms_norm(h, bp["ln2"], cfg.norm_eps)
+            if "moe" in bp:
+                m, _ = moe_mod.moe_block(cfg, bp["moe"], inner)
+            else:
+                m = mlp_block(bp["mlp"], inner)
+            return _constrain(h + m), (clip_kv(k), clip_kv(v))
+
+        x, (ks, vs) = jax.lax.scan(body, x, _maybe_cast_blocks(params["blocks"]))
+        cache["layers"] = {"k": ks.astype(jnp.bfloat16),
+                           "v": vs.astype(jnp.bfloat16)}
+
+    elif fam == "ssm":
+        def body(carry, bp):
+            h = carry
+            xn = rms_norm(h, bp["ln1"], cfg.norm_eps)
+            o, sh1, st = ssm_mod.rwkv6_time_mix(cfg, bp["tmix"], xn)
+            h = h + o
+            xn2 = rms_norm(h, bp["ln2"], cfg.norm_eps)
+            c, sh2 = ssm_mod.rwkv6_channel_mix(cfg, bp["cmix"], xn2)
+            return _constrain(h + c), (st, sh1, xn2[:, -1:])
+
+        x, (st, s1, s2) = jax.lax.scan(body, x, _maybe_cast_blocks(params["blocks"]))
+        cache["layers"] = {"state": st,
+                           "shift1": s1.astype(jnp.float32),
+                           "shift2": s2.astype(jnp.float32)}
+
+    elif fam == "hybrid":
+        g = cfg.attn_every
+        n_groups = cfg.n_layers // g
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n_groups, g) + a.shape[1:]), params["blocks"])
+        shared = params["shared_attn"]
+
+        def group_body(carry, bp_g):
+            h = carry
+
+            def inner(c2, bp):
+                xn = rms_norm(c2, bp["ln"], cfg.norm_eps)
+                o, conv, st = ssm_mod.mamba2_block(cfg, bp["mamba"], xn)
+                return c2 + o, (conv, st)
+
+            h, (conv, st) = jax.lax.scan(inner, h, bp_g)
+            xn = rms_norm(h, shared["ln1"], cfg.norm_eps)
+            q, k, v = qkv_project(cfg, shared["attn"], xn, positions)
+            o = sdpa(q, k, v, causal=True, window=cfg.sliding_window)
+            h = h + jnp.einsum("bshk,hkd->bsd", o, cast(shared["attn"]["wo"]),
+                               preferred_element_type=jnp.float32
+                               ).astype(h.dtype)
+            m = mlp_block(shared["mlp"], rms_norm(h, shared["ln2"], cfg.norm_eps))
+            return _constrain(h + m), (conv, st, clip_kv(k), clip_kv(v))
+
+        x, (conv, st, ks, vs) = jax.lax.scan(group_body, x, grouped)
+        cache["layers"] = {
+            "conv": conv.reshape((cfg.n_layers,) + conv.shape[2:]).astype(jnp.float32),
+            "state": st.reshape((cfg.n_layers,) + st.shape[2:])}
+        cache["shared_attn"] = {"k": ks.astype(jnp.bfloat16),
+                                "v": vs.astype(jnp.bfloat16)}
+
+    elif fam == "audio":
+        enc = params["encoder"]
+        frames = batch["frames"]
+        fpos = jnp.arange(frames.shape[1])
+        mem = cast(frames) @ cast(enc["in_proj"])
+        mem = mem + _sinusoidal(fpos, cfg.d_model)[None].astype(mem.dtype)
+
+        def enc_body(carry, bp):
+            h = carry
+            a = attention_block(cfg, bp["attn"],
+                                rms_norm(h, bp["ln1"], cfg.norm_eps),
+                                fpos, causal=False, rope=False)
+            h = h + a
+            m = mlp_block(bp["mlp"], rms_norm(h, bp["ln2"], cfg.norm_eps))
+            return h + m, None
+
+        mem, _ = jax.lax.scan(enc_body, mem, enc["blocks"])
+        mem = rms_norm(mem, enc["norm"], cfg.norm_eps)
+
+        x = x + _sinusoidal(positions, cfg.d_model)[None].astype(x.dtype)
+
+        def dec_body(carry, bp):
+            h = carry
+            xn = rms_norm(h, bp["ln1"], cfg.norm_eps)
+            q, k, v = qkv_project(cfg, bp["attn"], xn, positions, rope=False)
+            o = sdpa(q, k, v, causal=True)
+            h = h + jnp.einsum("bshk,hkd->bsd", o, cast(bp["attn"]["wo"]),
+                               preferred_element_type=jnp.float32
+                               ).astype(h.dtype)
+            mk = jnp.einsum("bfd,dhk->bfhk", mem, cast(bp["xattn"]["wk"]))
+            mv = jnp.einsum("bfd,dhk->bfhk", mem, cast(bp["xattn"]["wv"]))
+            c = cross_attention_block(cfg, bp["xattn"],
+                                      rms_norm(h, bp["ln_x"], cfg.norm_eps),
+                                      mk.astype(h.dtype), mv.astype(h.dtype))
+            h = h + c
+            m = mlp_block(bp["mlp"], rms_norm(h, bp["ln2"], cfg.norm_eps))
+            return _constrain(h + m), (clip_kv(k), clip_kv(v), mk, mv)
+
+        x, (ks, vs, xks, xvs) = jax.lax.scan(dec_body, x, params["blocks"])
+        cache["layers"] = {"k": ks.astype(jnp.bfloat16),
+                           "v": vs.astype(jnp.bfloat16)}
+        cache["cross"] = {"k": xks.astype(jnp.bfloat16),
+                          "v": xvs.astype(jnp.bfloat16)}
+    else:
+        raise ValueError(fam)
+
+    h = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return logits_fn(cfg, params, h), cache
+
+
+def _attn_step(cfg, bp, x, k_cache, v_cache, pos, key_pos, rope=True):
+    """One-token attention against a cache layer; returns (out, k', v')."""
+    s_cache = k_cache.shape[1]
+    windowed = key_pos is not None
+    write_at = (pos % s_cache) if windowed else pos
+    q, k, v = qkv_project(cfg, bp, x, pos[None][None], rope=rope)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, write_at, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, write_at, 0, 0))
+    if windowed:
+        # ring buffer: mask by key_pos validity instead of a prefix length
+        out = _ring_sdpa(cfg, q, k_cache, v_cache, key_pos, pos, write_at)
+    else:
+        out = sdpa(q, k_cache, v_cache, causal=False, kv_len=pos + 1)
+    o = jnp.einsum("bshk,hkd->bsd", out, cast(bp["wo"]),
+                    preferred_element_type=jnp.float32)
+    return o.astype(x.dtype), k_cache, v_cache
+
+
+def _ring_sdpa(cfg, q, k_cache, v_cache, key_pos, pos, write_at):
+    import math as _math
+    b, _, h, hd = q.shape
+    kv = k_cache.shape[2]
+    rep = h // kv
+    qg = q.reshape(b, 1, kv, rep, hd)
+    scores = jnp.einsum("bqgrh,bkgh->bgrqk", qg, k_cache,
+                        preferred_element_type=jnp.float32)
+    scores = scores / _math.sqrt(hd)
+    valid = (key_pos >= 0) | (jnp.arange(k_cache.shape[1]) == write_at)
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, -1)
+    out = jnp.einsum("bgrqk,bkgh->bqgrh", probs.astype(q.dtype), v_cache)
+    return out.reshape(b, 1, h, hd)
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params,
+                tokens: Array) -> tuple[Array, Params]:
+    """One decode step for a (B, 1) token batch.  Returns (logits, cache')."""
+    pos = cache["pos"]
+    x = embed(params["embed"], tokens)
+    fam = cfg.family
+    key_pos = cache.get("key_pos")
+
+    if fam in ("dense", "moe", "vlm"):
+        def body(x, bp_and_cache):
+            bp, kc, vc = bp_and_cache
+            h, kc2, vc2 = _attn_step(cfg, bp["attn"],
+                                     rms_norm(x, bp["ln1"], cfg.norm_eps),
+                                     kc, vc, pos, key_pos)
+            x = x + h
+            inner = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            if "moe" in bp:
+                m, _ = moe_mod.moe_block(cfg, bp["moe"], inner)
+            else:
+                m = mlp_block(bp["mlp"], inner)
+            return x + m, (kc2, vc2)
+
+        def scan_fn(carry, xs):
+            bp, kc, vc = xs
+            x2, (kc2, vc2) = body(carry, (bp, kc, vc))
+            return x2, (kc2, vc2)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            scan_fn, x, (params["blocks"], cache["layers"]["k"],
+                         cache["layers"]["v"]))
+        new_layers = {"k": k_new, "v": v_new}
+
+    elif fam == "ssm":
+        def scan_fn(carry, xs):
+            bp, state, sh1, sh2 = xs
+            x = carry
+            h, sh1b, state2 = ssm_mod.rwkv6_time_mix_step(
+                cfg, bp["tmix"], rms_norm(x, bp["ln1"], cfg.norm_eps), sh1, state)
+            x = x + h
+            xn = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            c, sh2b = ssm_mod.rwkv6_channel_mix(cfg, bp["cmix"], xn,
+                                                shift_prev=sh2)
+            # channel-mix shift carry must be the *normalized* input
+            return x + c, (state2, sh1b, xn[:, -1:])
+
+        x, (st, s1, s2) = jax.lax.scan(
+            scan_fn, x, (params["blocks"], cache["layers"]["state"],
+                         cache["layers"]["shift1"], cache["layers"]["shift2"]))
+        new_layers = {"state": st, "shift1": s1, "shift2": s2}
+        # NOTE: rwkv token-shift operates on the *normalized* stream; we store
+        # the normalized x for both mixes (see test_ssm_decode_consistency).
+
+    elif fam == "hybrid":
+        g = cfg.attn_every
+        n_groups = cfg.n_layers // g
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n_groups, g) + a.shape[1:]), params["blocks"])
+        conv_g = cache["layers"]["conv"].reshape(
+            (n_groups, g) + cache["layers"]["conv"].shape[1:])
+        state_g = cache["layers"]["state"].reshape(
+            (n_groups, g) + cache["layers"]["state"].shape[1:])
+        shared = params["shared_attn"]
+
+        def group_fn(carry, xs):
+            bp_g, conv_gg, state_gg, kc, vc = xs
+            x = carry
+
+            def inner(c2, xs2):
+                bp, conv, st = xs2
+                h, conv2, st2 = ssm_mod.mamba2_step(
+                    cfg, bp["mamba"], rms_norm(c2, bp["ln"], cfg.norm_eps),
+                    conv, st)
+                return c2 + h, (conv2, st2)
+
+            x, (conv2, st2) = jax.lax.scan(inner, x, (bp_g, conv_gg, state_gg))
+            h, kc2, vc2 = _attn_step(cfg, shared["attn"],
+                                     rms_norm(x, shared["ln1"], cfg.norm_eps),
+                                     kc, vc, pos, key_pos)
+            x = x + h
+            m = mlp_block(shared["mlp"], rms_norm(x, shared["ln2"], cfg.norm_eps))
+            return x + m, (conv2, st2, kc2, vc2)
+
+        x, (conv_n, state_n, k_n, v_n) = jax.lax.scan(
+            group_fn, x, (grouped, conv_g, state_g,
+                          cache["shared_attn"]["k"], cache["shared_attn"]["v"]))
+        new_layers = {"conv": conv_n.reshape(cache["layers"]["conv"].shape),
+                      "state": state_n.reshape(cache["layers"]["state"].shape)}
+
+    elif fam == "audio":
+        x = x + _sinusoidal(pos[None], cfg.d_model)[None].astype(x.dtype)
+
+        def scan_fn(carry, xs):
+            bp, kc, vc, xk, xv = xs
+            x = carry
+            h, kc2, vc2 = _attn_step(cfg, bp["attn"],
+                                     rms_norm(x, bp["ln1"], cfg.norm_eps),
+                                     kc, vc, pos, key_pos, rope=False)
+            x = x + h
+            c = cross_attention_block(cfg, bp["xattn"],
+                                      rms_norm(x, bp["ln_x"], cfg.norm_eps),
+                                      xk, xv)
+            x = x + c
+            m = mlp_block(bp["mlp"], rms_norm(x, bp["ln2"], cfg.norm_eps))
+            return x + m, (kc2, vc2)
+
+        x, (k_n, v_n) = jax.lax.scan(
+            scan_fn, x, (params["blocks"], cache["layers"]["k"],
+                         cache["layers"]["v"], cache["cross"]["k"],
+                         cache["cross"]["v"]))
+        new_layers = {"k": k_n, "v": v_n}
+    else:
+        raise ValueError(fam)
+
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(cfg, params, h)
+
+    new_cache = dict(cache)
+    new_cache["pos"] = pos + 1
+    if fam == "hybrid":
+        new_cache["shared_attn"] = {"k": k_n, "v": v_n}
+        new_cache["layers"] = new_layers
+    else:
+        new_cache["layers"] = new_layers
+    if key_pos is not None:
+        s_cache = key_pos.shape[0]
+        new_cache["key_pos"] = key_pos.at[pos % s_cache].set(pos)
+    return logits, new_cache

@@ -1,0 +1,288 @@
+"""SSM / linear-recurrence blocks: RWKV-6 (Finch) and Mamba-2 (SSD).
+
+Both ride on ``repro.models.linear_attn``; the block code handles the
+projections, data-dependent decay, token shift / short conv, and gating.
+
+RWKV-6 [arXiv:2404.05892]: the headline Finch feature — *data-dependent
+decay* w_t = exp(-exp(w0 + tanh(x̃ Wa) Wb)) — is implemented exactly; the
+r/k/v/g token-shift interpolation uses static learned mixes (the paper's
+LoRA-ified mixes change capacity, not structure).
+
+Mamba-2 [arXiv:2405.21060-style SSD as used by Zamba2]: scalar-per-head
+decay exp(-softplus(dt)·exp(A_log)), depthwise causal conv front, RMSNorm
+gate, D skip.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import linear_attn as la
+from repro.models.layers import cast, init_rms_norm, rms_norm
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 time mix + channel mix
+# ---------------------------------------------------------------------------
+
+def rwkv_dims(cfg: ModelConfig) -> tuple[int, int]:
+    h = cfg.ssm_heads or cfg.d_model // 64
+    return h, cfg.d_model // h  # (heads, head_dim)
+
+
+def init_rwkv6_time_mix(cfg: ModelConfig, key: Array) -> Params:
+    d = cfg.d_model
+    h, hd = rwkv_dims(cfg)
+    lora = max(32, d // 16)
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "mix_r": jnp.full((d,), 0.5, jnp.float32),
+        "mix_k": jnp.full((d,), 0.5, jnp.float32),
+        "mix_v": jnp.full((d,), 0.5, jnp.float32),
+        "mix_g": jnp.full((d,), 0.5, jnp.float32),
+        "mix_w": jnp.full((d,), 0.5, jnp.float32),
+        "wr": jax.random.normal(ks[0], (d, d), jnp.float32) * s,
+        "wk": jax.random.normal(ks[1], (d, d), jnp.float32) * s,
+        "wv": jax.random.normal(ks[2], (d, d), jnp.float32) * s,
+        "wg": jax.random.normal(ks[3], (d, d), jnp.float32) * s,
+        "wo": jax.random.normal(ks[4], (d, d), jnp.float32) * s,
+        # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(x Wa) Wb))
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "wa": jax.random.normal(ks[5], (d, lora), jnp.float32) * s,
+        "wb": jax.random.normal(ks[6], (lora, d), jnp.float32) * (1.0 / math.sqrt(lora)),
+        "u": jax.random.normal(ks[7], (h, hd), jnp.float32) * 0.1,  # bonus
+        "ln_out": init_rms_norm(d),
+    }
+
+
+def _token_shift(x: Array, prev: Array | None) -> Array:
+    """x_{t-1} with x_{-1} = prev (decode carry) or 0."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def rwkv6_time_mix(cfg: ModelConfig, p: Params, x: Array, *,
+                   shift_prev: Array | None = None,
+                   state: Array | None = None, chunk: int = 64
+                   ) -> tuple[Array, Array, Array]:
+    """Returns (out, last_x (B,1,D) shift carry, final state (B,H,K,P))."""
+    b, s, d = x.shape
+    h, hd = rwkv_dims(cfg)
+    xp = _token_shift(x, shift_prev)
+
+    def mixed(name):
+        m = cast(p["mix_" + name])
+        return x * m + xp * (1.0 - m)
+
+    r = jnp.einsum("bsd,de->bse", mixed("r"), cast(p["wr"]),
+                   preferred_element_type=jnp.float32)
+    k = jnp.einsum("bsd,de->bse", mixed("k"), cast(p["wk"]),
+                   preferred_element_type=jnp.float32)
+    v = jnp.einsum("bsd,de->bse", mixed("v"), cast(p["wv"]),
+                   preferred_element_type=jnp.float32)
+    g = jnp.einsum("bsd,de->bse", mixed("g"), cast(p["wg"]),
+                   preferred_element_type=jnp.float32)
+    # data-dependent decay (per channel = per (head, key-dim))
+    wx = mixed("w")
+    lw = (p["w0"].astype(jnp.float32)
+          + jnp.tanh(jnp.einsum("bsd,dl->bsl", wx, cast(p["wa"]),
+                   preferred_element_type=jnp.float32).astype(jnp.float32))
+          @ p["wb"].astype(jnp.float32))
+    log_w = -jnp.exp(lw)                               # (B,S,D), ≤ 0
+
+    rh = r.reshape(b, s, h, hd)
+    kh = k.reshape(b, s, h, hd)
+    vh = v.reshape(b, s, h, hd)
+    lwh = log_w.reshape(b, s, h, hd)
+
+    out, new_state = la.linear_attention(
+        rh, kh, vh, lwh, chunk=min(chunk, s), inclusive=False,
+        u=p["u"].astype(jnp.float32), initial_state=state)
+    out = out.reshape(b, s, d).astype(x.dtype)
+    out = rms_norm(out, p["ln_out"], cfg.norm_eps) * jax.nn.silu(g)
+    out = jnp.einsum("bsd,de->bse", out, cast(p["wo"]),
+                     preferred_element_type=jnp.float32)
+    return out.astype(x.dtype), x[:, -1:], new_state
+
+
+def rwkv6_time_mix_step(cfg: ModelConfig, p: Params, x_t: Array,
+                        shift_prev: Array, state: Array
+                        ) -> tuple[Array, Array, Array]:
+    """Decode step: x_t (B,1,D).  Returns (out, new shift carry, new state)."""
+    b, _, d = x_t.shape
+    h, hd = rwkv_dims(cfg)
+
+    def mixed(name):
+        m = cast(p["mix_" + name])
+        return x_t * m + shift_prev * (1.0 - m)
+
+    r = jnp.einsum("bsd,de->bse", mixed("r"), cast(p["wr"]),
+                   preferred_element_type=jnp.float32)[:, 0]
+    k = jnp.einsum("bsd,de->bse", mixed("k"), cast(p["wk"]),
+                   preferred_element_type=jnp.float32)[:, 0]
+    v = jnp.einsum("bsd,de->bse", mixed("v"), cast(p["wv"]),
+                   preferred_element_type=jnp.float32)[:, 0]
+    g = jnp.einsum("bsd,de->bse", mixed("g"), cast(p["wg"]),
+                   preferred_element_type=jnp.float32)[:, 0]
+    wx = mixed("w")
+    lw = (p["w0"].astype(jnp.float32)
+          + jnp.tanh(jnp.einsum("bsd,dl->bsl", wx, cast(p["wa"]),
+                   preferred_element_type=jnp.float32).astype(jnp.float32))
+          @ p["wb"].astype(jnp.float32))[:, 0]
+    log_w = -jnp.exp(lw)
+
+    out, new_state = la.linear_attention_step(
+        r.reshape(b, h, hd).astype(jnp.float32),
+        k.reshape(b, h, hd).astype(jnp.float32),
+        v.reshape(b, h, hd).astype(jnp.float32),
+        log_w.reshape(b, h, hd), state, inclusive=False,
+        u=p["u"].astype(jnp.float32))
+    out = out.reshape(b, 1, d).astype(x_t.dtype)
+    out = rms_norm(out, p["ln_out"], cfg.norm_eps) * jax.nn.silu(g)[:, None]
+    out = jnp.einsum("bsd,de->bse", out, cast(p["wo"]),
+                     preferred_element_type=jnp.float32)
+    return out.astype(x_t.dtype), x_t, new_state
+
+
+def init_rwkv6_channel_mix(cfg: ModelConfig, key: Array) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    return {
+        "mix_k": jnp.full((d,), 0.5, jnp.float32),
+        "wk": jax.random.normal(k1, (d, f), jnp.float32) / math.sqrt(d),
+        "wv": jax.random.normal(k2, (f, d), jnp.float32) / math.sqrt(f),
+    }
+
+
+def rwkv6_channel_mix(cfg: ModelConfig, p: Params, x: Array, *,
+                      shift_prev: Array | None = None) -> tuple[Array, Array]:
+    xp = _token_shift(x, shift_prev)
+    m = cast(p["mix_k"])
+    xk = x * m + xp * (1.0 - m)
+    h = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, cast(p["wk"]),
+                   preferred_element_type=jnp.float32)))
+    return jnp.einsum("bsf,fd->bsd", h, cast(p["wv"]),
+                      preferred_element_type=jnp.float32).astype(x.dtype), x[:, -1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD) block
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(d_inner, n_heads, head_dim)."""
+    d_inner = 2 * cfg.d_model
+    heads = cfg.ssm_heads or d_inner // 64
+    return d_inner, heads, d_inner // heads
+
+
+def init_mamba2(cfg: ModelConfig, key: Array) -> Params:
+    d = cfg.d_model
+    d_inner, h, hd = mamba2_dims(cfg)
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    # in_proj emits [z (d_inner), x (d_inner), B (n), C (n), dt (h)]
+    d_proj = 2 * d_inner + 2 * n + h
+    return {
+        "w_in": jax.random.normal(ks[0], (d, d_proj), jnp.float32) * s,
+        "conv": jax.random.normal(ks[1], (cfg.ssm_conv, d_inner), jnp.float32)
+                * (1.0 / math.sqrt(cfg.ssm_conv)),
+        "conv_b": jnp.zeros((d_inner,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": init_rms_norm(d_inner),
+        "w_out": jax.random.normal(ks[2], (d_inner, d), jnp.float32)
+                 * (1.0 / math.sqrt(d_inner)),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array, prev: Array | None) -> tuple[Array, Array]:
+    """Depthwise causal conv1d.  x (B,S,C), w (W,C).  ``prev`` is the (B,W-1,C)
+    carry for decode.  Returns (out, new carry)."""
+    width = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * cast(w[i]) for i in range(width))
+    return out + cast(b), xp[:, -(width - 1):]
+
+
+def _mamba2_core(cfg, p, x):
+    """Shared projections: returns (z, xc_preconv, B, C, dt) split."""
+    d_inner, h, hd = mamba2_dims(cfg)
+    n = cfg.ssm_state
+    proj = jnp.einsum("bsd,de->bse", x, cast(p["w_in"]),
+                      preferred_element_type=jnp.float32)
+    z, xc, bmat, cmat, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1)
+    return z, xc, bmat, cmat, dt
+
+
+def mamba2_block(cfg: ModelConfig, p: Params, x: Array, *,
+                 conv_prev: Array | None = None, state: Array | None = None,
+                 chunk: int = 64) -> tuple[Array, Array, Array]:
+    """Returns (out, conv carry, ssm state)."""
+    b, s, _ = x.shape
+    d_inner, h, hd = mamba2_dims(cfg)
+    n = cfg.ssm_state
+
+    z, xc, bmat, cmat, dt = _mamba2_core(cfg, p, x)
+    xc, conv_carry = _causal_conv(xc, p["conv"], p["conv_b"], conv_prev)
+    xc = jax.nn.silu(xc)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # (B,S,H)
+    log_w = (-jnp.exp(p["a_log"])[None, None] * dt)[..., None]      # (B,S,H,1)
+    v = xc.reshape(b, s, h, hd).astype(jnp.float32)
+    # B/C shared across heads (ngroups=1): k_t = dt·B_t, r_t = C_t
+    k = (dt[..., None] * bmat[:, :, None, :].astype(jnp.float32))   # (B,S,H,N)
+    r = jnp.broadcast_to(cmat[:, :, None, :].astype(jnp.float32), (b, s, h, n))
+
+    out, new_state = la.linear_attention(
+        r, k, v, log_w, chunk=min(chunk, s), inclusive=True,
+        initial_state=state)
+    out = out + p["d_skip"][None, None, :, None] * v
+    out = out.reshape(b, s, d_inner).astype(x.dtype)
+    out = rms_norm(out * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return (jnp.einsum("bse,ed->bsd", out, cast(p["w_out"]),
+                       preferred_element_type=jnp.float32).astype(x.dtype),
+            conv_carry, new_state)
+
+
+def mamba2_step(cfg: ModelConfig, p: Params, x_t: Array, conv_prev: Array,
+                state: Array) -> tuple[Array, Array, Array]:
+    """Decode step, x_t (B,1,D)."""
+    b = x_t.shape[0]
+    d_inner, h, hd = mamba2_dims(cfg)
+    n = cfg.ssm_state
+
+    z, xc, bmat, cmat, dt = _mamba2_core(cfg, p, x_t)
+    xc, conv_carry = _causal_conv(xc, p["conv"], p["conv_b"], conv_prev)
+    xc = jax.nn.silu(xc)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    log_w = (-jnp.exp(p["a_log"])[None] * dt)[..., None]               # (B,H,1)
+    v = xc.reshape(b, h, hd).astype(jnp.float32)
+    k = dt[..., None] * bmat[:, 0, None, :].astype(jnp.float32)
+    r = jnp.broadcast_to(cmat[:, 0, None, :].astype(jnp.float32), (b, h, n))
+
+    out, new_state = la.linear_attention_step(r, k, v, log_w, state,
+                                              inclusive=True)
+    out = out + p["d_skip"][None, :, None] * v
+    out = out.reshape(b, 1, d_inner).astype(x_t.dtype)
+    out = rms_norm(out * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return (jnp.einsum("bse,ed->bsd", out, cast(p["w_out"]),
+                       preferred_element_type=jnp.float32).astype(x_t.dtype),
+            conv_carry, new_state)

@@ -1,0 +1,76 @@
+"""AdamW + LR schedules, hand-rolled (optax is not in the environment).
+
+Optimizer state mirrors the parameter pytree (m, v per leaf) and inherits
+its sharding, which is what makes ZeRO-style sharded optimizer state free:
+the state shards wherever the parameter shards.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    m: Any
+    v: Any
+
+
+def init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def update(params, grads, state: AdamWState, *, lr: Array | float,
+           b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+           weight_decay: float = 0.1,
+           grad_clip: float = 1.0) -> tuple[Any, AdamWState]:
+    """One AdamW step with global-norm gradient clipping."""
+    if grad_clip:
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    step = state.step + 1
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.m, grads)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                         state.v, grads)
+
+    def leaf_update(p, m, v):
+        mhat = m / b1c
+        vhat = v / b2c
+        upd = mhat / (jnp.sqrt(vhat) + eps)
+        # decoupled weight decay on matrices only (norms/biases excluded by
+        # dimensionality — the standard heuristic)
+        wd = weight_decay if p.ndim >= 2 else 0.0
+        return p - lr * (upd + wd * p)
+
+    new_params = jax.tree.map(leaf_update, params, new_m, new_v)
+    return new_params, AdamWState(step=step, m=new_m, v=new_v)
+
+
+def global_norm(tree) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def cosine_schedule(step: Array, *, peak_lr: float, warmup: int,
+                    total: int, min_ratio: float = 0.1) -> Array:
+    """Linear warmup + cosine decay to ``min_ratio``·peak."""
+    stepf = step.astype(jnp.float32)
+    warm = stepf / max(warmup, 1)
+    prog = jnp.clip((stepf - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(math.pi * prog))
+    return peak_lr * jnp.where(stepf < warmup, warm, cos)

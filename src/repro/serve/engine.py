@@ -1,0 +1,185 @@
+"""Batched serving engine: slot-based continuous batching over the
+prefill / decode_step pair from ``repro.models.model``.
+
+The engine owns a fixed pool of ``batch`` decode slots sharing one
+preallocated KV cache (the decode_32k / long_500k dry-run shapes are this
+engine's two production configurations).  Requests are admitted into free
+slots; each engine step runs ONE fused decode_step for the whole pool, so
+throughput is batch-amortized exactly as in the paper's multi-client
+sampler — many logical streams, one vectorized sweep.
+
+Slot lifecycle:
+  admit()   — prefill the prompt (per-request), scatter its KV into the
+              pool cache at the slot index, mark the slot live.
+  step()    — one decode_step for all live slots; dead slots decode
+              garbage that is masked out (the SPMD-friendly analogue of
+              dynamic batching — no recompilation when occupancy changes).
+  harvest() — collect finished sequences (EOS or max_tokens).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+
+Array = jax.Array
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 32
+    # filled by the engine:
+    output: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class EngineConfig:
+    batch: int = 8                # decode slot count
+    max_len: int = 512            # KV capacity per slot
+    eos_id: int = -1              # -1: never stop on a token
+    greedy: bool = True
+    temperature: float = 1.0
+
+
+class Engine:
+    """Single-host engine; the distributed version shards the same cache
+    pytree with ``repro.train.sharding.cache_specs`` (see launch/serve.py)."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, ecfg: EngineConfig,
+                 key: Array | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.cache = model_lib.init_cache(cfg, ecfg.batch, ecfg.max_len)
+        # per-slot bookkeeping (host side)
+        self.slot_req: list[Request | None] = [None] * ecfg.batch
+        self.slot_pos = np.zeros(ecfg.batch, np.int32)   # tokens generated
+        self.last_tok = np.zeros(ecfg.batch, np.int32)
+        self._decode = jax.jit(
+            lambda params, cache, toks: model_lib.decode_step(
+                cfg, params, cache, toks))
+        self._prefill = jax.jit(
+            lambda params, batch: model_lib.prefill(cfg, params, batch,
+                                                    ecfg.max_len))
+
+    # ------------------------------------------------------------------
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    @property
+    def live(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    def _scatter_cache(self, slot: int, req_cache: Any) -> None:
+        """Copy a single-request prefill cache into slot ``slot`` of the
+        pool cache.  Batch is dim 1 of every (L, B, ...) leaf."""
+
+        def scatter(pool: Array, one: Array) -> Array:
+            if pool.ndim == 0 or pool is one:
+                return pool
+            return pool.at[:, slot:slot + 1].set(one.astype(pool.dtype))
+
+        pool_layers = jax.tree.map(scatter, self.cache["layers"],
+                                   req_cache["layers"])
+        self.cache = dict(self.cache)
+        self.cache["layers"] = pool_layers
+        if "shared_attn" in self.cache:
+            self.cache["shared_attn"] = jax.tree.map(
+                scatter, self.cache["shared_attn"], req_cache["shared_attn"])
+        if "cross" in self.cache:
+            self.cache["cross"] = jax.tree.map(
+                scatter, self.cache["cross"], req_cache["cross"])
+
+    def admit(self, req: Request, extra_inputs: dict[str, Array] | None = None
+              ) -> bool:
+        """Prefill ``req`` into a free slot.  Returns False when full.
+
+        NOTE: the pool decodes all slots at one shared position counter, so
+        this engine pads/aligns prompts to a common length: the admitted
+        prompt must have length == current cache['pos'] (0 for the first
+        admit of a generation wave).  launch/serve.py batches a wave of
+        same-length prompts, which is the production pattern for benchmark
+        serving; ragged admission would use per-slot position tracking.
+        """
+        free = self.free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+        if extra_inputs:
+            batch.update(extra_inputs)
+        logits, req_cache = self._prefill(self.params, batch)
+        self._scatter_cache(slot, req_cache)
+        self.cache["pos"] = req_cache["pos"]
+        if "key_pos" in req_cache:
+            self.cache["key_pos"] = req_cache["key_pos"]
+        tok = int(jnp.argmax(logits[0, 0, :self.cfg.vocab_size]))
+        req.output.append(tok)
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = 1
+        self.last_tok[slot] = tok
+        return True
+
+    def step(self) -> None:
+        """One fused decode step for every live slot."""
+        toks = jnp.asarray(self.last_tok, jnp.int32)[:, None]
+        logits, self.cache = self._decode(self.params, self.cache, toks)
+        logits = logits[:, 0, :self.cfg.vocab_size]
+        if self.ecfg.greedy:
+            nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        else:
+            self.key, k = jax.random.split(self.key)
+            nxt = np.asarray(jax.random.categorical(
+                k, logits / self.ecfg.temperature, axis=-1), np.int32)
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            tok = int(nxt[i])
+            req.output.append(tok)
+            self.slot_pos[i] += 1
+            self.last_tok[i] = tok
+            if (tok == self.ecfg.eos_id
+                    or self.slot_pos[i] >= req.max_new_tokens):
+                req.done = True
+
+    def harvest(self) -> list[Request]:
+        done = []
+        for i, req in enumerate(self.slot_req):
+            if req is not None and req.done:
+                done.append(req)
+                self.slot_req[i] = None
+        return done
+
+    # ------------------------------------------------------------------
+    def run(self, requests: list[Request],
+            extra_inputs: Callable[[Request], dict[str, Array]] | None = None,
+            ) -> list[Request]:
+        """Drive a full wave of same-length-prompt requests to completion."""
+        pending = list(requests)
+        finished: list[Request] = []
+        # Admit as many as fit (same prompt length ⇒ shared cache pos).
+        while pending and self.free_slots():
+            r = pending.pop(0)
+            self.admit(r, extra_inputs(r) if extra_inputs else None)
+        while self.live:
+            self.step()
+            finished.extend(self.harvest())
+            # same-wave refill only when cache positions still align
+            if not self.live and pending:
+                self.cache = model_lib.init_cache(
+                    self.cfg, self.ecfg.batch, self.ecfg.max_len)
+                while pending and self.free_slots():
+                    r = pending.pop(0)
+                    self.admit(r, extra_inputs(r) if extra_inputs else None)
+        return finished

@@ -1,0 +1,40 @@
+"""Shared test fixtures.
+
+NOTE: XLA_FLAGS device-count forcing is deliberately NOT set here — smoke
+tests and benchmarks must see the single real CPU device.  Multi-device
+tests spawn subprocesses (tests/test_distributed.py) or use the dry-run
+entry point, which sets the flag before importing jax.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+def make_synthetic_corpus(n_topics, vocab, n_docs, doc_len, seed=0,
+                          theta_conc=0.2, phi_conc=0.4):
+    """Block-structured synthetic corpus with known topics: each true topic
+    owns a contiguous vocabulary block (easy to verify recovery)."""
+    rng = np.random.default_rng(seed)
+    true_phi = np.zeros((n_topics, vocab))
+    block = vocab // n_topics
+    for k in range(n_topics):
+        true_phi[k, k * block:(k + 1) * block] = rng.dirichlet(
+            np.ones(block) * phi_conc)
+    docs = []
+    for _ in range(n_docs):
+        theta = rng.dirichlet(np.ones(n_topics) * theta_conc)
+        zs = rng.choice(n_topics, size=doc_len, p=theta)
+        docs.append(np.array([rng.choice(vocab, p=true_phi[z]) for z in zs]))
+    tokens = jnp.asarray(np.stack(docs), dtype=jnp.int32)
+    mask = jnp.ones((n_docs, doc_len), dtype=bool)
+    return tokens, mask, true_phi
+
+
+@pytest.fixture(scope="session")
+def small_corpus():
+    return make_synthetic_corpus(n_topics=6, vocab=120, n_docs=64, doc_len=40,
+                                 seed=1)

@@ -1,0 +1,86 @@
+"""Unit + property tests for the Walker alias method (paper §3.1)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import alias
+
+
+def implied_distribution(table: alias.AliasTable) -> np.ndarray:
+    """Reconstruct the distribution an alias table encodes: each slot i
+    contributes prob[i]/K to outcome i and (1-prob[i])/K to alias[i]."""
+    prob = np.asarray(table.prob)
+    al = np.asarray(table.alias)
+    k = prob.shape[-1]
+    flat_p = prob.reshape(-1, k)
+    flat_a = al.reshape(-1, k)
+    out = np.zeros_like(flat_p)
+    for r in range(flat_p.shape[0]):
+        for i in range(k):
+            out[r, i] += flat_p[r, i] / k
+            out[r, flat_a[r, i]] += (1 - flat_p[r, i]) / k
+    return out.reshape(prob.shape)
+
+
+@pytest.mark.parametrize("k", [2, 3, 7, 16, 64, 257])
+def test_build_exactness(k):
+    """The table must encode exactly the normalized input distribution."""
+    p = jax.random.gamma(jax.random.PRNGKey(k), 0.3, (k,)) + 1e-6
+    t = alias.build(p)
+    imp = implied_distribution(t)
+    ref = np.asarray(p / p.sum())
+    np.testing.assert_allclose(imp, ref, atol=1e-5)
+
+
+def test_build_batch_shapes():
+    p = jax.random.uniform(jax.random.PRNGKey(0), (4, 5, 16)) + 0.01
+    t = alias.build(p)
+    assert t.prob.shape == (4, 5, 16)
+    assert t.alias.shape == (4, 5, 16)
+    assert t.mass.shape == (4, 5)
+    np.testing.assert_allclose(np.asarray(t.mass), np.asarray(p.sum(-1)),
+                               rtol=1e-5)
+
+
+def test_degenerate_distributions():
+    """Point masses and zero rows must not produce NaN tables."""
+    k = 8
+    point = jnp.zeros((k,)).at[3].set(5.0)
+    t = alias.build(point)
+    imp = implied_distribution(t)
+    assert imp[3] == pytest.approx(1.0, abs=1e-6)
+    zero = jnp.zeros((k,))
+    t0 = alias.build(zero)  # falls back to uniform
+    imp0 = implied_distribution(t0)
+    np.testing.assert_allclose(imp0, np.full(k, 1 / k), atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 100), st.integers(0, 2**31 - 1))
+def test_property_mass_conservation(k, seed):
+    """Property: for any distribution, the implied table distribution equals
+    the input (total mass preserved slotwise) and prob entries are in [0,1]."""
+    p = jax.random.gamma(jax.random.PRNGKey(seed), 0.5, (k,)) + 1e-5
+    t = alias.build(p)
+    assert bool(jnp.all(t.prob >= -1e-6)) and bool(jnp.all(t.prob <= 1 + 1e-6))
+    assert bool(jnp.all((t.alias >= 0) & (t.alias < k)))
+    imp = implied_distribution(t)
+    np.testing.assert_allclose(imp, np.asarray(p / p.sum()), atol=2e-5)
+
+
+def test_sample_rows_statistics():
+    """Empirical sampling distribution matches the table's distribution."""
+    key = jax.random.PRNGKey(0)
+    p = jax.random.gamma(key, 0.5, (5, 32)) + 1e-3
+    t = alias.build(p)
+    rows = jnp.repeat(jnp.arange(5), 20000)
+    s = np.asarray(alias.sample_rows(t, rows, jax.random.PRNGKey(1))).reshape(5, -1)
+    for r in range(5):
+        emp = np.bincount(s[r], minlength=32) / s.shape[1]
+        ref = np.asarray(p[r] / p[r].sum())
+        assert 0.5 * np.abs(emp - ref).sum() < 0.03

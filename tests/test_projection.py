@@ -1,0 +1,128 @@
+"""Property tests for parameter projection (paper §5.5, Algorithms 1-3)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import projection, ps
+
+
+def _random_stats(seed, v=24, k=8):
+    key = jax.random.PRNGKey(seed)
+    km, ks = jax.random.split(key)
+    # Deliberately inconsistent statistics (as relaxed consistency produces).
+    m = jax.random.randint(km, (v, k), -3, 20).astype(jnp.float32)
+    s = jax.random.randint(ks, (v, k), -3, 25).astype(jnp.float32)
+    return {"m_wk": m, "s_wk": s, "m_k": m.sum(0), "s_k": s.sum(0)}
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_projection_satisfies_constraints(seed):
+    """After projection every PDP constraint holds (the feasible polytope)."""
+    stats = _random_stats(seed)
+    out = projection.project(stats, projection.PDP_RULES,
+                             projection.PDP_AGGREGATES)
+    m, s = out["m_wk"], out["s_wk"]
+    assert bool(jnp.all(m >= 0))
+    assert bool(jnp.all(s >= 0))
+    assert bool(jnp.all(s <= m))
+    assert bool(jnp.all(jnp.where(m > 0, s >= 1, s == 0)))
+    np.testing.assert_allclose(np.asarray(out["m_k"]), np.asarray(m.sum(0)),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out["s_k"]), np.asarray(s.sum(0)),
+                               rtol=1e-6)
+    assert float(projection.count_violations(out, projection.PDP_RULES)) == 0.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_projection_idempotent(seed):
+    """Projecting twice equals projecting once (proximal operator property)."""
+    stats = _random_stats(seed)
+    once = projection.project(stats, projection.PDP_RULES,
+                              projection.PDP_AGGREGATES)
+    twice = projection.project(once, projection.PDP_RULES,
+                               projection.PDP_AGGREGATES)
+    for name in once:
+        np.testing.assert_array_equal(np.asarray(once[name]),
+                                      np.asarray(twice[name]))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_projection_fixes_feasible_points(seed):
+    """A feasible point is left untouched (projection = identity on the set)."""
+    key = jax.random.PRNGKey(seed)
+    m = jax.random.randint(key, (16, 4), 0, 10).astype(jnp.float32)
+    s = jnp.where(m > 0, jnp.maximum(jnp.minimum(m, 1.0 + m // 2), 1.0), 0.0)
+    stats = {"m_wk": m, "s_wk": s, "m_k": m.sum(0), "s_k": s.sum(0)}
+    out = projection.project(stats, projection.PDP_RULES,
+                             projection.PDP_AGGREGATES)
+    for name in stats:
+        np.testing.assert_array_equal(np.asarray(stats[name]),
+                                      np.asarray(out[name]))
+
+
+def test_on_demand_projection():
+    """Algorithm 3: the pull-path filter makes reads safe."""
+    on_pull = projection.make_on_demand(projection.PDP_RULES)
+    stats = _random_stats(3)
+    out = on_pull(stats)
+    assert float(projection.count_violations(out, projection.PDP_RULES)) == 0.0
+
+
+class TestFilters:
+    def test_dense_filter_identity(self):
+        delta = jax.random.normal(jax.random.PRNGKey(0), (32, 8))
+        out = ps.filter_delta(delta, ps.FilterSpec(kind="dense"),
+                              jax.random.PRNGKey(1))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(delta))
+
+    def test_threshold_filter(self):
+        delta = jnp.zeros((8, 4)).at[2].set(5.0).at[5].set(0.01)
+        out = ps.filter_delta(delta, ps.FilterSpec(kind="threshold",
+                                                   threshold=1.0),
+                              jax.random.PRNGKey(0))
+        assert float(jnp.abs(out[2]).sum()) > 0
+        assert float(jnp.abs(out[5]).sum()) == 0
+
+    def test_topk_keeps_largest_rows(self):
+        delta = jax.random.normal(jax.random.PRNGKey(0), (64, 8))
+        spec = ps.FilterSpec(kind="topk", k_rows=8, random_rows=0)
+        out = ps.filter_delta(delta, spec, jax.random.PRNGKey(1))
+        mags = np.abs(np.asarray(delta)).sum(-1)
+        top = set(np.argsort(-mags)[:8].tolist())
+        kept = set(np.nonzero(np.abs(np.asarray(out)).sum(-1) > 0)[0].tolist())
+        assert kept == top
+        # kept rows are unmodified
+        for r in top:
+            np.testing.assert_array_equal(np.asarray(out[r]),
+                                          np.asarray(delta[r]))
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 16), st.integers(0, 8))
+    def test_property_compress_roundtrip_subset(self, seed, k_rows, random_rows):
+        """compress→decompress never invents mass: the result equals delta on
+        selected rows and zero elsewhere; no row is double-applied."""
+        delta = jax.random.normal(jax.random.PRNGKey(seed), (32, 4))
+        spec = ps.FilterSpec(kind="topk", k_rows=k_rows, random_rows=random_rows)
+        comp = ps.compress_delta(delta, spec, jax.random.PRNGKey(seed + 1))
+        dense = ps.decompress_delta(comp, 32, 4)
+        d, o = np.asarray(delta), np.asarray(dense)
+        for r in range(32):
+            row_ok = np.allclose(o[r], d[r], atol=1e-6) or np.allclose(o[r], 0)
+            assert row_ok, f"row {r} corrupted (double-applied?)"
+
+    def test_residual_error_feedback(self):
+        delta = jax.random.normal(jax.random.PRNGKey(0), (16, 4))
+        spec = ps.FilterSpec(kind="topk", k_rows=4, random_rows=0)
+        sent = ps.filter_delta(delta, spec, jax.random.PRNGKey(1))
+        resid = ps.residual_update(jnp.zeros_like(delta), delta, sent)
+        # residual + sent == delta exactly: nothing is ever lost (eventual
+        # consistency guarantee).
+        np.testing.assert_allclose(np.asarray(resid + sent), np.asarray(delta),
+                                   atol=1e-6)

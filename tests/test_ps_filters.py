@@ -1,0 +1,99 @@
+"""Property tests for the parameter-server layer: communication filters,
+compression, error feedback (paper §5.3)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ps
+
+KEY = jax.random.PRNGKey(0)
+
+
+@st.composite
+def delta_matrices(draw):
+    v = draw(st.integers(4, 40))
+    k = draw(st.integers(2, 12))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    # Sparse-ish integer deltas like real count updates (pos & neg).
+    dense = rng.integers(-3, 4, size=(v, k)).astype(np.float32)
+    mask = rng.random((v, k)) < 0.3
+    return jnp.asarray(dense * mask)
+
+
+@given(delta_matrices(), st.integers(1, 10), st.integers(0, 5))
+@settings(max_examples=25, deadline=None)
+def test_compress_decompress_subset_of_delta(delta, k_rows, random_rows):
+    """Decompressed delta only contains rows of the original, each at most
+    once (no double-apply from duplicated indices)."""
+    spec = ps.FilterSpec(kind="topk", k_rows=k_rows, random_rows=random_rows)
+    comp = ps.compress_delta(delta, spec, KEY)
+    dense = ps.decompress_delta(comp, delta.shape[0], delta.shape[1])
+    # every row of `dense` equals the original row or zero
+    orig = np.asarray(delta)
+    got = np.asarray(dense)
+    for r in range(orig.shape[0]):
+        ok = np.allclose(got[r], orig[r]) or np.allclose(got[r], 0.0)
+        assert ok, f"row {r} corrupted: {got[r]} vs {orig[r]}"
+
+
+@given(delta_matrices())
+@settings(max_examples=25, deadline=None)
+def test_topk_keeps_largest_rows(delta):
+    """The magnitude-priority rule: every kept row's L1 mass ≥ any dropped
+    row's (modulo the uniformly-sampled anti-starvation rows)."""
+    spec = ps.FilterSpec(kind="topk", k_rows=3, random_rows=0)
+    filt = ps.filter_delta(delta, spec, KEY)
+    mag = np.abs(np.asarray(delta)).sum(-1)
+    kept = np.abs(np.asarray(filt)).sum(-1) > 0
+    if kept.sum() == 0:
+        return
+    min_kept = mag[kept].min()
+    dropped = mag[~kept]
+    if dropped.size:
+        assert min_kept >= dropped.max() - 1e-6
+
+
+@given(delta_matrices(), st.integers(1, 6))
+@settings(max_examples=25, deadline=None)
+def test_error_feedback_conserves_mass(delta, k_rows):
+    """residual + sent == accumulated delta, exactly — the eventual-
+    consistency invariant: nothing is ever lost, only delayed."""
+    spec = ps.FilterSpec(kind="topk", k_rows=k_rows, random_rows=1)
+    residual = jnp.zeros_like(delta)
+    total_sent = jnp.zeros_like(delta)
+    for i in range(4):
+        acc = residual + delta
+        sent = ps.filter_delta(acc, spec, jax.random.fold_in(KEY, i))
+        residual = acc - sent
+        total_sent = total_sent + sent
+    np.testing.assert_allclose(
+        np.asarray(total_sent + residual), np.asarray(delta) * 4, atol=1e-4)
+
+
+def test_threshold_filter():
+    delta = jnp.asarray([[5.0, 0.0], [0.1, 0.1], [0.0, -3.0]])
+    spec = ps.FilterSpec(kind="threshold", threshold=1.0)
+    out = np.asarray(ps.filter_delta(delta, spec, KEY))
+    assert np.allclose(out[0], [5.0, 0.0])
+    assert np.allclose(out[1], 0.0)       # below threshold → withheld
+    assert np.allclose(out[2], [0.0, -3.0])
+
+
+def test_dense_filter_identity():
+    delta = jax.random.normal(KEY, (8, 4))
+    out = ps.filter_delta(delta, ps.FilterSpec(), KEY)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(delta))
+
+
+def test_small_leaf_passthrough():
+    """k_rows larger than the leaf's rows must keep the whole leaf."""
+    delta = jax.random.normal(KEY, (2, 3))
+    spec = ps.FilterSpec(kind="topk", k_rows=64, random_rows=16)
+    out = ps.filter_delta(delta, spec, KEY)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(delta), atol=1e-6)

@@ -1,0 +1,155 @@
+"""Integration tests: LDA / PDP / HDP samplers converge and stay consistent."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hdp, lda, pdp, projection
+
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestLDA:
+    @pytest.mark.parametrize("method", ["exact", "mhw"])
+    def test_convergence_and_consistency(self, small_corpus, method):
+        tokens, mask, _ = small_corpus
+        cfg = lda.LDAConfig(n_topics=6, vocab_size=120, alpha=0.1, beta=0.01,
+                            mh_steps=2)
+        local, shared = lda.init_state(cfg, tokens, mask, KEY)
+        p0 = lda.perplexity(cfg, shared, tokens[:16], mask[:16],
+                            jax.random.PRNGKey(5))
+        for it in range(25):
+            tables, stale = lda.build_alias(cfg, shared)
+            local, dwk, dk = lda.sweep(cfg, local, shared, tables, stale,
+                                       tokens, mask, jax.random.fold_in(KEY, it),
+                                       method=method)
+            shared = lda.apply_delta(shared, dwk, dk)
+        p1 = lda.perplexity(cfg, shared, tokens[:16], mask[:16],
+                            jax.random.PRNGKey(5))
+        # Counts remain exactly consistent with assignments (invariant).
+        nwk = lda.count_wk(cfg, tokens, local.z, mask)
+        assert float(jnp.abs(nwk - shared.n_wk).max()) == 0.0
+        assert float(jnp.abs(shared.n_wk.sum(0) - shared.n_k).max()) < 1e-3
+        assert float(p1) < float(p0) * 0.7
+
+    def test_mhw_matches_exact_quality(self, small_corpus):
+        """Paper claim: AliasLDA reaches perplexity ≥ as good as the sparse
+        sampler (Fig 4) — check final perplexities are within 15%."""
+        tokens, mask, _ = small_corpus
+        cfg = lda.LDAConfig(n_topics=6, vocab_size=120, mh_steps=4)
+        finals = {}
+        for method in ["exact", "mhw"]:
+            local, shared = lda.init_state(cfg, tokens, mask, KEY)
+            for it in range(30):
+                tables, stale = lda.build_alias(cfg, shared)
+                local, dwk, dk = lda.sweep(
+                    cfg, local, shared, tables, stale, tokens, mask,
+                    jax.random.fold_in(KEY, it), method=method)
+                shared = lda.apply_delta(shared, dwk, dk)
+            finals[method] = float(lda.perplexity(
+                cfg, shared, tokens[:16], mask[:16], jax.random.PRNGKey(5)))
+        assert finals["mhw"] < finals["exact"] * 1.15
+
+    def test_topics_per_word_decreases(self, small_corpus):
+        """Paper Fig 4 middle panel: topics/word concentrates over time."""
+        tokens, mask, _ = small_corpus
+        cfg = lda.LDAConfig(n_topics=6, vocab_size=120)
+        local, shared = lda.init_state(cfg, tokens, mask, KEY)
+        t0 = float(lda.topics_per_word(shared))
+        for it in range(20):
+            tables, stale = lda.build_alias(cfg, shared)
+            local, dwk, dk = lda.sweep(cfg, local, shared, tables, stale,
+                                       tokens, mask, jax.random.fold_in(KEY, it))
+            shared = lda.apply_delta(shared, dwk, dk)
+        t1 = float(lda.topics_per_word(shared))
+        assert t1 < t0
+
+
+class TestPDP:
+    @pytest.mark.parametrize("method", ["exact", "mhw"])
+    def test_convergence_with_projection(self, small_corpus, method):
+        tokens, mask, _ = small_corpus
+        cfg = pdp.PDPConfig(n_topics=6, vocab_size=120, alpha=0.1,
+                            discount=0.1, concentration=5.0, mh_steps=4,
+                            stirling_n_max=256)
+        local, shared = pdp.init_state(cfg, tokens, mask, KEY)
+        p0 = pdp.perplexity(cfg, shared, tokens[:16], mask[:16],
+                            jax.random.PRNGKey(5))
+        for it in range(30):
+            tables, stale = pdp.build_alias(cfg, shared)
+            local, dm, ds = pdp.sweep(cfg, local, shared, tables, stale,
+                                      tokens, mask, jax.random.fold_in(KEY, it),
+                                      method=method)
+            shared = pdp.apply_delta(shared, dm, ds)
+            stats = projection.project(
+                {"m_wk": shared.m_wk, "s_wk": shared.s_wk,
+                 "m_k": shared.m_k, "s_k": shared.s_k},
+                projection.PDP_RULES, projection.PDP_AGGREGATES)
+            shared = pdp.SharedStats(**stats)
+        p1 = pdp.perplexity(cfg, shared, tokens[:16], mask[:16],
+                            jax.random.PRNGKey(5))
+        assert float(p1) < float(p0) * 0.65
+        # Constraints hold after projection.
+        viol = projection.count_violations(
+            {"m_wk": shared.m_wk, "s_wk": shared.s_wk}, projection.PDP_RULES)
+        assert float(viol) == 0.0
+
+
+class TestHDP:
+    @pytest.mark.parametrize("method", ["exact", "mhw"])
+    def test_convergence(self, small_corpus, method):
+        tokens, mask, _ = small_corpus
+        cfg = hdp.HDPConfig(n_topics=12, vocab_size=120, b0=1.0, b1=2.0,
+                            mh_steps=4)
+        local, shared = hdp.init_state(cfg, tokens, mask, KEY)
+        p0 = hdp.perplexity(cfg, shared, tokens[:16], mask[:16],
+                            jax.random.PRNGKey(5))
+        for it in range(30):
+            tables, stale = hdp.build_alias(cfg, shared)
+            local, dwk, dk = hdp.sweep(cfg, local, shared, tables, stale,
+                                       tokens, mask, jax.random.fold_in(KEY, it),
+                                       method=method)
+            shared = hdp.apply_delta(cfg, shared, dwk, dk)
+            local, m_k = hdp.resample_tables(cfg, local, shared,
+                                             jax.random.fold_in(KEY, 1000 + it))
+            theta0 = hdp.resample_theta0(cfg, m_k, jax.random.fold_in(KEY, 2000 + it))
+            shared = hdp.apply_delta(cfg, shared, jnp.zeros_like(dwk),
+                                     jnp.zeros_like(dk), m_k, theta0)
+        p1 = hdp.perplexity(cfg, shared, tokens[:16], mask[:16],
+                            jax.random.PRNGKey(5))
+        assert float(p1) < float(p0) * 0.65
+
+    def test_crt_table_constraints(self, small_corpus):
+        """1 ≤ m_dk ≤ n_dk whenever n_dk > 0; m_dk = 0 otherwise."""
+        tokens, mask, _ = small_corpus
+        cfg = hdp.HDPConfig(n_topics=12, vocab_size=120)
+        local, shared = hdp.init_state(cfg, tokens, mask, KEY)
+        local, m_k = hdp.resample_tables(cfg, local, shared, KEY)
+        n, m = local.n_dk, local.m_dk
+        assert bool(jnp.all(m <= n))
+        assert bool(jnp.all(jnp.where(n > 0, m >= 1, m == 0)))
+
+
+class TestStirling:
+    def test_known_values(self):
+        """a=0 gives unsigned Stirling numbers of the first kind."""
+        import math
+        from repro.core import stirling
+        t = stirling.log_stirling_table(8, 0.0)
+        assert math.exp(t[4, 2]) == pytest.approx(11.0, rel=1e-9)
+        assert math.exp(t[5, 3]) == pytest.approx(35.0, rel=1e-9)
+        assert math.exp(t[3, 3]) == pytest.approx(1.0, rel=1e-9)
+
+    def test_recurrence_holds(self):
+        from repro.core import stirling
+        a = 0.3
+        t = np.asarray(stirling.log_stirling_table(32, a), dtype=np.float64)
+        for n in range(2, 31):
+            for m in range(1, n):
+                lhs = np.exp(t[n + 1, m])
+                rhs = np.exp(t[n, m - 1]) + (n - m * a) * np.exp(t[n, m])
+                assert lhs == pytest.approx(rhs, rel=1e-6)

@@ -1,0 +1,98 @@
+"""Dump + summarize the optimized HLO for one (arch, shape, mesh):
+collective ops by computation with shapes, trip counts, and byte totals —
+the profiling tool for §Perf (we reason from lowered IR, not wall-clock).
+
+    PYTHONPATH=src python tools/inspect_hlo.py --arch smollm-360m \
+        --shape train_4k [--multi-pod] [--dump /tmp/x.hlo]
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+from collections import defaultdict
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import ARCHITECTURES
+from repro.launch import roofline as rl
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--dump", default=None)
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+
+    cfg = ARCHITECTURES[args.arch]
+    shape = INPUT_SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    with mesh:
+        spec = specs_lib.make_lowering_spec(cfg, shape, mesh)
+        lowered = specs_lib.lower(spec)
+        compiled = lowered.compile()
+    hlo = compiled.as_text()
+    if args.dump:
+        with open(args.dump, "w") as f:
+            f.write(hlo)
+        print(f"dumped {len(hlo) / 1e6:.1f}MB HLO to {args.dump}")
+
+    comps = rl._parse_computations(hlo)
+    body_trip, called_by = {}, {}
+    for name, lines in comps.items():
+        for line in lines:
+            m = rl._WHILE_RE.search(line)
+            if m:
+                cond, body = m.groups()
+                body_trip[body] = rl._trip_count(comps.get(cond, []))
+                called_by[body] = name
+                called_by[cond] = name
+
+    def multiplier(comp):
+        mult, seen = 1, set()
+        while comp in called_by and comp not in seen:
+            seen.add(comp)
+            mult *= body_trip.get(comp, 1)
+            comp = called_by[comp]
+        return mult
+
+    print("while loops (body -> trip):")
+    for b, t in sorted(body_trip.items(), key=lambda x: -x[1])[:15]:
+        print(f"  {b:60s} trip={t:8d} nested_mult={multiplier(b)}")
+
+    rows = []
+    for name, lines in comps.items():
+        mult = multiplier(name)
+        for line in lines:
+            m = rl._INSTR_RE.match(line)
+            if not m:
+                continue
+            shape_str, op = m.groups()
+            for kind in rl._COLLECTIVES:
+                if op == kind or op == kind + "-start":
+                    b = rl._shape_bytes(shape_str)
+                    rows.append((b * mult, b, mult, kind, name,
+                                 shape_str[:60]))
+                    break
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"\ntotal collective bytes/device/step: {total / 2**30:.2f} GiB "
+          f"({len(rows)} collective ops)")
+    by_kind = defaultdict(int)
+    for r in rows:
+        by_kind[r[3]] += r[0]
+    for k, v in sorted(by_kind.items(), key=lambda x: -x[1]):
+        print(f"  {k:20s} {v / 2**30:9.3f} GiB")
+    print(f"\ntop {args.top} collectives (bytes×mult, bytes, mult, kind, "
+          f"computation, shape):")
+    for r in rows[:args.top]:
+        print(f"  {r[0] / 2**20:10.1f}MiB = {r[1] / 2**20:8.2f}MiB x{r[2]:<6d} "
+              f"{r[3]:18s} {r[4][:40]:40s} {r[5]}")
+
+
+if __name__ == "__main__":
+    main()
