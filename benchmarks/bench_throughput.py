@@ -23,22 +23,54 @@ from repro.data.synthetic import CorpusConfig, make_topic_corpus
 
 from benchmarks import common
 
+# sampler name -> (lda.sweep method, layout)
+SAMPLERS = {
+    "exact": ("exact", "scan"),
+    "mhw": ("mhw", "scan"),
+    "mhw_sorted": ("mhw", "sorted"),
+}
 
-def time_sweeps(cfg, tokens, mask, method, n_iter=5):
-    local, shared = lda.init_state(cfg, tokens, mask, jax.random.PRNGKey(0))
-    tables, stale = lda.build_alias(cfg, shared)
-    # warmup/compile
-    out = lda.sweep(cfg, local, shared, tables, stale, tokens, mask,
-                    jax.random.PRNGKey(1), method=method)
-    jax.block_until_ready(out[1])
-    t0 = time.perf_counter()
+
+def time_sweeps(cfg, tokens, mask, samplers, n_iter=5):
+    """Median per-sweep wall time for each sampler, measured interleaved.
+
+    Round-robin across samplers within each iteration so machine load
+    drift (shared CI boxes wander by 2-3× over minutes) hits every
+    sampler equally — the *relative* numbers are what the artifact
+    tracks.  Medians, not means, for the same reason.
+    """
+    states = {}
+    for sampler in samplers:
+        method, layout = SAMPLERS[sampler]
+        lays = None
+        if layout == "sorted":
+            # Production path: the token stream never changes between
+            # sweeps, so the per-chunk sorts are hoisted out of the loop.
+            lays = lda.build_sorted_layouts(cfg, tokens, mask)
+        local, shared = lda.init_state(cfg, tokens, mask,
+                                       jax.random.PRNGKey(0))
+        tables, stale = lda.build_alias(cfg, shared)
+        # warmup/compile
+        out = lda.sweep(cfg, local, shared, tables, stale, tokens, mask,
+                        jax.random.PRNGKey(1), method=method, layout=layout,
+                        sorted_layouts=lays)
+        jax.block_until_ready(out[1])
+        states[sampler] = [local, shared, tables, stale, lays, []]
     for i in range(n_iter):
-        local, dwk, dk = lda.sweep(cfg, local, shared, tables, stale, tokens,
-                                   mask, jax.random.fold_in(jax.random.PRNGKey(2), i),
-                                   method=method)
-        shared = lda.apply_delta(shared, dwk, dk)
-    jax.block_until_ready(shared.n_wk)
-    return (time.perf_counter() - t0) / n_iter
+        for sampler in samplers:
+            method, layout = SAMPLERS[sampler]
+            st = states[sampler]
+            local, shared, tables, stale, lays, times = st
+            t0 = time.perf_counter()
+            local, dwk, dk = lda.sweep(
+                cfg, local, shared, tables, stale, tokens, mask,
+                jax.random.fold_in(jax.random.PRNGKey(2), i),
+                method=method, layout=layout, sorted_layouts=lays)
+            shared = lda.apply_delta(shared, dwk, dk)
+            jax.block_until_ready(shared.n_wk)
+            times.append(time.perf_counter() - t0)
+            st[0], st[1] = local, shared
+    return {s: sorted(states[s][5])[n_iter // 2] for s in samplers}
 
 
 def run(quick: bool = True) -> None:
@@ -50,17 +82,25 @@ def run(quick: bool = True) -> None:
     tokens, mask = jnp.asarray(tokens), jnp.asarray(mask)
     n_tok = int(mask.sum())
 
+    artifact = {"quick": quick, "vocab": vocab, "n_tokens": n_tok,
+                "us_per_token": {}, "speedup_sorted_vs_mhw": {}}
     ks = (16, 64) if quick else (16, 64, 256, 1024)
     per_token = {}
     for k in ks:
         cfg = lda.LDAConfig(n_topics=k, vocab_size=vocab, mh_steps=2)
-        for method in ("exact", "mhw"):
-            dt = time_sweeps(cfg, tokens, mask, method,
-                             n_iter=3 if quick else 5)
-            per_token[(method, k)] = dt / n_tok
-            common.emit("throughput_scaling", sampler=method, n_topics=k,
+        dts = time_sweeps(cfg, tokens, mask, tuple(SAMPLERS),
+                          n_iter=7 if quick else 9)
+        for sampler, dt in dts.items():
+            per_token[(sampler, k)] = dt / n_tok
+            artifact["us_per_token"].setdefault(sampler, {})[str(k)] = \
+                dt / n_tok * 1e6
+            common.emit("throughput_scaling", sampler=sampler, n_topics=k,
                         us_per_token=dt / n_tok * 1e6,
                         tokens_per_s=n_tok / dt)
+        speedup = per_token[("mhw", k)] / per_token[("mhw_sorted", k)]
+        artifact["speedup_sorted_vs_mhw"][str(k)] = speedup
+        common.emit("throughput_sorted_speedup", n_topics=k,
+                    sorted_vs_mhw=speedup)
     # Scaling exponent proxy: cost growth exact vs mhw from smallest to
     # largest K (paper: exact grows ~linearly, alias ~flat on CPU clusters;
     # on TPU both are dense K-lane ops, so the ratio narrows — DESIGN.md §2).
@@ -69,6 +109,28 @@ def run(quick: bool = True) -> None:
                 exact_growth=per_token[("exact", k1)] / per_token[("exact", k0)],
                 mhw_growth=per_token[("mhw", k1)] / per_token[("mhw", k0)],
                 k_ratio=k1 / k0)
+    artifact["growth"] = {
+        s: per_token[(s, k1)] / per_token[(s, k0)] for s in SAMPLERS}
+
+    # Correctness cross-check for the artifact: scan vs sorted perplexity
+    # after 5 sweeps (the sorted relaxation must not trade correctness).
+    # Averaged over 3 paired sweep-RNG seeds: single-seed 5-sweep
+    # perplexity has ~±1.5% MC noise on this corpus, which would swamp the
+    # ~1% systematic relaxation effect being measured.
+    cfg = lda.LDAConfig(n_topics=64, vocab_size=vocab, mh_steps=2)
+    ppl = {"mhw": [], "mhw_sorted": []}
+    for sampler in ("mhw", "mhw_sorted"):
+        _, layout = SAMPLERS[sampler]
+        for seed in (2, 3, 4):
+            ppl[sampler].append(common.lda_sweep_perplexity(
+                cfg, tokens, mask, layout, seed))
+    mean_ppl = {s: sum(v) / len(v) for s, v in ppl.items()}
+    rel = abs(mean_ppl["mhw_sorted"] - mean_ppl["mhw"]) / mean_ppl["mhw"]
+    artifact["perplexity_5_sweeps"] = {
+        **{s: {"per_seed": v, "mean": mean_ppl[s]} for s, v in ppl.items()},
+        "rel_diff": rel}
+    common.emit("throughput_ppl_check", mhw=mean_ppl["mhw"],
+                mhw_sorted=mean_ppl["mhw_sorted"], rel_diff=rel)
 
     # Alias build throughput (producer pool, §5.1).
     cfg = lda.LDAConfig(n_topics=64, vocab_size=vocab)
@@ -82,6 +144,7 @@ def run(quick: bool = True) -> None:
     dt = (time.perf_counter() - t0) / 3
     common.emit("alias_build", vocab=vocab, n_topics=64,
                 tables_per_s=vocab / dt, s_per_build=dt)
+    artifact["alias_build"] = {"tables_per_s": vocab / dt, "s_per_build": dt}
 
     # MH acceptance rate vs staleness (§3.3): how far can the alias table
     # lag before the chain stops moving?  This is the napkin math behind the
@@ -126,6 +189,10 @@ def run(quick: bool = True) -> None:
             jax.random.PRNGKey(9), z_init, prop, stale, log_p, 4)
         common.emit("mh_acceptance", sweeps_of_drift=drift_sweeps,
                     acceptance=float(rate))
+        artifact.setdefault("mh_acceptance", {})[str(drift_sweeps)] = \
+            float(rate)
+
+    common.write_artifact("throughput", artifact)
 
 
 if __name__ == "__main__":

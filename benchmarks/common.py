@@ -12,6 +12,7 @@ CPU container.
 
 from __future__ import annotations
 
+import json
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
@@ -55,6 +56,45 @@ def write_csv(path: str) -> None:
         f.write(",".join(keys) + "\n")
         for r in _ROWS:
             f.write(",".join(str(r.get(k, "")) for k in keys) + "\n")
+
+
+def lda_sweep_perplexity(cfg, tokens, mask, layout: str, seed: int,
+                         n_sweeps: int = 5) -> float:
+    """Held-out perplexity after ``n_sweeps`` mhw sweeps with ``layout``.
+
+    Single source of truth for the scan-vs-sorted equivalence number:
+    bench_throughput's artifact cross-check and
+    tests/test_sorted_sweep.py::test_sorted_matches_scan_perplexity both
+    call this, so the measurement protocol cannot drift between them.
+    Deterministic given (corpus, cfg, seed).
+    """
+    lays = lda.build_sorted_layouts(cfg, tokens, mask) \
+        if layout == "sorted" else None
+    local, shared = lda.init_state(cfg, tokens, mask, jax.random.PRNGKey(0))
+    for i in range(n_sweeps):
+        tables, stale = lda.build_alias(cfg, shared)
+        local, dwk, dk = lda.sweep(
+            cfg, local, shared, tables, stale, tokens, mask,
+            jax.random.fold_in(jax.random.PRNGKey(seed), i),
+            method="mhw", layout=layout, sorted_layouts=lays)
+        shared = lda.apply_delta(shared, dwk, dk)
+    return float(lda.perplexity(cfg, shared, tokens, mask,
+                                jax.random.PRNGKey(9)))
+
+
+def write_artifact(name: str, payload: dict) -> str:
+    """Write a machine-readable benchmark artifact ``BENCH_<name>.json``.
+
+    These are the cross-PR perf trajectory: each benchmark module dumps its
+    headline numbers here so regressions are diffable without parsing
+    stdout or the CSV.  Returns the path written.
+    """
+    path = f"BENCH_{name}.json"
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[artifact] wrote {path}", flush=True)
+    return path
 
 
 class Timer:

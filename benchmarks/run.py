@@ -15,6 +15,11 @@ Mapping to the paper:
   bench_failover    §5.4   client failure + recovery robustness
   bench_stale_sync  beyond-paper: PS pattern on LM gradient sync
   bench_roofline    §Roofline table from the dry-run artifacts
+
+Besides the CSV, benchmark modules write machine-readable
+``BENCH_<name>.json`` artifacts (``common.write_artifact``) so the perf
+trajectory is diffable across PRs — e.g. ``BENCH_throughput.json`` carries
+per-token µs for exact / mhw / mhw_sorted and the sorted-path speedup.
 """
 
 from __future__ import annotations
@@ -39,6 +44,10 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     only = set(args.only.split(",")) if args.only else set(MODULES)
+    unknown = only - set(MODULES)
+    if unknown:
+        ap.error(f"unknown benchmark module(s) {sorted(unknown)}; "
+                 f"choose from {MODULES}")
     failures = []
     for name in MODULES:
         if name not in only:

@@ -140,13 +140,13 @@ def sample(table: AliasTable, key: jax.Array, shape: tuple[int, ...] = ()) -> ja
 
     ``table`` has K slots; returns int32 array of ``shape``.
     """
+    if table.prob.ndim != 1:
+        raise ValueError("sample() expects a single table; use sample_rows for batches")
     k = table.prob.shape[-1]
     k_slot, k_coin = jax.random.split(key)
     slot = jax.random.randint(k_slot, shape, 0, k, dtype=jnp.int32)
     coin = jax.random.uniform(k_coin, shape)
-    take_slot = coin < table.prob[..., slot] if table.prob.ndim == 1 else None
-    if table.prob.ndim != 1:
-        raise ValueError("sample() expects a single table; use sample_rows for batches")
+    take_slot = coin < table.prob[slot]
     return jnp.where(take_slot, slot, table.alias[slot]).astype(jnp.int32)
 
 

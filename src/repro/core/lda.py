@@ -13,10 +13,21 @@ Two samplers are provided, matching the paper's own experimental comparison:
 Layout conventions
 ------------------
 Documents are padded to a fixed length L with ``mask`` marking real tokens.
-The token sweep scans positions (so the per-document counts ``n_dk`` stay
-exact, as in a sequential Gibbs sweep) and vectorizes across documents —
-the TPU analogue of the paper's per-client multithreaded sampler, which is
-likewise relaxed *between* documents.
+Two sweep layouts are provided (DESIGN.md §5):
+
+* ``layout="scan"`` — the token sweep scans positions (so the per-document
+  counts ``n_dk`` stay exact, as in a sequential Gibbs sweep) and
+  vectorizes across documents — the TPU analogue of the paper's per-client
+  multithreaded sampler, which is likewise relaxed *between* documents.
+  This is the correctness oracle.
+* ``layout="sorted"`` (``method="mhw"`` only) — the paper's word-major
+  order: the flat token stream is sorted by token-type
+  (``repro.data.segment``) and the whole shard runs as one fused
+  tile-skipping Pallas chain (``repro.kernels.mhw_fused``), each token
+  proposing against the sweep-start counts minus its own contribution
+  (Jacobi-style within the sweep, like the paper's per-word relaxation).
+  Each ``n_wk`` row is touched once per resident tile pair instead of once
+  per scan position.
 
 Sufficient statistics:
   n_dk (D, K) — document-topic counts, client-local (paper §5.2).
@@ -35,6 +46,8 @@ import jax.numpy as jnp
 
 from repro.core import alias as alias_mod
 from repro.core import mhw
+from repro.data import segment
+from repro.kernels import ops
 
 Array = jax.Array
 
@@ -49,6 +62,18 @@ class LDAConfig:
     # How many Gibbs sweeps an alias table is reused for before rebuild
     # (the l/n refresh of paper §3.3); used by the driver, not the sweep.
     alias_refresh_every: int = 1
+    # Tile sizes for the sorted-layout kernels; tile_v=None sizes vocab
+    # tiles from a VMEM budget (segment.pick_tile_vmem) — small models fit
+    # in one tile, production vocabularies tile down and skip.  tile_b
+    # trades skip granularity against grid size: smaller batch tiles span
+    # fewer vocab tiles (more programs skipped) but launch more programs.
+    tile_v: int | None = None
+    tile_b: int = 1024
+    # Sequential position-chunks per sorted sweep: each chunk is one fused
+    # word-major kernel launch, with n_dk refreshed between chunks so the
+    # within-document Gauss-Seidel effect of the scan layout is mostly
+    # retained (1 = fully parallel Jacobi sweep).
+    sorted_chunks: int = 4
 
 
 class SharedStats(NamedTuple):
@@ -105,7 +130,7 @@ def build_alias(cfg: LDAConfig, shared: SharedStats) -> tuple[alias_mod.AliasTab
     return alias_mod.build(dp), dp
 
 
-@partial(jax.jit, static_argnames=("cfg", "method"))
+@partial(jax.jit, static_argnames=("cfg", "method", "layout"))
 def sweep(
     cfg: LDAConfig,
     local: LocalState,
@@ -116,13 +141,28 @@ def sweep(
     mask: Array,
     key: Array,
     method: str = "mhw",
+    layout: str = "scan",
+    sorted_layouts: tuple[segment.SortedLayout, ...] | None = None,
 ) -> tuple[LocalState, Array, Array]:
     """One Gibbs sweep over a client's shard.
 
     ``shared`` is the client's frozen snapshot for this sweep; ``tables`` /
     ``stale_dense`` may be *staler* (alias refresh cadence).  Returns the new
     local state plus the (V, K) and (K,) deltas to push to the server.
+
+    ``layout="sorted"`` (mhw only) runs the fused token-sorted pipeline;
+    pass prebuilt per-chunk ``sorted_layouts``
+    (``segment.build_chunked_layouts``) to hoist the per-shard sorts out of
+    the sweep — tokens never change between sweeps, so drivers should sort
+    once and reuse.
     """
+    if layout == "sorted":
+        if method != "mhw":
+            raise ValueError("layout='sorted' requires method='mhw'")
+        return _sweep_sorted(cfg, local, shared, tables, stale_dense,
+                             tokens, mask, key, sorted_layouts)
+    if layout != "scan":
+        raise ValueError(f"unknown layout {layout!r}")
     d, l = tokens.shape
     beta_bar = cfg.beta * cfg.vocab_size
     n_wk, n_k = shared.n_wk, shared.n_k
@@ -176,6 +216,124 @@ def sweep(
     )
     delta_k = delta_wk.sum(0)
     return LocalState(z=z_new, n_dk=n_dk_final), delta_wk, delta_k
+
+
+def _sweep_sorted(
+    cfg: LDAConfig,
+    local: LocalState,
+    shared: SharedStats,
+    tables: alias_mod.AliasTable,
+    stale_dense: Array,
+    tokens: Array,
+    mask: Array,
+    key: Array,
+    layouts: tuple[segment.SortedLayout, ...] | None,
+) -> tuple[LocalState, Array, Array]:
+    """Token-sorted MHW sweep: fused tile-skipping chains per shard.
+
+    The sweep runs as ``cfg.sorted_chunks`` sequential position-chunks.
+    Within a chunk every token proposes word-major against the current
+    statistics minus its own contribution (the ^{-di} correction) — fully
+    parallel, one fused kernel launch; between chunks ``n_dk`` is refreshed
+    so each document's counts advance ``sorted_chunks`` times per sweep
+    (the scan layout's Gauss-Seidel recurrence, coarsened).  ``n_wk`` stays
+    the sweep-start snapshot throughout, exactly as in the scan layout.
+    """
+    d, l = tokens.shape
+    beta_bar = cfg.beta * cfg.vocab_size
+    tile_v = sorted_tile_v(cfg)
+    n_chunks = max(1, min(cfg.sorted_chunks, l))
+    bounds = chunk_bounds(l, n_chunks)
+    if layouts is not None and len(layouts) != n_chunks:
+        raise ValueError(
+            f"sorted_layouts has {len(layouts)} chunks, cfg wants {n_chunks};"
+            " rebuild with segment.build_chunked_layouts(bounds=lda."
+            "chunk_bounds(L, n_chunks))")
+
+    z = local.z
+    n_dk = local.n_dk
+    for c in range(n_chunks):
+        s, e = bounds[c], bounds[c + 1]
+        tok_c, mask_c = tokens[:, s:e], mask[:, s:e]
+        bc = d * (e - s)
+        tile_b = min(cfg.tile_b, bc)
+        lay = layouts[c] if layouts is not None else segment.build_layout(
+            tok_c, mask_c, cfg.vocab_size, tile_v=tile_v, tile_b=tile_b)
+
+        # Geometry guard for hoisted layouts: vstart/vcount are in
+        # vocab-tile units and rows are padded to tile_b — a layout built
+        # with different tiles would sample silently wrong, not crash.
+        if lay.hist.shape[0] * tile_v != cfg.vocab_size:
+            raise ValueError(
+                f"sorted_layouts[{c}] was built with tile_v="
+                f"{cfg.vocab_size // lay.hist.shape[0]}, sweep uses "
+                f"{tile_v}; rebuild with lda.sorted_tile_v(cfg)")
+        if (lay.rows.shape[0] % tile_b != 0
+                or lay.vstart.shape[0] != lay.rows.shape[0] // tile_b):
+            raise ValueError(
+                f"sorted_layouts[{c}] batch tiling ({lay.vstart.shape[0]} "
+                f"tiles over {lay.rows.shape[0]} draws) does not match "
+                f"tile_b={tile_b}")
+
+        z_c = z[:, s:e]
+        z_flat = z_c.reshape(-1)
+        z_s = segment.sort_values(lay, z_flat, fill=0)
+        ndk = n_dk[lay.docs]    # raw rows; the kernel applies the ^{-di}
+
+        z_new_s = ops.mhw_sweep_sorted(
+            tables, stale_dense, shared.n_wk, shared.n_k, lay.rows, z_s,
+            ndk, lay.vstart, lay.vcount, jax.random.fold_in(key, c),
+            mh_steps=cfg.mh_steps, alpha=cfg.alpha, beta=cfg.beta,
+            beta_bar=beta_bar, tile_v=tile_v, tile_b=tile_b)
+
+        z_new_flat = segment.unsort_values(lay, z_new_s, z_flat)
+        z_new_c = jnp.where(mask_c, z_new_flat.reshape(d, e - s), z_c)
+
+        docs_c = jnp.arange(bc, dtype=jnp.int32) // (e - s)
+        m_c = mask_c.reshape(-1).astype(jnp.float32)
+        n_dk = (n_dk
+                .at[docs_c, z_new_c.reshape(-1)].add(m_c)
+                .at[docs_c, z_flat].add(-m_c))
+        z = z.at[:, s:e].set(z_new_c)
+
+    w_flat = tokens.reshape(-1)
+    m_flat = mask.reshape(-1).astype(jnp.float32)
+    delta_wk = (
+        jnp.zeros((cfg.vocab_size, cfg.n_topics), jnp.float32)
+        .at[w_flat, z.reshape(-1)].add(m_flat)
+        .at[w_flat, local.z.reshape(-1)].add(-m_flat)
+    )
+    delta_k = delta_wk.sum(0)
+    return LocalState(z=z, n_dk=n_dk), delta_wk, delta_k
+
+
+def chunk_bounds(l: int, n_chunks: int) -> tuple[int, ...]:
+    """Position-chunk boundaries for the sorted sweep (static per shape)."""
+    return tuple(round(i * l / n_chunks) for i in range(n_chunks + 1))
+
+
+def sorted_tile_v(cfg: LDAConfig) -> int:
+    """The vocab tile size the sorted sweep will use for ``cfg``.
+
+    Hoisted layouts (``segment.build_chunked_layouts``) MUST be built with
+    this exact tile size — the layout's vstart/vcount are in vocab-tile
+    units and are consumed by kernels tiled with it.
+    """
+    return cfg.tile_v or segment.pick_tile_vmem(cfg.vocab_size, cfg.n_topics)
+
+
+def build_sorted_layouts(cfg: LDAConfig, tokens: Array, mask: Array
+                         ) -> tuple[segment.SortedLayout, ...]:
+    """Prebuild the per-chunk sorted layouts ``sweep(layout="sorted")``
+    expects — the one sanctioned recipe, so tile/chunk geometry cannot
+    drift from what the sweep derives internally.  Build once per shard
+    and reuse across sweeps (the layout depends only on tokens/mask).
+    """
+    l = tokens.shape[1]
+    n_chunks = max(1, min(cfg.sorted_chunks, l))
+    return segment.build_chunked_layouts(
+        tokens, mask, cfg.vocab_size, bounds=chunk_bounds(l, n_chunks),
+        tile_v=sorted_tile_v(cfg), tile_b=cfg.tile_b)
 
 
 def mask_f(m: Array) -> Array:

@@ -13,6 +13,16 @@ which cost O(1) gathers.
 
 This module is generic over the point-evaluation callables so the same chain
 drives LDA, PDP and HDP.
+
+Two layouts are supported (DESIGN.md §5):
+
+* position-scan — :func:`mh_chain` runs inside ``lda.sweep``'s sequential
+  position scan (one chain per document per position);
+* token-sorted — :func:`sorted_chain` is the pure-jnp semantics of one
+  whole-shard chain over the sorted stream of ``repro.data.segment``; the
+  production path is the fused Pallas kernel
+  ``repro.kernels.mhw_fused.mhw_sweep_fused``, which must match it
+  bit-for-bit given the same uniforms.
 """
 
 from __future__ import annotations
@@ -117,3 +127,79 @@ def mh_chain_with_stats(key, init, proposal, dense_probs, log_p, n_steps):
     keys = jax.random.split(key, n_steps)
     z, rates = jax.lax.scan(step, init, keys)
     return z, jnp.mean(rates)
+
+
+# ---------------------------------------------------------------------------
+# Token-sorted layout (DESIGN.md §5) — oracle for the fused kernel
+# ---------------------------------------------------------------------------
+
+_EPS = 1e-30
+
+
+def _gather_k(mat: Array, idx: Array) -> Array:
+    """mat: (B, K), idx: (B,) int → (B,) mat[b, idx[b]]."""
+    return jnp.take_along_axis(mat, idx[:, None].astype(jnp.int32),
+                               axis=1)[:, 0]
+
+
+def sorted_chain(prob: Array, alias: Array, mass: Array, stale: Array,
+                 n_wk: Array, n_k: Array, rows: Array, z0: Array, ndk: Array,
+                 slot: Array, coin: Array, u_mix: Array, u_sparse: Array,
+                 u_acc: Array, *, alpha: float, beta: float,
+                 beta_bar: float) -> Array:
+    """Whole-shard MH chain over the token-sorted stream, given uniforms.
+
+    Pure-jnp reference semantics of ``kernels.mhw_fused.mhw_sweep_fused``:
+    the fresh LM row, the sparse inverse-CDF draw, the dense alias draw and
+    the acceptance test use the exact formulas of the kernel so outputs are
+    bit-identical.  ``rows`` entries ≥ V are padding and keep ``z0``.
+
+    prob/alias/stale/n_wk: (V, K); mass: (V,); n_k: (K,); rows/z0: (B,);
+    ndk: (B, K) *raw* gathered doc rows (the ^{-di} own-token removal
+    happens here, as in the kernel); slot/coin/u_mix/u_sparse/u_acc:
+    (S, B) per-step uniforms.  Returns (B,) int32.
+    """
+    v, k_topics = prob.shape
+    real = rows < v
+    r = jnp.clip(rows, 0, v - 1)
+
+    karange = jax.lax.broadcasted_iota(jnp.int32, (1, k_topics), 1)
+    own = ((karange == z0[:, None]) & real[:, None]).astype(jnp.float32)
+    ndk = ndk - own
+    rows_wk = n_wk[r]
+    lm = (rows_wk - own + beta) / (n_k[None, :] - own + beta_bar)
+
+    sparse_w = ndk * lm
+    cdf = jnp.cumsum(sparse_w, axis=-1)
+    sparse_mass = cdf[:, -1]
+    dense_mass = mass[r]
+    stale_rows = stale[r]
+
+    def log_p(t):
+        return (jnp.log(_gather_k(ndk, t) + alpha)
+                + jnp.log(_gather_k(lm, t) + _EPS))
+
+    def log_q(t):
+        return jnp.log(_gather_k(sparse_w, t) + _gather_k(stale_rows, t)
+                       + _EPS)
+
+    z = z0
+    lp_z = log_p(z)
+    lq_z = log_q(z)
+    for s in range(slot.shape[0]):
+        slot_s = slot[s]
+        dense_draw = jnp.where(coin[s] < prob[r, slot_s], slot_s,
+                               alias[r, slot_s])
+        target = u_sparse[s] * sparse_mass
+        sparse_draw = jnp.clip(
+            jnp.sum((cdf <= target[:, None]).astype(jnp.int32), axis=-1),
+            0, k_topics - 1)
+        pick_sparse = u_mix[s] * (sparse_mass + dense_mass) < sparse_mass
+        cand = jnp.where(pick_sparse, sparse_draw, dense_draw).astype(jnp.int32)
+        lp_c = log_p(cand)
+        lq_c = log_q(cand)
+        accept = jnp.log(u_acc[s] + _EPS) < lp_c - lp_z + lq_z - lq_c
+        z = jnp.where(accept, cand, z)
+        lp_z = jnp.where(accept, lp_c, lp_z)
+        lq_z = jnp.where(accept, lq_c, lq_z)
+    return jnp.where(real, z, z0).astype(jnp.int32)

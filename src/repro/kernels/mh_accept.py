@@ -6,6 +6,11 @@ probability min(1, q(z)p(c) / (q(c)p(z))).  Elementwise and trivially
 parallel — the value of the kernel is *fusion*: acceptance, the ratio, the
 log of the uniform and the select retire in one VMEM pass instead of five
 HBM-roundtrip ops.
+
+This standalone step remains for callers that compute their own point
+densities; the sorted sampling pipeline goes further and fuses the whole
+chain — proposal draw, density gathers and acceptance — with the
+table-tile residency in ``repro.kernels.mhw_fused`` (DESIGN.md §5.1).
 """
 
 from __future__ import annotations

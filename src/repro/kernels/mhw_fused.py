@@ -1,0 +1,196 @@
+"""Pallas TPU kernel: fused MHW sweep step over the token-sorted layout.
+
+One program = one (batch-tile, resident-vocab-tile) pair of the sorted
+stream (``repro.data.segment``).  With the (TILE_V, K) table tile — alias
+``prob``/``alias``/``mass`` rows, the stale dense matrix and the *fresh*
+``n_wk`` rows — resident in VMEM, the whole per-token MH chain of paper §3
+retires in a single residency:
+
+  1. fresh language-model rows  lm = (n_wk[w] − own + β)/(n_k − own + β̄)
+     read from the resident tile — each word-topic row is touched once per
+     (batch-tile, vocab-tile) pair instead of once per scan position;
+  2. the sparse+dense mixture proposal (paper eq. 4): document-sparse term
+     via an inverse-CDF draw over the K lanes, corpus-dense term via the
+     alias-table slot/coin draw;
+  3. the stale-q point gathers and the MH acceptance coin (paper eq. 7).
+
+Unfused, steps 2–3 are five HBM round trips per MH step (proposal draw,
+two q gathers, two p gathers) plus a fresh ``n_wk`` gather per token; fused
+they are VMEM reads.  Grid programs outside a batch tile's vocab window are
+skipped via scalar prefetch exactly as in ``alias_sample_sorted``.
+
+``repro.core.mhw.sorted_chain`` is the pure-jnp oracle: identical formulas,
+identical uniforms, bit-identical outputs (tests/test_sorted_sweep.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Shared with the oracle: the bit-exactness contract requires the kernel
+# and mhw.sorted_chain to use the identical guard constant and gather.
+from repro.core.mhw import _EPS, _gather_k
+from repro.kernels.alias_sample import DEFAULT_TILE_B, DEFAULT_TILE_V
+
+
+def _mhw_fused_kernel(vstart_ref, vcount_ref, rows_ref, z_ref, ndk_ref,
+                      slot_ref, coin_ref, umix_ref, usp_ref, uacc_ref,
+                      prob_ref, alias_ref, mass_ref, stale_ref, nwk_ref,
+                      nk_ref, out_ref, *, tile_v: int, n_vtiles: int,
+                      n_steps: int, alpha: float, beta: float,
+                      beta_bar: float):
+    bi = pl.program_id(0)
+    vi = pl.program_id(1)
+    tid = jnp.clip(vstart_ref[bi] + jnp.minimum(vi, vcount_ref[bi] - 1),
+                   0, n_vtiles - 1)
+    row_lo = tid * tile_v
+
+    @pl.when(vi == 0)
+    def _init():
+        out_ref[...] = z_ref[...]
+
+    @pl.when(vi < vcount_ref[bi])
+    def _body():
+        rows = rows_ref[...]                       # (TILE_B,) sorted rows
+        local = rows - row_lo
+        in_tile = (local >= 0) & (local < tile_v)
+        lidx = jnp.clip(local, 0, tile_v - 1)
+
+        z0 = z_ref[...]                            # (TILE_B,) chain init
+        k_topics = ndk_ref.shape[-1]
+
+        # ^{-di} correction in-kernel: remove the token's own contribution
+        # from its doc row, its n_wk row and the topic totals (as in the
+        # scan path) — callers pass *raw* gathered n_dk rows.
+        karange = jax.lax.broadcasted_iota(jnp.int32, (1, k_topics), 1)
+        own = ((karange == z0[:, None]) & in_tile[:, None]).astype(jnp.float32)
+        ndk = ndk_ref[...] - own                   # (TILE_B, K)
+        rows_wk = nwk_ref[...][lidx]               # (TILE_B, K)
+        lm = (rows_wk - own + beta) / (nk_ref[...] - own + beta_bar)
+
+        sparse_w = ndk * lm                        # exact sparse term
+        cdf = jnp.cumsum(sparse_w, axis=-1)
+        sparse_mass = cdf[:, -1]
+        dense_mass = mass_ref[...][lidx]
+        stale = stale_ref[...]                     # (TILE_V, K)
+        ptile = prob_ref[...]
+        atile = alias_ref[...]
+
+        def log_p(t):
+            return (jnp.log(_gather_k(ndk, t) + alpha)
+                    + jnp.log(_gather_k(lm, t) + _EPS))
+
+        def log_q(t):
+            return jnp.log(_gather_k(sparse_w, t) + stale[lidx, t] + _EPS)
+
+        z = z0
+        lp_z = log_p(z)
+        lq_z = log_q(z)
+        for s in range(n_steps):
+            slot = slot_ref[...][s]
+            dense_draw = jnp.where(coin_ref[...][s] < ptile[lidx, slot],
+                                   slot, atile[lidx, slot])
+            target = usp_ref[...][s] * sparse_mass
+            sparse_draw = jnp.clip(
+                jnp.sum((cdf <= target[:, None]).astype(jnp.int32), axis=-1),
+                0, k_topics - 1)
+            pick_sparse = (umix_ref[...][s] * (sparse_mass + dense_mass)
+                           < sparse_mass)
+            cand = jnp.where(pick_sparse, sparse_draw,
+                             dense_draw).astype(jnp.int32)
+            lp_c = log_p(cand)
+            lq_c = log_q(cand)
+            accept = (jnp.log(uacc_ref[...][s] + _EPS)
+                      < lp_c - lp_z + lq_z - lq_c)
+            z = jnp.where(accept, cand, z)
+            lp_z = jnp.where(accept, lp_c, lp_z)
+            lq_z = jnp.where(accept, lq_c, lq_z)
+
+        out_ref[...] = jnp.where(in_tile, z.astype(jnp.int32), out_ref[...])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_v", "tile_b", "n_steps", "alpha",
+                                    "beta", "beta_bar", "interpret"))
+def mhw_sweep_fused(prob: jax.Array, alias: jax.Array, mass: jax.Array,
+                    stale: jax.Array, n_wk: jax.Array, n_k: jax.Array,
+                    rows: jax.Array, z0: jax.Array, ndk: jax.Array,
+                    slot: jax.Array, coin: jax.Array, u_mix: jax.Array,
+                    u_sparse: jax.Array, u_acc: jax.Array,
+                    vstart: jax.Array, vcount: jax.Array, *,
+                    tile_v: int = DEFAULT_TILE_V,
+                    tile_b: int = DEFAULT_TILE_B,
+                    n_steps: int = 2, alpha: float = 0.1, beta: float = 0.01,
+                    beta_bar: float | None = None,
+                    interpret: bool = True) -> jax.Array:
+    """Fused sorted-layout MHW chain for one sweep.
+
+    prob/alias/stale/n_wk: (V, K); mass: (V,); n_k: (K,).
+    rows/z0: (B,) sorted token-types (≥V ⇒ padding, left at z0) and chain
+    init; ndk: (B, K) own-token-removed doc-topic rows per sorted draw.
+    slot/coin/u_mix/u_sparse/u_acc: (n_steps, B) per-MH-step uniforms
+    (slot is int32 in [0, K)).  vstart/vcount: (B/tile_b,) vocab-tile
+    windows from ``segment.build_layout``.  Returns (B,) int32 final states.
+    """
+    v, k = prob.shape
+    b = rows.shape[0]
+    tile_v = min(tile_v, v)
+    tile_b = min(tile_b, b)
+    assert v % tile_v == 0 and b % tile_b == 0
+    nb, nv = b // tile_b, v // tile_v
+    assert vstart.shape == (nb,) and vcount.shape == (nb,)
+    if beta_bar is None:
+        beta_bar = beta * v
+
+    kernel = functools.partial(_mhw_fused_kernel, tile_v=tile_v, n_vtiles=nv,
+                               n_steps=n_steps, alpha=alpha, beta=beta,
+                               beta_bar=beta_bar)
+
+    def bmap(bi, vi, vs, vc):
+        return (bi,)
+
+    def bmap2(bi, vi, vs, vc):
+        return (bi, 0)
+
+    def smap(bi, vi, vs, vc):
+        return (0, bi)
+
+    def vmap_(bi, vi, vs, vc):
+        return (jnp.clip(vs[bi] + jnp.minimum(vi, vc[bi] - 1), 0, nv - 1), 0)
+
+    def vmap1(bi, vi, vs, vc):
+        return (jnp.clip(vs[bi] + jnp.minimum(vi, vc[bi] - 1), 0, nv - 1),)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nb, nv),
+        in_specs=[
+            pl.BlockSpec((tile_b,), bmap),           # rows
+            pl.BlockSpec((tile_b,), bmap),           # z0
+            pl.BlockSpec((tile_b, k), bmap2),        # ndk
+            pl.BlockSpec((n_steps, tile_b), smap),   # slot
+            pl.BlockSpec((n_steps, tile_b), smap),   # coin
+            pl.BlockSpec((n_steps, tile_b), smap),   # u_mix
+            pl.BlockSpec((n_steps, tile_b), smap),   # u_sparse
+            pl.BlockSpec((n_steps, tile_b), smap),   # u_acc
+            pl.BlockSpec((tile_v, k), vmap_),        # prob
+            pl.BlockSpec((tile_v, k), vmap_),        # alias
+            pl.BlockSpec((tile_v,), vmap1),          # mass
+            pl.BlockSpec((tile_v, k), vmap_),        # stale
+            pl.BlockSpec((tile_v, k), vmap_),        # n_wk
+            pl.BlockSpec((1, k), lambda bi, vi, vs, vc: (0, 0)),  # n_k
+        ],
+        out_specs=pl.BlockSpec((tile_b,), bmap),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=interpret,
+    )(vstart, vcount, rows, z0, ndk, slot, coin, u_mix, u_sparse, u_acc,
+      prob, alias, mass, stale, n_wk, n_k.reshape(1, -1))

@@ -14,6 +14,7 @@ from repro.core.alias import AliasTable
 from repro.kernels import alias_build as _build
 from repro.kernels import alias_sample as _sample
 from repro.kernels import mh_accept as _accept
+from repro.kernels import mhw_fused as _fused
 
 INTERPRET = True
 
@@ -51,6 +52,53 @@ def sample_rows(tables: AliasTable, rows: jax.Array, key: jax.Array, *,
     return _sample.alias_sample(
         tables.prob, tables.alias, rows, slot, coin, tile_v=tile_v,
         tile_b=tile_b, interpret=INTERPRET if interpret is None else interpret)
+
+
+def sample_rows_sorted(tables: AliasTable, rows: jax.Array,
+                       vstart: jax.Array, vcount: jax.Array, key: jax.Array,
+                       *, tile_v: int = _sample.DEFAULT_TILE_V,
+                       tile_b: int = _sample.DEFAULT_TILE_B,
+                       interpret: bool | None = None) -> jax.Array:
+    """Tile-skipping draws over a token-sorted stream (``segment`` layout).
+
+    ``rows`` must be ascending with padding sentinels ≥ V at the end;
+    ``vstart``/``vcount`` come from ``segment.build_layout``.  Padding
+    positions return 0.
+    """
+    k = tables.prob.shape[-1]
+    k_slot, k_coin = jax.random.split(key)
+    slot = jax.random.randint(k_slot, rows.shape, 0, k, dtype=jnp.int32)
+    coin = jax.random.uniform(k_coin, rows.shape)
+    return _sample.alias_sample_sorted(
+        tables.prob, tables.alias, rows, slot, coin, vstart, vcount,
+        tile_v=tile_v, tile_b=tile_b,
+        interpret=INTERPRET if interpret is None else interpret)
+
+
+def mhw_sweep_sorted(tables: AliasTable, stale: jax.Array, n_wk: jax.Array,
+                     n_k: jax.Array, rows: jax.Array, z0: jax.Array,
+                     ndk: jax.Array, vstart: jax.Array, vcount: jax.Array,
+                     key: jax.Array, *, mh_steps: int, alpha: float,
+                     beta: float, beta_bar: float,
+                     tile_v: int = _sample.DEFAULT_TILE_V,
+                     tile_b: int = _sample.DEFAULT_TILE_B,
+                     interpret: bool | None = None) -> jax.Array:
+    """Fused sorted-layout MHW chain: draws the per-step uniforms and runs
+    ``kernels.mhw_fused.mhw_sweep_fused`` (see that module's docstring)."""
+    k = tables.prob.shape[-1]
+    b = rows.shape[0]
+    ks = jax.random.split(key, 5)
+    slot = jax.random.randint(ks[0], (mh_steps, b), 0, k, dtype=jnp.int32)
+    coin = jax.random.uniform(ks[1], (mh_steps, b))
+    u_mix = jax.random.uniform(ks[2], (mh_steps, b))
+    u_sparse = jax.random.uniform(ks[3], (mh_steps, b))
+    u_acc = jax.random.uniform(ks[4], (mh_steps, b))
+    return _fused.mhw_sweep_fused(
+        tables.prob, tables.alias, tables.mass, stale, n_wk, n_k, rows, z0,
+        ndk, slot, coin, u_mix, u_sparse, u_acc, vstart, vcount,
+        tile_v=tile_v, tile_b=tile_b, n_steps=mh_steps, alpha=alpha,
+        beta=beta, beta_bar=beta_bar,
+        interpret=INTERPRET if interpret is None else interpret)
 
 
 def mh_accept(z, cand, log_p_z, log_p_cand, log_q_z, log_q_cand, key, *,

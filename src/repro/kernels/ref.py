@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import alias as alias_mod
+from repro.core import mhw as mhw_mod
 
 
 def alias_build_ref(p: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -42,6 +43,28 @@ def alias_sample_ref(prob: jax.Array, alias: jax.Array, rows: jax.Array,
     p = prob[rows, slot]
     a = alias[rows, slot]
     return jnp.where(coin < p, slot, a).astype(jnp.int32)
+
+
+def alias_sample_sorted_ref(prob: jax.Array, alias: jax.Array,
+                            rows: jax.Array, slot: jax.Array,
+                            coin: jax.Array) -> jax.Array:
+    """Reference for the tile-skipping sorted sampler: same draws as
+    :func:`alias_sample_ref` for in-vocab rows, 0 for padding sentinels
+    (rows ≥ V), matching the kernel's zero-initialized output blocks."""
+    v = prob.shape[0]
+    r = jnp.clip(rows, 0, v - 1)
+    draw = alias_sample_ref(prob, alias, r, slot, coin)
+    return jnp.where(rows < v, draw, 0).astype(jnp.int32)
+
+
+def mhw_sweep_sorted_ref(prob, alias, mass, stale, n_wk, n_k, rows, z0, ndk,
+                         slot, coin, u_mix, u_sparse, u_acc, *, alpha, beta,
+                         beta_bar):
+    """Oracle for ``kernels.mhw_fused.mhw_sweep_fused`` — delegates to the
+    pure-jnp chain semantics owned by ``repro.core.mhw``."""
+    return mhw_mod.sorted_chain(prob, alias, mass, stale, n_wk, n_k, rows,
+                                z0, ndk, slot, coin, u_mix, u_sparse, u_acc,
+                                alpha=alpha, beta=beta, beta_bar=beta_bar)
 
 
 def mh_accept_ref(z: jax.Array, cand: jax.Array, log_p_z: jax.Array,

@@ -1,0 +1,52 @@
+"""Optional-``hypothesis`` shim for the property-based tests.
+
+The tier-1 container does not ship ``hypothesis`` (see requirements-dev.txt
+for the full dev environment).  ``pytest.importorskip`` at module scope would
+skip the *whole* module, losing the plain unit tests that live next to the
+property tests — so instead this shim exports either the real
+``given``/``settings``/``st`` or stand-ins that mark just the decorated
+property tests as skipped.  Import from here instead of ``hypothesis``:
+
+    from tests.hypothesis_compat import given, settings, st
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    _SKIP = pytest.mark.skip(
+        reason="hypothesis not installed (pip install -r requirements-dev.txt)")
+
+    def given(*_args, **_kwargs):  # type: ignore[misc]
+        def deco(fn):
+            return _SKIP(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):  # type: ignore[misc]
+        return lambda fn: fn
+
+    class _Dummy:
+        """Stand-in strategy: infinitely callable/chainable so module-scope
+        constructions like ``@st.composite`` + ``delta_matrices()`` or
+        ``st.floats().map(...)`` survive collection; the decorated tests are
+        skipped before any of this is ever drawn from."""
+
+        def __call__(self, *_a, **_k):
+            return self
+
+        def __getattr__(self, _name):
+            return self
+
+    _DUMMY = _Dummy()
+
+    class _Strategies:
+        def __getattr__(self, _name):
+            return _DUMMY
+
+    st = _Strategies()  # type: ignore[assignment]

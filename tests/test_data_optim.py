@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests.hypothesis_compat import given, settings, st
 
 from repro.data.synthetic import (CorpusConfig, lm_batches, make_topic_corpus,
                                   shard_corpus)

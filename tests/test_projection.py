@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from tests.hypothesis_compat import given, settings, st
 
 from repro.core import projection, ps
 

@@ -1,0 +1,112 @@
+"""Tests for the token-sorted segmentation layout (repro.data.segment)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import segment
+
+
+def _toy(d=13, l=17, v=48, seed=0, mask_p=0.8):
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(0, v, size=(d, l)), jnp.int32)
+    mask = jnp.asarray(rng.random((d, l)) < mask_p)
+    return tokens, mask
+
+
+@pytest.mark.parametrize("tile_v,tile_b", [(8, 64), (16, 128), (48, 32)])
+def test_layout_round_trip(tile_v, tile_b):
+    """sort → unsort is the identity on real positions (permutation check)."""
+    tokens, mask = _toy(v=48)
+    lay = segment.build_layout(tokens, mask, 48, tile_v=tile_v, tile_b=tile_b)
+    flat = jnp.arange(tokens.size, dtype=jnp.int32)
+    sorted_vals = segment.sort_values(lay, flat, fill=-1)
+    # order is a permutation of all flat positions
+    assert np.array_equal(np.sort(np.asarray(lay.order)), np.arange(tokens.size))
+    back = segment.unsort_values(lay, sorted_vals, jnp.zeros_like(flat))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(flat))
+
+
+def test_layout_rows_sorted_and_sentinels():
+    tokens, mask = _toy(v=48)
+    lay = segment.build_layout(tokens, mask, 48, tile_v=8, tile_b=64)
+    rows = np.asarray(lay.rows)
+    assert (np.diff(rows) >= 0).all(), "sorted stream must be ascending"
+    n_real = int(np.asarray(mask).sum())
+    assert (rows[:n_real] < 48).all()
+    assert (rows[n_real:] == 48).all(), "padding carries the sentinel row"
+    # real flags line up with the sentinel split
+    np.testing.assert_array_equal(np.asarray(lay.real), rows < 48)
+    # docs agree with the permutation
+    w = np.asarray(tokens).reshape(-1)
+    docs_expect = np.asarray(lay.order) // tokens.shape[1]
+    np.testing.assert_array_equal(np.asarray(lay.docs)[:tokens.size], docs_expect)
+    # sorted rows equal the permuted (masked) token stream
+    key = np.where(np.asarray(mask).reshape(-1), w, 48)
+    np.testing.assert_array_equal(rows[:tokens.size], key[np.asarray(lay.order)])
+
+
+def test_histogram_and_offsets():
+    tokens, mask = _toy(v=48)
+    lay = segment.build_layout(tokens, mask, 48, tile_v=8, tile_b=64)
+    w = np.asarray(tokens).reshape(-1)
+    m = np.asarray(mask).reshape(-1)
+    expect = np.bincount(w[m] // 8, minlength=6)
+    np.testing.assert_array_equal(np.asarray(lay.hist), expect)
+    offs = np.asarray(lay.offsets)
+    assert offs[0] == 0 and offs[-1] == m.sum()
+    np.testing.assert_array_equal(np.diff(offs), expect)
+    # CSR contract: draws of tile t occupy sorted positions [offs[t], offs[t+1])
+    rows = np.asarray(lay.rows)
+    for t in range(6):
+        seg = rows[offs[t]:offs[t + 1]]
+        assert ((seg // 8) == t).all()
+
+
+def test_vocab_tile_windows_cover_all_draws():
+    """Every real draw's vocab tile lies inside its batch tile's window, and
+    all-padding batch tiles have empty windows (vcount == 0)."""
+    tokens, mask = _toy(d=7, l=9, v=32, mask_p=0.4)
+    tile_v, tile_b = 4, 16
+    lay = segment.build_layout(tokens, mask, 32, tile_v=tile_v, tile_b=tile_b)
+    rows = np.asarray(lay.rows).reshape(-1, tile_b)
+    vstart, vcount = np.asarray(lay.vstart), np.asarray(lay.vcount)
+    for bi in range(rows.shape[0]):
+        real = rows[bi] < 32
+        if not real.any():
+            assert vcount[bi] == 0
+            continue
+        tiles = rows[bi][real] // tile_v
+        assert vstart[bi] <= tiles.min()
+        assert tiles.max() < vstart[bi] + vcount[bi]
+
+
+def test_chunked_layouts_partition_stream():
+    tokens, mask = _toy(d=8, l=12, v=32)
+    bounds = (0, 4, 8, 12)
+    lays = segment.build_chunked_layouts(tokens, mask, 32, bounds=bounds,
+                                         tile_v=8, tile_b=32)
+    assert len(lays) == 3
+    total = sum(int(l_.hist.sum()) for l_ in lays)
+    assert total == int(np.asarray(mask).sum())
+
+
+def test_pick_tile():
+    assert segment.pick_tile(300, 64) == 60
+    assert segment.pick_tile(256, 64) == 64
+    assert segment.pick_tile(7, 64) == 7
+    assert segment.pick_tile(13, 4) == 1
+
+
+def test_pick_tile_vmem():
+    # small model: whole vocab in one tile (budget 65536//64=1024 ≥ 300)
+    assert segment.pick_tile_vmem(300, 64) == 300
+    # production-ish K: tiles shrink to fit, divisor of V
+    assert segment.pick_tile_vmem(2048, 2048) == 32
+    assert segment.pick_tile_vmem(300, 1024) == 60
+    v, k = 1 << 20, 256
+    t = segment.pick_tile_vmem(v, k)
+    assert v % t == 0 and t * k <= 65536

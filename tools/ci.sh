@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + quick-mode throughput benchmark.
+#
+# Runs entirely on CPU — the Pallas kernels execute in interpret mode
+# (repro.kernels.ops.INTERPRET defaults to True), so this validates kernel
+# semantics and the benchmark pipeline without TPU hardware.
+#
+# Usage: tools/ci.sh  (from the repo root)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "=== tier-1 tests ==="
+python -m pytest -x -q
+
+echo "=== quick throughput benchmark (interpret/CPU) ==="
+python -m benchmarks.run --only throughput
+
+echo "=== artifacts ==="
+ls -l BENCH_*.json bench_results.csv
