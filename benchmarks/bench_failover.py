@@ -20,10 +20,10 @@ def run(quick: bool = True) -> None:
     n_rounds = 12 if quick else 24
 
     baseline = common.run_multiclient(
-        common.lda_hooks(cfg), tokens, mask, n_clients=4, n_rounds=n_rounds,
+        cfg, tokens, mask, n_clients=4, n_rounds=n_rounds,
         method="mhw", eval_every=max(1, n_rounds // 4))
     failed = common.run_multiclient(
-        common.lda_hooks(cfg), tokens, mask, n_clients=4, n_rounds=n_rounds,
+        cfg, tokens, mask, n_clients=4, n_rounds=n_rounds,
         method="mhw", eval_every=max(1, n_rounds // 4),
         drop_client=(1, n_rounds // 4, n_rounds // 2))
 

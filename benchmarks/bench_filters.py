@@ -31,9 +31,8 @@ def run(quick: bool = True) -> None:
     ]
     base_ppl = None
     for label, spec in variants:
-        hooks = common.lda_hooks(cfg)
         res = common.run_multiclient(
-            hooks, tokens, mask, n_clients=4, n_rounds=n_rounds,
+            cfg, tokens, mask, n_clients=4, n_rounds=n_rounds,
             method="mhw", filter_spec=spec,
             eval_every=max(1, n_rounds // 4))
         if spec.kind == "topk":

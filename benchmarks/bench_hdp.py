@@ -1,6 +1,14 @@
 """Paper Fig 7 — HDP-LDA convergence at two client-group sizes (paper: 200
-and 500 clients; CPU-scaled to 2 and 8).  The hierarchical DP resamples CRT
-table counts and the root topic distribution θ0 every round."""
+and 500 clients; CPU-scaled to 2 and 8), driven by ``engine.Trainer``.
+The hierarchical DP resamples CRT table counts and the root topic
+distribution θ0 every round (the family's ``post_round`` hook).
+
+Also benchmarks the token-sorted tile-skipping layout — with HDP's dense
+term b1·θ0_t as the per-topic prior vector — against the scan oracle
+(``--layout sorted`` equivalent: both layouts always run) and writes the
+``BENCH_hdp.json`` artifact so the sorted-path speedup for this family is
+diffable across PRs, mirroring ``BENCH_throughput.json`` for LDA.
+"""
 
 from __future__ import annotations
 
@@ -15,10 +23,12 @@ def run(quick: bool = True) -> None:
                         vocab_size=ccfg.vocab_size, b0=1.0, b1=2.0,
                         mh_steps=4)
     n_rounds = 10 if quick else 25
+    artifact: dict = {"quick": quick, "n_topics": cfg.n_topics,
+                      "vocab": ccfg.vocab_size}
+
     for n_clients in ((2, 8) if not quick else (2, 4)):
-        hooks = common.hdp_hooks(cfg, project=True)
         res = common.run_multiclient(
-            hooks, tokens, mask, n_clients=n_clients, n_rounds=n_rounds,
+            cfg, tokens, mask, n_clients=n_clients, n_rounds=n_rounds,
             method="mhw", eval_every=max(1, n_rounds // 4))
         common.emit(
             "hdp_fig7", sampler="alias_hdp", clients=n_clients,
@@ -27,6 +37,11 @@ def run(quick: bool = True) -> None:
             topics_per_word_final=res.topics_per_word[-1],
             s_per_iter=sum(res.iter_times[1:]) / max(len(res.iter_times) - 1, 1),
             tokens_per_s=res.tokens_per_s)
+
+    # Sorted fast path vs scan oracle (single client).
+    common.layout_speedup_artifact("hdp", cfg, tokens, mask,
+                                   artifact=artifact,
+                                   n_rounds=6 if quick else 10)
 
 
 if __name__ == "__main__":

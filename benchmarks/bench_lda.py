@@ -2,9 +2,10 @@
 
 For each client count the two samplers (method="exact" ≙ YahooLDA's
 full-conditional sparse sampler; method="mhw" ≙ AliasLDA) run the same
-number of rounds on the same sharded corpus.  Reported per run:
-perplexity convergence, average topics/word, per-iteration wall time and
-token throughput — the four panels of Fig 4 (CPU-scaled).
+number of rounds on the same sharded corpus through ``engine.Trainer``.
+Reported per run: perplexity convergence, average topics/word,
+per-iteration wall time and token throughput — the four panels of Fig 4
+(CPU-scaled).
 """
 
 from __future__ import annotations
@@ -24,9 +25,8 @@ def run(quick: bool = True) -> None:
     for n_clients in client_counts:
         results = {}
         for method, label in (("exact", "yahoo_lda"), ("mhw", "alias_lda")):
-            hooks = common.lda_hooks(cfg)
             res = common.run_multiclient(
-                hooks, tokens, mask, n_clients=n_clients, n_rounds=n_rounds,
+                cfg, tokens, mask, n_clients=n_clients, n_rounds=n_rounds,
                 method=method, eval_every=max(1, n_rounds // 4))
             results[label] = res
             common.emit(

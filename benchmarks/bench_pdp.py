@@ -1,8 +1,14 @@
 """Paper Fig 5 — PDP (Pitman-Yor topic model) convergence on the client
 group, with the constraint projection active (the paper's production
-configuration).  Reports perplexity, topics/word, iteration time, and the
-constraint-violation count *before* each projection (it must be driven to
-zero by the projector, not absent by construction)."""
+configuration), driven by ``engine.Trainer``.  Reports perplexity,
+topics/word, iteration time, and the constraint-violation count.
+
+Also benchmarks the token-sorted tile-skipping layout against the scan
+oracle for PDP's 2K joint outcome space (``--layout sorted`` equivalent:
+both layouts always run) and writes the ``BENCH_pdp.json`` artifact so the
+sorted-path speedup for this family is diffable across PRs, mirroring
+``BENCH_throughput.json`` for LDA.
+"""
 
 from __future__ import annotations
 
@@ -11,18 +17,23 @@ from repro.core import pdp
 from benchmarks import common
 
 
+def _model_cfg(ccfg) -> pdp.PDPConfig:
+    return pdp.PDPConfig(n_topics=ccfg.n_topics, vocab_size=ccfg.vocab_size,
+                         alpha=0.1, discount=0.1, concentration=5.0,
+                         mh_steps=4, stirling_n_max=256)
+
+
 def run(quick: bool = True) -> None:
     tokens, mask, _, ccfg = common.default_corpus(quick, seed=1)
-    cfg = pdp.PDPConfig(n_topics=ccfg.n_topics, vocab_size=ccfg.vocab_size,
-                        alpha=0.1, discount=0.1, concentration=5.0,
-                        mh_steps=4, stirling_n_max=256)
+    cfg = _model_cfg(ccfg)
     n_clients = 4
     n_rounds = 10 if quick else 25
+    artifact: dict = {"quick": quick, "n_topics": ccfg.n_topics,
+                      "vocab": ccfg.vocab_size}
 
     for method in ("mhw", "exact"):
-        hooks = common.pdp_hooks(cfg, project=True)
         res = common.run_multiclient(
-            hooks, tokens, mask, n_clients=n_clients, n_rounds=n_rounds,
+            cfg, tokens, mask, n_clients=n_clients, n_rounds=n_rounds,
             method=method, eval_every=max(1, n_rounds // 4))
         common.emit(
             "pdp_fig5", sampler=f"alias_pdp[{method}]", clients=n_clients,
@@ -32,6 +43,12 @@ def run(quick: bool = True) -> None:
             violations_final=res.violations[-1],
             s_per_iter=sum(res.iter_times[1:]) / max(len(res.iter_times) - 1, 1),
             tokens_per_s=res.tokens_per_s)
+
+    # Sorted fast path vs scan oracle (single client: the per-sweep layout
+    # comparison; multi-client convergence numbers above are the fig).
+    common.layout_speedup_artifact("pdp", cfg, tokens, mask,
+                                   artifact=artifact,
+                                   n_rounds=6 if quick else 10)
 
 
 if __name__ == "__main__":

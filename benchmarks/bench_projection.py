@@ -25,9 +25,8 @@ def run(quick: bool = True) -> None:
 
     final = {}
     for project in (True, False):
-        hooks = common.pdp_hooks(cfg, project=project)
         res = common.run_multiclient(
-            hooks, tokens, mask, n_clients=4, n_rounds=n_rounds, tau=2,
+            cfg, tokens, mask, n_clients=4, n_rounds=n_rounds, tau=2,
             method="mhw", eval_every=max(1, n_rounds // 4),
             project_every=1 if project else 0)
         label = "with_projection" if project else "no_projection"

@@ -28,9 +28,8 @@ def run(quick: bool = True) -> None:
     n_rounds = 10 if quick else 20
     finals = {}
     for n_clients in ((1, 4) if quick else (1, 2, 4, 8)):
-        hooks = common.lda_hooks(cfg)
         res = common.run_multiclient(
-            hooks, tokens, mask, n_clients=n_clients, n_rounds=n_rounds,
+            cfg, tokens, mask, n_clients=n_clients, n_rounds=n_rounds,
             method="mhw", eval_every=max(1, n_rounds // 4))
         ll = -float(jnp.log(jnp.asarray(res.perplexities[-1])))
         finals[n_clients] = ll

@@ -1,30 +1,30 @@
 """Shared benchmark harness.
 
-``simulate_clients`` reproduces the distributed round of
-``repro.core.distributed`` semantically on a single device: C clients each
-sweep τ times against a frozen snapshot of the shared statistics (applying
-their *own* deltas locally between sweeps), their filtered deltas are summed
-(the psum), applied, and optionally projected.  This is bit-compatible with
-the shard_map driver modulo client RNG streams, and it is what lets the
-paper's multi-client staleness/consistency experiments (Figs 4-8) run on the
-CPU container.
+The multi-client round loop lives in ``repro.engine.Trainer`` (one driver
+for every ModelFamily); this module keeps the reporting helpers, the
+default corpus, the shared scan-vs-sorted measurement protocol and a thin
+``run_multiclient`` wrapper so benchmark modules stay one-call simple.
 """
 
 from __future__ import annotations
 
 import json
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import hdp, lda, pdp, projection, ps
-from repro.data.synthetic import CorpusConfig, make_topic_corpus, shard_corpus
+from repro.core import family as family_mod
+from repro.core import ps
+from repro.data.synthetic import CorpusConfig, make_topic_corpus
+from repro.engine import RunResult, Trainer, TrainerConfig
 
 Array = jax.Array
+
+__all__ = ["emit", "rows", "write_csv", "write_artifact", "Timer",
+           "RunResult", "run_multiclient", "default_corpus",
+           "lda_sweep_perplexity", "family_sweep_perplexity",
+           "time_trainer_rounds", "layout_speedup_artifact"]
 
 
 # ---------------------------------------------------------------------------
@@ -58,28 +58,38 @@ def write_csv(path: str) -> None:
             f.write(",".join(str(r.get(k, "")) for k in keys) + "\n")
 
 
-def lda_sweep_perplexity(cfg, tokens, mask, layout: str, seed: int,
-                         n_sweeps: int = 5) -> float:
-    """Held-out perplexity after ``n_sweeps`` mhw sweeps with ``layout``.
+def family_sweep_perplexity(cfg, tokens, mask, layout: str, seed: int,
+                            n_sweeps: int = 5) -> float:
+    """Held-out perplexity after ``n_sweeps`` single-client mhw sweeps with
+    ``layout``, for any registered family.
 
     Single source of truth for the scan-vs-sorted equivalence number:
-    bench_throughput's artifact cross-check and
-    tests/test_sorted_sweep.py::test_sorted_matches_scan_perplexity both
-    call this, so the measurement protocol cannot drift between them.
-    Deterministic given (corpus, cfg, seed).
+    the benchmark artifact cross-checks and the parity tests
+    (tests/test_sorted_sweep.py) both call this, so the measurement
+    protocol cannot drift between them.  Deterministic given
+    (corpus, cfg, seed).
     """
-    lays = lda.build_sorted_layouts(cfg, tokens, mask) \
+    fam = family_mod.family_of(cfg)
+    lays = fam.build_sorted_layouts(cfg, tokens, mask) \
         if layout == "sorted" else None
-    local, shared = lda.init_state(cfg, tokens, mask, jax.random.PRNGKey(0))
+    local, shared = fam.init_state(cfg, tokens, mask, jax.random.PRNGKey(0))
     for i in range(n_sweeps):
-        tables, stale = lda.build_alias(cfg, shared)
-        local, dwk, dk = lda.sweep(
+        tables, stale = fam.build_alias(cfg, shared)
+        local, deltas = fam.sweep(
             cfg, local, shared, tables, stale, tokens, mask,
             jax.random.fold_in(jax.random.PRNGKey(seed), i),
             method="mhw", layout=layout, sorted_layouts=lays)
-        shared = lda.apply_delta(shared, dwk, dk)
-    return float(lda.perplexity(cfg, shared, tokens, mask,
+        shared = fam.apply_delta(shared, deltas)
+    return float(fam.perplexity(cfg, shared, tokens, mask,
                                 jax.random.PRNGKey(9)))
+
+
+def lda_sweep_perplexity(cfg, tokens, mask, layout: str, seed: int,
+                         n_sweeps: int = 5) -> float:
+    """LDA-named alias of :func:`family_sweep_perplexity` (kept for the
+    historical artifact/test call sites)."""
+    return family_sweep_perplexity(cfg, tokens, mask, layout, seed,
+                                   n_sweeps=n_sweeps)
 
 
 def write_artifact(name: str, payload: dict) -> str:
@@ -107,253 +117,73 @@ class Timer:
 
 
 # ---------------------------------------------------------------------------
-# Model adapters (same shape as repro.core.distributed.ADAPTERS, plus the
-# per-model eval + alias hooks the benchmark loop needs)
+# The multi-client simulated round — engine.Trainer under a thin wrapper
 # ---------------------------------------------------------------------------
 
-@dataclass
-class ModelHooks:
-    name: str
-    init: Callable          # (tokens, mask, key) -> (local, shared)
-    build_alias: Callable   # shared -> (tables, stale_dense)
-    sweep: Callable         # (local, shared, tables, stale, tok, mask, key, method)
-    apply: Callable         # (shared, deltas) -> shared
-    delta_zero: Callable    # shared -> zero-deltas pytree
-    perplexity: Callable    # (shared, tokens, mask, key) -> scalar
-    topics_per_word: Callable | None = None
-    project: Callable | None = None       # shared -> shared (Alg 1/2)
-    count_violations: Callable | None = None
-    post_round: Callable | None = None    # (local, shared, key) -> (local, shared)
-
-
-def lda_hooks(cfg: lda.LDAConfig) -> ModelHooks:
-    def sweep(local, shared, tables, stale, tok, mask, key, method):
-        local2, dwk, dk = lda.sweep(cfg, local, shared, tables, stale, tok,
-                                    mask, key, method=method)
-        return local2, {"n_wk": dwk}
-
-    def apply(shared, d):
-        n_wk = shared.n_wk + d["n_wk"]
-        return lda.SharedStats(n_wk=n_wk, n_k=n_wk.sum(0))
-
-    return ModelHooks(
-        name="lda",
-        init=lambda t, m, k: lda.init_state(cfg, t, m, k),
-        build_alias=lambda s: lda.build_alias(cfg, s),
-        sweep=sweep, apply=apply,
-        delta_zero=lambda s: {"n_wk": jnp.zeros_like(s.n_wk)},
-        perplexity=lambda s, t, m, k: lda.perplexity(cfg, s, t, m, k),
-        topics_per_word=lambda s: lda.topics_per_word(s),
-    )
-
-
-def pdp_hooks(cfg: pdp.PDPConfig, project: bool = True) -> ModelHooks:
-    def sweep(local, shared, tables, stale, tok, mask, key, method):
-        local2, dm, ds = pdp.sweep(cfg, local, shared, tables, stale, tok,
-                                   mask, key, method=method)
-        return local2, {"m_wk": dm, "s_wk": ds}
-
-    def apply(shared, d):
-        m_wk = shared.m_wk + d["m_wk"]
-        s_wk = shared.s_wk + d["s_wk"]
-        return pdp.SharedStats(m_wk=m_wk, s_wk=s_wk, m_k=m_wk.sum(0),
-                               s_k=s_wk.sum(0))
-
-    def proj(shared):
-        stats = projection.project(
-            {"m_wk": shared.m_wk, "s_wk": shared.s_wk,
-             "m_k": shared.m_k, "s_k": shared.s_k},
-            projection.PDP_RULES, projection.PDP_AGGREGATES)
-        return pdp.SharedStats(**stats)
-
-    return ModelHooks(
-        name="pdp",
-        init=lambda t, m, k: pdp.init_state(cfg, t, m, k),
-        build_alias=lambda s: pdp.build_alias(cfg, s),
-        sweep=sweep, apply=apply,
-        delta_zero=lambda s: {"m_wk": jnp.zeros_like(s.m_wk),
-                              "s_wk": jnp.zeros_like(s.s_wk)},
-        perplexity=lambda s, t, m, k: pdp.perplexity(cfg, s, t, m, k),
-        topics_per_word=lambda s: lda.topics_per_word(
-            lda.SharedStats(n_wk=s.m_wk, n_k=s.m_k)),
-        project=proj if project else None,
-        count_violations=lambda s: projection.count_violations(
-            {"m_wk": s.m_wk, "s_wk": s.s_wk}, projection.PDP_RULES),
-    )
-
-
-def hdp_hooks(cfg: hdp.HDPConfig, project: bool = True) -> ModelHooks:
-    def sweep(local, shared, tables, stale, tok, mask, key, method):
-        local2, dwk, dk = hdp.sweep(cfg, local, shared, tables, stale, tok,
-                                    mask, key, method=method)
-        return local2, {"n_wk": dwk}
-
-    def apply(shared, d):
-        n_wk = shared.n_wk + d["n_wk"]
-        return hdp.SharedStats(n_wk=n_wk, n_k=n_wk.sum(0),
-                               m_k=shared.m_k, theta0=shared.theta0)
-
-    def proj(shared):
-        n_wk = jnp.maximum(shared.n_wk, 0.0)       # nonneg rule
-        return hdp.SharedStats(n_wk=n_wk, n_k=n_wk.sum(0),
-                               m_k=shared.m_k, theta0=shared.theta0)
-
-    def post_round(locals_, shared, key):
-        """CRT table resampling per client; m_k sums across clients (it is a
-        shared aggregation parameter, paper §5.2), then theta0 | m_k."""
-        m_k_total = None
-        for c in range(len(locals_)):
-            locals_[c], m_k = hdp.resample_tables(
-                cfg, locals_[c], shared, jax.random.fold_in(key, c))
-            m_k_total = m_k if m_k_total is None else m_k_total + m_k
-        theta0 = hdp.resample_theta0(cfg, m_k_total,
-                                     jax.random.fold_in(key, 101))
-        shared = hdp.SharedStats(n_wk=shared.n_wk, n_k=shared.n_k,
-                                 m_k=m_k_total, theta0=theta0)
-        return locals_, shared
-
-    return ModelHooks(
-        name="hdp",
-        init=lambda t, m, k: hdp.init_state(cfg, t, m, k),
-        build_alias=lambda s: hdp.build_alias(cfg, s),
-        sweep=sweep, apply=apply,
-        delta_zero=lambda s: {"n_wk": jnp.zeros_like(s.n_wk)},
-        perplexity=lambda s, t, m, k: hdp.perplexity(cfg, s, t, m, k),
-        topics_per_word=lambda s: lda.topics_per_word(
-            lda.SharedStats(n_wk=s.n_wk, n_k=s.n_k)),
-        project=proj if project else None,
-        count_violations=lambda s: projection.count_violations(
-            {"n_wk": s.n_wk}, (projection.Rule("nonneg", "n_wk"),)),
-        post_round=post_round,
-    )
-
-
-# ---------------------------------------------------------------------------
-# The multi-client simulated round
-# ---------------------------------------------------------------------------
-
-@dataclass
-class RunResult:
-    perplexities: list[float] = field(default_factory=list)
-    topics_per_word: list[float] = field(default_factory=list)
-    iter_times: list[float] = field(default_factory=list)
-    violations: list[float] = field(default_factory=list)
-    tokens: int = 0
-
-    @property
-    def tokens_per_s(self) -> float:
-        t = float(np.mean(self.iter_times)) if self.iter_times else 1.0
-        return self.tokens / max(t, 1e-9)
-
-
-def run_multiclient(hooks: ModelHooks, tokens, mask, *, n_clients: int,
+def run_multiclient(model_cfg, tokens, mask, *, n_clients: int,
                     n_rounds: int, tau: int = 1, method: str = "mhw",
-                    alias_refresh_every: int = 1,
+                    layout: str = "scan", alias_refresh_every: int = 1,
                     filter_spec: ps.FilterSpec | None = None,
                     eval_every: int = 5, eval_docs: int = 32,
                     drop_client: tuple[int, int, int] | None = None,
                     key=None, project_every: int = 1) -> RunResult:
-    """The paper's distributed round, simulated client-by-client.
-
-    drop_client: (client_id, from_round, to_round) — failure injection
-    (paper §5.4): that client's deltas are lost for those rounds; on
-    recovery it re-pulls the shared state (its local z/n_dk survive in
-    practice since snapshots are per-client — we keep them, matching the
-    client-failover protocol of re-reading its shard from the snapshot).
-    """
-    key = key if key is not None else jax.random.PRNGKey(0)
-    shards = shard_corpus(np.asarray(tokens), np.asarray(mask), n_clients)
-    shards = [(jnp.asarray(t), jnp.asarray(m)) for t, m in shards]
-
-    # init() builds per-shard stats; the canonical shared state is their sum.
-    locals_ = [hooks.init(t, m, jax.random.fold_in(key, c))[0]
-               for c, (t, m) in enumerate(shards)]
-    shared = _sum_shared(hooks, shards, locals_, key)
-
-    eval_t, eval_m = tokens[:eval_docs], mask[:eval_docs]
-    res = RunResult(tokens=int(np.asarray(mask).sum()))
-    tables = stale = None
-    # Error-feedback residuals (ps.residual_update): what a communication
-    # filter withholds is carried to the next round, never dropped — count
-    # mass must be conserved or the statistics drift negative (paper §5.3's
-    # eventual-consistency contract).
-    residuals = [None] * n_clients
-
-    for r in range(n_rounds):
-        with Timer() as tm:
-            if tables is None or r % alias_refresh_every == 0:
-                tables, stale = hooks.build_alias(shared)
-            snapshot = shared
-            total_delta = None
-            for c in range(n_clients):
-                if drop_client and c == drop_client[0] and \
-                        drop_client[1] <= r < drop_client[2]:
-                    continue  # failed client: contributes nothing this round
-                t, m = shards[c]
-                local_shared = snapshot
-                acc = None
-                for s in range(tau):
-                    k = jax.random.fold_in(key, r * 131 + c * 17 + s)
-                    locals_[c], d = hooks.sweep(locals_[c], local_shared,
-                                                tables, stale, t, m, k, method)
-                    local_shared = hooks.apply(local_shared, d)
-                    acc = d if acc is None else {
-                        n: acc[n] + d[n] for n in d}
-                if filter_spec is not None and filter_spec.kind != "dense":
-                    kf = jax.random.fold_in(key, 7000 + r * 131 + c)
-                    if residuals[c] is not None:
-                        acc = {n: acc[n] + residuals[c][n] for n in acc}
-                    sent = {n: ps.filter_delta(v, filter_spec,
-                                               jax.random.fold_in(kf, i))
-                            for i, (n, v) in enumerate(acc.items())}
-                    residuals[c] = {n: acc[n] - sent[n] for n in acc}
-                    acc = sent
-                total_delta = acc if total_delta is None else {
-                    n: total_delta[n] + acc[n] for n in acc}
-            if total_delta is not None:
-                shared = hooks.apply(shared, total_delta)
-            if hooks.project is not None and project_every and \
-                    r % project_every == 0:
-                shared = hooks.project(shared)
-            if hooks.post_round is not None:
-                locals_, shared = hooks.post_round(
-                    locals_, shared, jax.random.fold_in(key, 9000 + r))
-            jax.block_until_ready(jax.tree.leaves(_stats_dict(shared))[0])
-        res.iter_times.append(tm.elapsed)
-
-        if r % eval_every == 0 or r == n_rounds - 1:
-            pp = float(hooks.perplexity(shared, eval_t, eval_m,
-                                        jax.random.PRNGKey(42)))
-            res.perplexities.append(pp)
-            if hooks.topics_per_word:
-                res.topics_per_word.append(float(hooks.topics_per_word(shared)))
-            if hooks.count_violations:
-                res.violations.append(float(hooks.count_violations(shared)))
-    return res
+    """The paper's distributed round, simulated client-by-client — see
+    ``repro.engine.Trainer`` for the lifecycle.  The model family is
+    resolved from ``model_cfg``'s type via the registry."""
+    tcfg = TrainerConfig(
+        layout=layout, method=method, n_clients=n_clients, tau=tau,
+        alias_refresh_every=alias_refresh_every,
+        project_every=project_every,
+        filter=filter_spec if filter_spec is not None else ps.FilterSpec(),
+        drop_client=drop_client)
+    trainer = Trainer(model_cfg, tokens, mask, config=tcfg, key=key)
+    return trainer.run(n_rounds, eval_every=eval_every, eval_docs=eval_docs)
 
 
-def _stats_dict(shared) -> dict:
-    return shared._asdict() if hasattr(shared, "_asdict") else dict(shared)
+def time_trainer_rounds(model_cfg, tokens, mask, *, layouts=("scan", "sorted"),
+                        n_clients: int = 1, n_rounds: int = 5,
+                        eval_every: int = 10**9, key=None
+                        ) -> dict[str, RunResult]:
+    """Run the same corpus through one Trainer per layout, interleaving is
+    unnecessary here because each layout runs its own jitted program; the
+    first (compile) round is excluded by callers via ``iter_times[1:]``."""
+    out = {}
+    for layout in layouts:
+        tcfg = TrainerConfig(layout=layout, n_clients=n_clients)
+        trainer = Trainer(model_cfg, tokens, mask, config=tcfg, key=key)
+        out[layout] = trainer.run(n_rounds, eval_every=eval_every)
+    return out
 
 
-def _sum_shared(hooks: ModelHooks, shards, locals_, key):
-    """Canonical shared stats = sum over client shards (re-init per shard)."""
-    shared = None
-    for c, (t, m) in enumerate(shards):
-        _, sh = hooks.init(t, m, jax.random.fold_in(key, c))
-        if shared is None:
-            shared = sh
-        else:
-            d = _stats_dict(sh)
-            cur = _stats_dict(shared)
-            merged = {}
-            for n in cur:
-                if cur[n].shape == () or n == "theta0":
-                    merged[n] = cur[n]
-                else:
-                    merged[n] = cur[n] + d[n]
-            shared = type(shared)(**merged)
-    return shared
+def layout_speedup_artifact(name: str, model_cfg, tokens, mask, *,
+                            artifact: dict, n_rounds: int) -> None:
+    """The shared scan-vs-sorted measurement + artifact protocol: run one
+    single-client Trainer per layout, record median round time (first
+    compile round excluded) and final perplexity into ``artifact``, emit
+    the per-layout rows and the speedup summary, and write
+    ``BENCH_<name>.json``.  One implementation for every family so the
+    cross-PR speedup numbers cannot drift between benches."""
+    per_layout = time_trainer_rounds(model_cfg, tokens, mask, n_clients=1,
+                                     n_rounds=n_rounds)
+    secs = {}
+    for layout, res in per_layout.items():
+        # Exclude the compile round when there is more than one.
+        times = res.iter_times[1:] or res.iter_times
+        secs[layout] = sorted(times)[len(times) // 2]
+        artifact.setdefault("s_per_round", {})[layout] = secs[layout]
+        artifact.setdefault("perplexity_final", {})[layout] = \
+            res.perplexities[-1]
+        emit(f"{name}_layout", layout=layout, s_per_round=secs[layout],
+             perplexity_final=res.perplexities[-1])
+    speedup = secs["scan"] / max(secs["sorted"], 1e-9)
+    ppl_rel = abs(per_layout["sorted"].perplexities[-1]
+                  - per_layout["scan"].perplexities[-1]) \
+        / per_layout["scan"].perplexities[-1]
+    artifact["speedup_sorted_vs_scan"] = speedup
+    artifact["ppl_rel_diff_sorted_vs_scan"] = ppl_rel
+    emit(f"{name}_layout_summary", speedup_sorted_vs_scan=speedup,
+         ppl_rel_diff=ppl_rel)
+    write_artifact(name, artifact)
 
 
 def default_corpus(quick: bool, seed: int = 0):

@@ -38,10 +38,14 @@ MODULES = ("lda", "pdp", "hdp", "projection", "scaling", "throughput",
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true", help="paper-scaled sizes")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized quick mode (the default; --full flips)")
     ap.add_argument("--only", default=None,
                     help="comma-separated module subset")
     ap.add_argument("--csv", default="bench_results.csv")
     args = ap.parse_args(argv)
+    if args.quick and args.full:
+        ap.error("--quick and --full are mutually exclusive")
 
     only = set(args.only.split(",")) if args.only else set(MODULES)
     unknown = only - set(MODULES)

@@ -1,44 +1,47 @@
 """End-to-end driver: the paper's full distributed system — multi-client
 parameter-server inference for LDA / PDP / HDP with eventual consistency,
-communication filters, constraint projection, snapshots and failover.
+communication filters, constraint projection, snapshots and failover —
+through the unified ``engine.Trainer`` / ModelFamily API.
 
     PYTHONPATH=src python examples/distributed_lvm.py --model pdp --clients 4
     PYTHONPATH=src python examples/distributed_lvm.py --model lda \
         --filter topk --fail-client 1
+    PYTHONPATH=src python examples/distributed_lvm.py --model hdp \
+        --layout sorted
 
 On a real TPU mesh the same rounds run under shard_map via
 ``repro.core.distributed.make_round_fn`` (clients = data-axis shards,
-server = model-axis row sharding); this example drives the identical logic
-client-by-client so it runs anywhere, and exercises:
+server = model-axis row sharding) against the same family registry; this
+example drives the identical logic client-by-client so it runs anywhere,
+and exercises:
 
   - τ local sweeps against a frozen snapshot (bounded staleness, §5.2-5.3),
+  - scan-oracle or token-sorted tile-skipping layout (``--layout``),
   - magnitude-priority + uniform-sampling delta filters (§5.3),
-  - distributed constraint projection, Algorithm 2 (§5.5),
+  - constraint projection on shared AND client-local polytopes (§5.5),
   - per-client snapshot / failover simulation (§5.4).
 """
 
 from __future__ import annotations
 
 import argparse
-import os
 import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint import ckpt
 from repro.core import hdp, lda, pdp, ps
 from repro.data.synthetic import CorpusConfig, make_topic_corpus
-
-import sys
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
-from benchmarks import common  # noqa: E402  (reuses the client-round driver)
+from repro.engine import Trainer, TrainerConfig
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", choices=["lda", "pdp", "hdp"], default="pdp")
+    ap.add_argument("--layout", choices=["scan", "sorted"], default="scan")
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--rounds", type=int, default=12)
     ap.add_argument("--tau", type=int, default=2,
@@ -55,40 +58,34 @@ def main() -> None:
 
     if args.model == "lda":
         cfg = lda.LDAConfig(n_topics=8, vocab_size=400, mh_steps=2)
-        hooks = common.lda_hooks(cfg)
     elif args.model == "pdp":
         cfg = pdp.PDPConfig(n_topics=8, vocab_size=400, alpha=0.1,
                             discount=0.1, concentration=5.0, mh_steps=4,
                             stirling_n_max=256)
-        hooks = common.pdp_hooks(cfg, project=True)
     else:
         cfg = hdp.HDPConfig(n_topics=16, vocab_size=400, b0=1.0, b1=2.0,
                             mh_steps=4)
-        hooks = common.hdp_hooks(cfg, project=True)
 
     fspec = (ps.FilterSpec(kind="topk", k_rows=50, random_rows=12)
              if args.filter == "topk" else ps.FilterSpec())
     drop = ((args.fail_client, args.rounds // 3, 2 * args.rounds // 3)
             if args.fail_client >= 0 else None)
 
-    print(f"model={args.model} clients={args.clients} tau={args.tau} "
-          f"filter={args.filter} failover={drop}")
+    print(f"model={args.model} layout={args.layout} clients={args.clients} "
+          f"tau={args.tau} filter={args.filter} failover={drop}")
     t0 = time.time()
-    res = common.run_multiclient(
-        hooks, tokens, mask, n_clients=args.clients, n_rounds=args.rounds,
-        tau=args.tau, method="mhw", filter_spec=fspec, drop_client=drop,
-        eval_every=max(1, args.rounds // 6))
+    trainer = Trainer(cfg, tokens, mask, config=TrainerConfig(
+        layout=args.layout, n_clients=args.clients, tau=args.tau,
+        filter=fspec, drop_client=drop))
+    res = trainer.run(args.rounds, eval_every=max(1, args.rounds // 6))
     for i, ppl in enumerate(res.perplexities):
-        extra = ""
-        if res.violations:
-            extra = f"  violations={res.violations[min(i, len(res.violations) - 1)]:.0f}"
-        print(f"eval {i}: perplexity={ppl:9.2f}{extra}")
+        print(f"eval {i}: perplexity={ppl:9.2f}"
+              f"  violations={res.violations[i]:.0f}")
     print(f"total {time.time() - t0:.1f}s, "
           f"~{res.tokens_per_s / 1e3:.1f}k tokens/s/round")
 
     # Snapshot the final shared state (async-snapshot analogue, §5.4).
     snap_dir = args.snapshot_dir or tempfile.mkdtemp(prefix="lvm_snap_")
-    import numpy as np
     path = ckpt.save(snap_dir, f"{args.model}_run", args.rounds, {
         "perplexities": np.asarray(res.perplexities),
         "iter_times": np.asarray(res.iter_times),

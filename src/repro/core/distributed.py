@@ -9,7 +9,16 @@ and a stale replica of the shared statistics.  A *round* is:
   3. filter — communication filter on the accumulated delta (paper §5.3),
   4. push   — psum of filtered deltas across clients (or the compressed
               all-gather transport), applied to the canonical statistics,
-  5. project— distributed constraint projection (paper §5.5, Algorithm 2).
+  5. project— distributed constraint projection (paper §5.5, Algorithm 2)
+              on the shared polytope, plus each family's client-local rules
+              (e.g. HDP's 1 ≤ m_dk ≤ n_dk table-count constraints) applied
+              shard-locally inside the round.
+
+Model specifics enter only through the ``repro.core.family`` registry —
+there is exactly one round implementation for LDA / PDP / HDP, and a
+family's projection rules are sourced verbatim from
+``repro.core.projection.*_RULES`` (split by operand locality, never
+hand-copied here).
 
 Failure injection (paper §5.4): a boolean per-client ``alive`` mask zeroes a
 failed client's contribution for the round — the recovery path (reload from
@@ -19,138 +28,57 @@ snapshot, re-pull, continue) is exercised in tests/benchmarks.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import lda, pdp, hdp, projection, ps
+from repro.core import family as family_mod
+from repro.core import projection, ps
 
 Array = jax.Array
 
 
 @dataclass(frozen=True)
 class DistConfig:
-    model: str = "lda"                 # "lda" | "pdp" | "hdp"
+    model: str = "lda"                 # any name in family.FAMILIES
     tau: int = 1                       # sweeps per sync round (staleness)
     alias_refresh_every: int = 1       # rounds between alias-table rebuilds
     filter: ps.FilterSpec = field(default_factory=ps.FilterSpec)
     project_every: int = 1             # rounds between projections (0 = never)
-
-
-# --------------------------------------------------------------------------
-# Model adapters: uniform (sweep, deltas, apply, rules) per model family.
-# --------------------------------------------------------------------------
-
-class _LDAAdapter:
-    cfg_mod = lda
-    rules = projection.LDA_RULES
-    aggregates = projection.LDA_AGGREGATES
-    delta_names = ("n_wk",)
-
-    @staticmethod
-    def stats_dict(shared):
-        return {"n_wk": shared.n_wk, "n_k": shared.n_k}
-
-    @staticmethod
-    def from_dict(d):
-        return lda.SharedStats(n_wk=d["n_wk"], n_k=d["n_k"])
-
-    @staticmethod
-    def sweep(cfg, local, shared, tables, stale, tokens, mask, key, method):
-        local2, dwk, dk = lda.sweep(cfg, local, shared, tables, stale,
-                                    tokens, mask, key, method=method)
-        return local2, {"n_wk": dwk}
-
-    @staticmethod
-    def apply(shared, deltas):
-        n_wk = shared.n_wk + deltas["n_wk"]
-        return lda.SharedStats(n_wk=n_wk, n_k=n_wk.sum(0))
-
-
-class _PDPAdapter:
-    cfg_mod = pdp
-    rules = projection.PDP_RULES
-    aggregates = projection.PDP_AGGREGATES
-    delta_names = ("m_wk", "s_wk")
-
-    @staticmethod
-    def stats_dict(shared):
-        return {"m_wk": shared.m_wk, "s_wk": shared.s_wk,
-                "m_k": shared.m_k, "s_k": shared.s_k}
-
-    @staticmethod
-    def from_dict(d):
-        return pdp.SharedStats(m_wk=d["m_wk"], s_wk=d["s_wk"],
-                               m_k=d["m_k"], s_k=d["s_k"])
-
-    @staticmethod
-    def sweep(cfg, local, shared, tables, stale, tokens, mask, key, method):
-        local2, dm, dsb = pdp.sweep(cfg, local, shared, tables, stale,
-                                    tokens, mask, key, method=method)
-        return local2, {"m_wk": dm, "s_wk": dsb}
-
-    @staticmethod
-    def apply(shared, deltas):
-        m_wk = shared.m_wk + deltas["m_wk"]
-        s_wk = shared.s_wk + deltas["s_wk"]
-        return pdp.SharedStats(m_wk=m_wk, s_wk=s_wk,
-                               m_k=m_wk.sum(0), s_k=s_wk.sum(0))
-
-
-class _HDPAdapter:
-    cfg_mod = hdp
-    rules = (projection.Rule("nonneg", "n_wk"),)
-    aggregates = (projection.Aggregate("n_wk", "n_k", 0),)
-    delta_names = ("n_wk",)
-
-    @staticmethod
-    def stats_dict(shared):
-        return {"n_wk": shared.n_wk, "n_k": shared.n_k,
-                "m_k": shared.m_k, "theta0": shared.theta0}
-
-    @staticmethod
-    def from_dict(d):
-        return hdp.SharedStats(n_wk=d["n_wk"], n_k=d["n_k"],
-                               m_k=d["m_k"], theta0=d["theta0"])
-
-    @staticmethod
-    def sweep(cfg, local, shared, tables, stale, tokens, mask, key, method):
-        local2, dwk, dk = hdp.sweep(cfg, local, shared, tables, stale,
-                                    tokens, mask, key, method=method)
-        return local2, {"n_wk": dwk}
-
-    @staticmethod
-    def apply(shared, deltas):
-        n_wk = shared.n_wk + deltas["n_wk"]
-        return hdp.SharedStats(n_wk=n_wk, n_k=n_wk.sum(0),
-                               m_k=shared.m_k, theta0=shared.theta0)
-
-
-ADAPTERS = {"lda": _LDAAdapter, "pdp": _PDPAdapter, "hdp": _HDPAdapter}
+    # "scan" | "sorted" (mhw only).  Note: under shard_map the sorted
+    # layouts are rebuilt inside each sweep (per-shard token streams only
+    # exist inside the mesh program, so they cannot be hoisted from here);
+    # engine.Trainer's client-iterated driver hoists them once per shard.
+    layout: str = "scan"
 
 
 # --------------------------------------------------------------------------
 # The distributed round
 # --------------------------------------------------------------------------
 
-def client_round(model_cfg, adapter, dist_cfg: DistConfig, local, snapshot,
-                 tables, stale_dense, tokens, mask, key, method="mhw"):
+def client_round(model_cfg, fam: family_mod.ModelFamily,
+                 dist_cfg: DistConfig, local, snapshot, tables, stale_dense,
+                 tokens, mask, key, method="mhw"):
     """One client's work for a sync round: ``tau`` sweeps against the frozen
     snapshot, applying its own deltas locally between sweeps (the paper's
-    clients update their local replica immediately and push asynchronously).
+    clients update their local replica immediately and push asynchronously),
+    then the family's client-local constraint rules.
 
     Returns (local', accumulated_deltas)."""
     shared_local = snapshot
     acc = None
     for s in range(dist_cfg.tau):
         k = jax.random.fold_in(key, s)
-        local, deltas = adapter.sweep(model_cfg, local, shared_local, tables,
-                                      stale_dense, tokens, mask, k, method)
-        shared_local = adapter.apply(shared_local, deltas)
+        local, deltas = fam.sweep(model_cfg, local, shared_local, tables,
+                                  stale_dense, tokens, mask, k,
+                                  method=method, layout=dist_cfg.layout)
+        shared_local = fam.apply_delta(shared_local, deltas)
         acc = deltas if acc is None else {n: acc[n] + deltas[n] for n in deltas}
+    # Local projection: the rules whose operands live in client state
+    # (HDP's m_dk polytope) — previously silently dropped in distributed
+    # rounds; shard-local and embarrassingly parallel, so applied here.
+    local = fam.local_project(local)
     return local, acc
 
 
@@ -164,7 +92,7 @@ def make_round_fn(model_cfg, dist_cfg: DistConfig, mesh: Mesh,
       shared stats            — canonical copy sharded over ``model`` rows.
     The round returns (local', shared', diagnostics).
     """
-    adapter = ADAPTERS[dist_cfg.model]
+    fam = family_mod.get(dist_cfg.model)
     n_clients = mesh.shape[data_axis]
 
     row_sharding = NamedSharding(mesh, P(model_axis, None))
@@ -182,18 +110,16 @@ def make_round_fn(model_cfg, dist_cfg: DistConfig, mesh: Mesh,
         # 2-3. sample + filter, client-parallel over the data axis.
         from jax.experimental.shard_map import shard_map
 
-        stats_template = adapter.stats_dict(shared)
-
         def one_client(local_shard, tokens_shard, mask_shard, key_shard,
                        alive_shard, snapshot_rep, tables_rep, stale_rep):
             local2, deltas = client_round(
-                model_cfg, adapter, dist_cfg, local_shard, snapshot_rep,
+                model_cfg, fam, dist_cfg, local_shard, snapshot_rep,
                 tables_rep, stale_rep, tokens_shard, mask_shard,
                 key_shard[0], method)
             a = alive_shard[0].astype(jnp.float32)
             k_filter = jax.random.fold_in(key_shard[0], 7)
             out = {}
-            for i, name in enumerate(adapter.delta_names):
+            for i, name in enumerate(fam.delta_names):
                 filt = ps.filter_delta(deltas[name], dist_cfg.filter,
                                        jax.random.fold_in(k_filter, i))
                 # 4. push: eventual-consistency reduce across clients.
@@ -212,10 +138,10 @@ def make_round_fn(model_cfg, dist_cfg: DistConfig, mesh: Mesh,
         local2, summed = fn(local, tokens, mask, keys, alive, snapshot,
                             tables, stale_dense)
 
-        shared2 = adapter.apply(shared, summed)
+        shared2 = fam.apply_delta(shared, summed)
 
         # 5. distributed projection (Algorithm 2) over the model axis rows.
-        stats = adapter.stats_dict(shared2)
+        stats = fam.stats_dict(shared2)
         if dist_cfg.project_every:
             row_specs = {n: P(model_axis, None)
                          for n in stats if stats[n].ndim == 2}
@@ -223,11 +149,15 @@ def make_round_fn(model_cfg, dist_cfg: DistConfig, mesh: Mesh,
                 if stats[n].ndim != 2:
                     row_specs[n] = P()
             projectable = {n: v for n, v in stats.items()}
-            elem_rules = [r for r in adapter.rules
-                          if projectable.get(r.a) is not None]
-            stats = _project_alg2(projectable, elem_rules, adapter.aggregates,
+            # Only the rules whose every operand is a shared statistic run
+            # here; local-operand rules were applied inside client_round.
+            elem_rules = [r for r in fam.shared_rules
+                          if projectable.get(r.a) is not None
+                          and (r.b is None
+                               or projectable.get(r.b) is not None)]
+            stats = _project_alg2(projectable, elem_rules, fam.aggregates,
                                   mesh, model_axis, row_specs)
-        shared3 = adapter.from_dict(stats)
+        shared3 = fam.shared_from_dict(stats)
 
         # Canonical storage: keep the server copy sharded over model rows.
         shared3 = jax.tree.map(

@@ -42,6 +42,12 @@ class HDPConfig:
     beta: float = 0.01      # topic-word Dirichlet
     mh_steps: int = 2
     crt_max: int = 128      # max count for exact CRT sampling
+    # Driver-side cadence + sorted-layout tile geometry (see LDAConfig for
+    # the knob semantics).
+    alias_refresh_every: int = 1
+    tile_v: int | None = None
+    tile_b: int = 1024
+    sorted_chunks: int = 4
 
 
 class SharedStats(NamedTuple):
@@ -89,7 +95,7 @@ def build_alias(cfg: HDPConfig, shared: SharedStats):
     return alias_mod.build(dp), dp
 
 
-@partial(jax.jit, static_argnames=("cfg", "method"))
+@partial(jax.jit, static_argnames=("cfg", "method", "layout"))
 def sweep(
     cfg: HDPConfig,
     local: LocalState,
@@ -100,8 +106,27 @@ def sweep(
     mask: Array,
     key: Array,
     method: str = "mhw",
+    layout: str = "scan",
+    sorted_layouts: tuple | None = None,
 ) -> tuple[LocalState, Array, Array]:
-    """One Gibbs sweep over z. Returns (local', delta_wk, delta_k)."""
+    """One Gibbs sweep over z. Returns (local', delta_wk, delta_k).
+
+    ``layout="sorted"`` (mhw only) runs the generic token-sorted
+    tile-skipping pipeline with the HDP dense term b1·θ0_t as the
+    per-topic prior vector (``repro.core.family``); pass prebuilt
+    ``sorted_layouts`` from ``family.get("hdp").build_sorted_layouts``
+    to hoist the per-shard sorts out of the sweep.
+    """
+    if layout == "sorted":
+        if method != "mhw":
+            raise ValueError("layout='sorted' requires method='mhw'")
+        from repro.core import family as family_mod
+        local2, deltas = family_mod.get("hdp").sweep_sorted(
+            cfg, local, shared, tables, stale_dense, tokens, mask, key,
+            sorted_layouts)
+        return local2, deltas["n_wk"], deltas["n_wk"].sum(0)
+    if layout != "scan":
+        raise ValueError(f"unknown layout {layout!r}")
     d, l = tokens.shape
     beta_bar = cfg.beta * cfg.vocab_size
     n_wk, n_k, theta0 = shared.n_wk, shared.n_k, shared.theta0

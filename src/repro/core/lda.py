@@ -47,7 +47,6 @@ import jax.numpy as jnp
 from repro.core import alias as alias_mod
 from repro.core import mhw
 from repro.data import segment
-from repro.kernels import ops
 
 Array = jax.Array
 
@@ -229,87 +228,19 @@ def _sweep_sorted(
     key: Array,
     layouts: tuple[segment.SortedLayout, ...] | None,
 ) -> tuple[LocalState, Array, Array]:
-    """Token-sorted MHW sweep: fused tile-skipping chains per shard.
-
-    The sweep runs as ``cfg.sorted_chunks`` sequential position-chunks.
-    Within a chunk every token proposes word-major against the current
-    statistics minus its own contribution (the ^{-di} correction) — fully
-    parallel, one fused kernel launch; between chunks ``n_dk`` is refreshed
-    so each document's counts advance ``sorted_chunks`` times per sweep
-    (the scan layout's Gauss-Seidel recurrence, coarsened).  ``n_wk`` stays
-    the sweep-start snapshot throughout, exactly as in the scan layout.
-    """
-    d, l = tokens.shape
-    beta_bar = cfg.beta * cfg.vocab_size
-    tile_v = sorted_tile_v(cfg)
-    n_chunks = max(1, min(cfg.sorted_chunks, l))
-    bounds = chunk_bounds(l, n_chunks)
-    if layouts is not None and len(layouts) != n_chunks:
-        raise ValueError(
-            f"sorted_layouts has {len(layouts)} chunks, cfg wants {n_chunks};"
-            " rebuild with segment.build_chunked_layouts(bounds=lda."
-            "chunk_bounds(L, n_chunks))")
-
-    z = local.z
-    n_dk = local.n_dk
-    for c in range(n_chunks):
-        s, e = bounds[c], bounds[c + 1]
-        tok_c, mask_c = tokens[:, s:e], mask[:, s:e]
-        bc = d * (e - s)
-        tile_b = min(cfg.tile_b, bc)
-        lay = layouts[c] if layouts is not None else segment.build_layout(
-            tok_c, mask_c, cfg.vocab_size, tile_v=tile_v, tile_b=tile_b)
-
-        # Geometry guard for hoisted layouts: vstart/vcount are in
-        # vocab-tile units and rows are padded to tile_b — a layout built
-        # with different tiles would sample silently wrong, not crash.
-        if lay.hist.shape[0] * tile_v != cfg.vocab_size:
-            raise ValueError(
-                f"sorted_layouts[{c}] was built with tile_v="
-                f"{cfg.vocab_size // lay.hist.shape[0]}, sweep uses "
-                f"{tile_v}; rebuild with lda.sorted_tile_v(cfg)")
-        if (lay.rows.shape[0] % tile_b != 0
-                or lay.vstart.shape[0] != lay.rows.shape[0] // tile_b):
-            raise ValueError(
-                f"sorted_layouts[{c}] batch tiling ({lay.vstart.shape[0]} "
-                f"tiles over {lay.rows.shape[0]} draws) does not match "
-                f"tile_b={tile_b}")
-
-        z_c = z[:, s:e]
-        z_flat = z_c.reshape(-1)
-        z_s = segment.sort_values(lay, z_flat, fill=0)
-        ndk = n_dk[lay.docs]    # raw rows; the kernel applies the ^{-di}
-
-        z_new_s = ops.mhw_sweep_sorted(
-            tables, stale_dense, shared.n_wk, shared.n_k, lay.rows, z_s,
-            ndk, lay.vstart, lay.vcount, jax.random.fold_in(key, c),
-            mh_steps=cfg.mh_steps, alpha=cfg.alpha, beta=cfg.beta,
-            beta_bar=beta_bar, tile_v=tile_v, tile_b=tile_b)
-
-        z_new_flat = segment.unsort_values(lay, z_new_s, z_flat)
-        z_new_c = jnp.where(mask_c, z_new_flat.reshape(d, e - s), z_c)
-
-        docs_c = jnp.arange(bc, dtype=jnp.int32) // (e - s)
-        m_c = mask_c.reshape(-1).astype(jnp.float32)
-        n_dk = (n_dk
-                .at[docs_c, z_new_c.reshape(-1)].add(m_c)
-                .at[docs_c, z_flat].add(-m_c))
-        z = z.at[:, s:e].set(z_new_c)
-
-    w_flat = tokens.reshape(-1)
-    m_flat = mask.reshape(-1).astype(jnp.float32)
-    delta_wk = (
-        jnp.zeros((cfg.vocab_size, cfg.n_topics), jnp.float32)
-        .at[w_flat, z.reshape(-1)].add(m_flat)
-        .at[w_flat, local.z.reshape(-1)].add(-m_flat)
-    )
-    delta_k = delta_wk.sum(0)
-    return LocalState(z=z, n_dk=n_dk), delta_wk, delta_k
+    """Token-sorted MHW sweep: the generic tile-skipping pipeline of
+    ``repro.core.family`` instantiated for LDA (prior = α·1, fresh factor =
+    the LM row).  See ``family.ModelFamily.sweep_sorted`` for the chunked
+    Jacobi/Gauss-Seidel relaxation semantics."""
+    from repro.core import family as family_mod
+    local2, deltas = family_mod.get("lda").sweep_sorted(
+        cfg, local, shared, tables, stale_dense, tokens, mask, key, layouts)
+    return local2, deltas["n_wk"], deltas["n_wk"].sum(0)
 
 
 def chunk_bounds(l: int, n_chunks: int) -> tuple[int, ...]:
     """Position-chunk boundaries for the sorted sweep (static per shape)."""
-    return tuple(round(i * l / n_chunks) for i in range(n_chunks + 1))
+    return segment.chunk_bounds(l, n_chunks)
 
 
 def sorted_tile_v(cfg: LDAConfig) -> int:
@@ -317,23 +248,22 @@ def sorted_tile_v(cfg: LDAConfig) -> int:
 
     Hoisted layouts (``segment.build_chunked_layouts``) MUST be built with
     this exact tile size — the layout's vstart/vcount are in vocab-tile
-    units and are consumed by kernels tiled with it.
+    units and are consumed by kernels tiled with it.  Delegates to the
+    family registry so the geometry cannot drift from the sweep's.
     """
-    return cfg.tile_v or segment.pick_tile_vmem(cfg.vocab_size, cfg.n_topics)
+    from repro.core import family as family_mod
+    return family_mod.get("lda").sorted_tile_v(cfg)
 
 
 def build_sorted_layouts(cfg: LDAConfig, tokens: Array, mask: Array
                          ) -> tuple[segment.SortedLayout, ...]:
     """Prebuild the per-chunk sorted layouts ``sweep(layout="sorted")``
-    expects — the one sanctioned recipe, so tile/chunk geometry cannot
-    drift from what the sweep derives internally.  Build once per shard
-    and reuse across sweeps (the layout depends only on tokens/mask).
+    expects — delegates to the family registry so tile/chunk geometry
+    cannot drift from what the sweep derives internally.  Build once per
+    shard and reuse across sweeps (the layout depends only on tokens/mask).
     """
-    l = tokens.shape[1]
-    n_chunks = max(1, min(cfg.sorted_chunks, l))
-    return segment.build_chunked_layouts(
-        tokens, mask, cfg.vocab_size, bounds=chunk_bounds(l, n_chunks),
-        tile_v=sorted_tile_v(cfg), tile_b=cfg.tile_b)
+    from repro.core import family as family_mod
+    return family_mod.get("lda").build_sorted_layouts(cfg, tokens, mask)
 
 
 def mask_f(m: Array) -> Array:

@@ -11,18 +11,27 @@ a document-sparse term sampled exactly and a corpus-dense term sampled from
 the stale alias table; acceptance only needs *point* evaluations of p and q,
 which cost O(1) gathers.
 
-This module is generic over the point-evaluation callables so the same chain
-drives LDA, PDP and HDP.
+This module is generic over the model family.  Every family factors its
+conditional as
+
+    p(e) ∝ (doc_e + prior_e) · f_e          (the ``ModelFamily`` protocol's
+                                             dense-proposal factorization)
+
+with ``doc`` the document-sparse counts over E outcomes (E = K topics for
+LDA/HDP, 2K joint (topic, table-indicator) outcomes for PDP), ``prior`` the
+per-outcome prior mass (α for LDA, b1·θ0_t for HDP) and ``f`` the fresh
+corpus factor (the LM row for LDA/HDP, the Stirling-ratio factor for PDP).
+The stale dense term ``prior·f_stale`` lives in the alias table.
 
 Two layouts are supported (DESIGN.md §5):
 
-* position-scan — :func:`mh_chain` runs inside ``lda.sweep``'s sequential
+* position-scan — :func:`mh_chain` runs inside each family's sequential
   position scan (one chain per document per position);
-* token-sorted — :func:`sorted_chain` is the pure-jnp semantics of one
-  whole-shard chain over the sorted stream of ``repro.data.segment``; the
-  production path is the fused Pallas kernel
-  ``repro.kernels.mhw_fused.mhw_sweep_fused``, which must match it
-  bit-for-bit given the same uniforms.
+* token-sorted — :func:`mix_chain` is the single pure-jnp chain semantics
+  over the sorted stream of ``repro.data.segment``, shared bit-for-bit by
+  the per-family oracles (:func:`sorted_chain`, ``pdp.sorted_chain_pdp``)
+  and the fused Pallas kernels (``repro.kernels.mhw_fused``), which must
+  match them bit-exactly given the same uniforms.
 """
 
 from __future__ import annotations
@@ -79,6 +88,16 @@ class MixtureProposal(NamedTuple):
         return jnp.log(sparse_val + dense_val + 1e-30)
 
 
+def accept_log_ratio(log_p_cand: Array, log_p_cur: Array,
+                     log_q_cur: Array, log_q_cand: Array) -> Array:
+    """Paper eq. 7 in log space: log [p(j) q(i)] − log [p(i) q(j)].
+
+    The single acceptance rule every family and every layout uses — the
+    ``ModelFamily.accept_ratio`` protocol hook resolves here.
+    """
+    return log_p_cand - log_p_cur + log_q_cur - log_q_cand
+
+
 def mh_chain(
     key: Array,
     init: Array,
@@ -98,10 +117,9 @@ def mh_chain(
         z = carry
         k_prop, k_acc = jax.random.split(k)
         cand = proposal.sample(k_prop)
-        log_ratio = (
-            log_p(cand) - log_p(z)
-            + proposal.log_q(z, dense_probs) - proposal.log_q(cand, dense_probs)
-        )
+        log_ratio = accept_log_ratio(
+            log_p(cand), log_p(z),
+            proposal.log_q(z, dense_probs), proposal.log_q(cand, dense_probs))
         accept = jnp.log(jax.random.uniform(k_acc, z.shape) + 1e-30) < log_ratio
         return jnp.where(accept, cand, z), accept
 
@@ -117,10 +135,9 @@ def mh_chain_with_stats(key, init, proposal, dense_probs, log_p, n_steps):
         z = carry
         k_prop, k_acc = jax.random.split(k)
         cand = proposal.sample(k_prop)
-        log_ratio = (
-            log_p(cand) - log_p(z)
-            + proposal.log_q(z, dense_probs) - proposal.log_q(cand, dense_probs)
-        )
+        log_ratio = accept_log_ratio(
+            log_p(cand), log_p(z),
+            proposal.log_q(z, dense_probs), proposal.log_q(cand, dense_probs))
         accept = jnp.log(jax.random.uniform(k_acc, z.shape) + 1e-30) < log_ratio
         return jnp.where(accept, cand, z), jnp.mean(accept.astype(jnp.float32))
 
@@ -130,32 +147,100 @@ def mh_chain_with_stats(key, init, proposal, dense_probs, log_p, n_steps):
 
 
 # ---------------------------------------------------------------------------
-# Token-sorted layout (DESIGN.md §5) — oracle for the fused kernel
+# Token-sorted layout (DESIGN.md §5) — oracle semantics for the fused kernels
 # ---------------------------------------------------------------------------
 
 _EPS = 1e-30
 
 
 def _gather_k(mat: Array, idx: Array) -> Array:
-    """mat: (B, K), idx: (B,) int → (B,) mat[b, idx[b]]."""
+    """mat: (B, E), idx: (B,) int → (B,) mat[b, idx[b]]."""
     return jnp.take_along_axis(mat, idx[:, None].astype(jnp.int32),
                                axis=1)[:, 0]
 
 
+def doc_sparse_logp(doc: Array, prior: Array, outcome: Array) -> Array:
+    """log of the document-sparse target factor log(doc_e + prior_e) at
+    ``outcome``: doc (B, E), prior (E,), outcome (B,) → (B,).
+
+    THE single implementation — :func:`mix_chain` (and through it every
+    oracle and fused kernel) and the ``ModelFamily.doc_sparse_logp``
+    protocol hook all resolve here, so the target math cannot fork.
+    """
+    return jnp.log(_gather_k(doc, outcome) + prior[outcome] + _EPS)
+
+
+def mix_chain(z0: Array, *, doc: Array, prior: Array, logf: Array,
+              sparse_w: Array, stale_rows: Array, prob_rows: Array,
+              alias_rows: Array, dense_mass: Array, slot: Array, coin: Array,
+              u_mix: Array, u_sparse: Array, u_acc: Array) -> Array:
+    """The single whole-stream MH chain over E outcomes, given uniforms.
+
+    The bit-exactness contract of the sorted pipeline: every family's
+    pure-jnp oracle AND every fused Pallas kernel call this function on the
+    same values, so kernel and oracle cannot drift.
+
+    Target (eq. 4 factorization): p(e) ∝ (doc_e + prior_e) · f_e with
+    log f supplied as ``logf``; proposal q(e) ∝ sparse_w_e + stale_e.
+
+    z0: (B,) chain init over outcomes.
+    doc/logf/sparse_w/stale_rows/prob_rows/alias_rows: (B, E) per-token rows
+      (own-token ^{-di} removal already applied by the caller).
+    prior: (E,) per-outcome prior mass (α·1 for LDA/PDP, b1·θ0 for HDP).
+    dense_mass: (B,) stale dense-term mass per token's row.
+    slot/coin/u_mix/u_sparse/u_acc: (S, B) per-step uniforms (slot int32 in
+      [0, E)).  Returns (B,) int32 final states.
+    """
+    e_outcomes = doc.shape[-1]
+    cdf = jnp.cumsum(sparse_w, axis=-1)
+    sparse_mass = cdf[:, -1]
+
+    def log_p(t):
+        return doc_sparse_logp(doc, prior, t) + _gather_k(logf, t)
+
+    def log_q(t):
+        return jnp.log(_gather_k(sparse_w, t) + _gather_k(stale_rows, t)
+                       + _EPS)
+
+    z = z0
+    lp_z = log_p(z)
+    lq_z = log_q(z)
+    for s in range(slot.shape[0]):
+        slot_s = slot[s]
+        dense_draw = jnp.where(coin[s] < _gather_k(prob_rows, slot_s), slot_s,
+                               _gather_k(alias_rows, slot_s))
+        target = u_sparse[s] * sparse_mass
+        sparse_draw = jnp.clip(
+            jnp.sum((cdf <= target[:, None]).astype(jnp.int32), axis=-1),
+            0, e_outcomes - 1)
+        pick_sparse = u_mix[s] * (sparse_mass + dense_mass) < sparse_mass
+        cand = jnp.where(pick_sparse, sparse_draw, dense_draw).astype(jnp.int32)
+        lp_c = log_p(cand)
+        lq_c = log_q(cand)
+        accept = (jnp.log(u_acc[s] + _EPS)
+                  < accept_log_ratio(lp_c, lp_z, lq_z, lq_c))
+        z = jnp.where(accept, cand, z)
+        lp_z = jnp.where(accept, lp_c, lp_z)
+        lq_z = jnp.where(accept, lq_c, lq_z)
+    return z.astype(jnp.int32)
+
+
 def sorted_chain(prob: Array, alias: Array, mass: Array, stale: Array,
-                 n_wk: Array, n_k: Array, rows: Array, z0: Array, ndk: Array,
-                 slot: Array, coin: Array, u_mix: Array, u_sparse: Array,
-                 u_acc: Array, *, alpha: float, beta: float,
+                 n_wk: Array, n_k: Array, prior: Array, rows: Array,
+                 z0: Array, ndk: Array, slot: Array, coin: Array,
+                 u_mix: Array, u_sparse: Array, u_acc: Array, *, beta: float,
                  beta_bar: float) -> Array:
-    """Whole-shard MH chain over the token-sorted stream, given uniforms.
+    """Whole-shard MH chain over the token-sorted stream — lm families.
 
-    Pure-jnp reference semantics of ``kernels.mhw_fused.mhw_sweep_fused``:
-    the fresh LM row, the sparse inverse-CDF draw, the dense alias draw and
-    the acceptance test use the exact formulas of the kernel so outputs are
-    bit-identical.  ``rows`` entries ≥ V are padding and keep ``z0``.
+    Pure-jnp reference semantics of ``kernels.mhw_fused.mhw_sweep_fused``
+    for the families whose fresh factor is the language-model row
+    (n_wk − own + β)/(n_k − own + β̄): LDA (prior = α·1) and HDP-LDA
+    (prior = b1·θ0).  Delegates the chain itself to :func:`mix_chain`, which
+    the kernel also calls — bit-identical outputs given the same uniforms.
+    ``rows`` entries ≥ V are padding and keep ``z0``.
 
-    prob/alias/stale/n_wk: (V, K); mass: (V,); n_k: (K,); rows/z0: (B,);
-    ndk: (B, K) *raw* gathered doc rows (the ^{-di} own-token removal
+    prob/alias/stale/n_wk: (V, K); mass: (V,); n_k/prior: (K,); rows/z0:
+    (B,); ndk: (B, K) *raw* gathered doc rows (the ^{-di} own-token removal
     happens here, as in the kernel); slot/coin/u_mix/u_sparse/u_acc:
     (S, B) per-step uniforms.  Returns (B,) int32.
     """
@@ -169,37 +254,8 @@ def sorted_chain(prob: Array, alias: Array, mass: Array, stale: Array,
     rows_wk = n_wk[r]
     lm = (rows_wk - own + beta) / (n_k[None, :] - own + beta_bar)
 
-    sparse_w = ndk * lm
-    cdf = jnp.cumsum(sparse_w, axis=-1)
-    sparse_mass = cdf[:, -1]
-    dense_mass = mass[r]
-    stale_rows = stale[r]
-
-    def log_p(t):
-        return (jnp.log(_gather_k(ndk, t) + alpha)
-                + jnp.log(_gather_k(lm, t) + _EPS))
-
-    def log_q(t):
-        return jnp.log(_gather_k(sparse_w, t) + _gather_k(stale_rows, t)
-                       + _EPS)
-
-    z = z0
-    lp_z = log_p(z)
-    lq_z = log_q(z)
-    for s in range(slot.shape[0]):
-        slot_s = slot[s]
-        dense_draw = jnp.where(coin[s] < prob[r, slot_s], slot_s,
-                               alias[r, slot_s])
-        target = u_sparse[s] * sparse_mass
-        sparse_draw = jnp.clip(
-            jnp.sum((cdf <= target[:, None]).astype(jnp.int32), axis=-1),
-            0, k_topics - 1)
-        pick_sparse = u_mix[s] * (sparse_mass + dense_mass) < sparse_mass
-        cand = jnp.where(pick_sparse, sparse_draw, dense_draw).astype(jnp.int32)
-        lp_c = log_p(cand)
-        lq_c = log_q(cand)
-        accept = jnp.log(u_acc[s] + _EPS) < lp_c - lp_z + lq_z - lq_c
-        z = jnp.where(accept, cand, z)
-        lp_z = jnp.where(accept, lp_c, lp_z)
-        lq_z = jnp.where(accept, lq_c, lq_z)
+    z = mix_chain(z0, doc=ndk, prior=prior, logf=jnp.log(lm + _EPS),
+                  sparse_w=ndk * lm, stale_rows=stale[r], prob_rows=prob[r],
+                  alias_rows=alias[r], dense_mass=mass[r], slot=slot,
+                  coin=coin, u_mix=u_mix, u_sparse=u_sparse, u_acc=u_acc)
     return jnp.where(real, z, z0).astype(jnp.int32)

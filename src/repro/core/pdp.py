@@ -13,12 +13,19 @@ table).  The joint conditional over (t, r) is given by paper eqs. (5)-(6)
 with generalized-Stirling-number ratios; like LDA it splits into a sparse
 (n_dt) and a dense (α_t) part, so the same MHW machinery applies with a
 state space of 2K outcomes (paper: "a twice as large space of state
-variables").
+variables").  Outcomes are encoded e = t + K·r throughout.
 
 Constraints between the shared statistics (0 ≤ s_wk ≤ m_wk, m_wk > 0 ⇒
 s_wk ≥ 1, aggregates m_k = Σ_w m_wk) are exactly the polytope the paper's
 projection step (§5.5, our ``repro.core.projection``) maintains under
 relaxed consistency.
+
+Two sweep layouts (DESIGN.md §5): ``layout="scan"`` is the sequential
+position scan (correctness oracle); ``layout="sorted"`` routes the shard
+through the generic token-sorted tile-skipping pipeline of
+``repro.core.family`` / ``repro.kernels.mhw_fused`` over the 2K outcome
+space, with :func:`sorted_chain_pdp` as the kernel's bit-exact pure-jnp
+oracle.
 """
 
 from __future__ import annotations
@@ -46,6 +53,12 @@ class PDPConfig:
     gamma: float = 0.5      # base-distribution Dirichlet ψ0 ~ Dir(γ)
     mh_steps: int = 2
     stirling_n_max: int = 512
+    # Driver-side cadence + sorted-layout tile geometry (see LDAConfig for
+    # the knob semantics; tiles here cover the 2K joint outcome space).
+    alias_refresh_every: int = 1
+    tile_v: int | None = None
+    tile_b: int = 1024
+    sorted_chunks: int = 4
 
 
 class SharedStats(NamedTuple):
@@ -87,17 +100,19 @@ def _count(cfg, tokens, z, mask, weight):
     return jnp.zeros((cfg.vocab_size, cfg.n_topics), jnp.float32).at[w, t].add(val)
 
 
-def _log_factors(cfg: PDPConfig, table: Array, m_wk_row: Array, s_wk_row: Array,
-                 m_k: Array, s_k: Array) -> tuple[Array, Array]:
+def log_factors(table: Array, m_wk_row: Array, s_wk_row: Array,
+                m_k: Array, s_k: Array, *, b: float, a: float, gamma: float,
+                gamma_bar: float) -> tuple[Array, Array]:
     """Per-token log factors f(t, r) excluding the (α_t + n_dt) factor.
 
     Implements paper eqs. (5) and (6) for every topic t, given the gathered
     (-di corrected) rows for the token's word.  Shapes: (..., K).
     Returns (log_f_r0, log_f_r1).
-    """
-    b, a = cfg.concentration, cfg.discount
-    gamma_bar = cfg.gamma * cfg.vocab_size
 
+    Module-level with scalar hyperparameters so the fused sorted kernel
+    (``kernels.mhw_fused``) and the oracle (:func:`sorted_chain_pdp`) call
+    the *same* function on tile values — bit-exactness by construction.
+    """
     log_denom = jnp.log(b + m_k)
     # r = 0: existing table
     #   (m_tw + 1 - s_tw)/(m_tw + 1) * S^{m+1}_{s} / S^{m}_{s} / (b + m_t)
@@ -109,9 +124,46 @@ def _log_factors(cfg: PDPConfig, table: Array, m_wk_row: Array, s_wk_row: Array,
     #   * S^{m+1}_{s+1} / S^{m}_{s}
     log_f1 = (jnp.log(b + a * s_k) - log_denom
               + jnp.log(s_wk_row + 1.0) - jnp.log(m_wk_row + 1.0)
-              + jnp.log(cfg.gamma + s_wk_row) - jnp.log(gamma_bar + s_k)
+              + jnp.log(gamma + s_wk_row) - jnp.log(gamma_bar + s_k)
               + stirling.log_ratio_incr(table, m_wk_row, s_wk_row))
     return log_f0, log_f1
+
+
+def _log_factors(cfg: PDPConfig, table: Array, m_wk_row: Array,
+                 s_wk_row: Array, m_k: Array, s_k: Array
+                 ) -> tuple[Array, Array]:
+    """Config-bound wrapper around :func:`log_factors`."""
+    return log_factors(table, m_wk_row, s_wk_row, m_k, s_k,
+                       b=cfg.concentration, a=cfg.discount, gamma=cfg.gamma,
+                       gamma_bar=cfg.gamma * cfg.vocab_size)
+
+
+def own_contrib(k_topics: int, e0: Array, real: Array
+                ) -> tuple[Array, Array]:
+    """^{-di} one-hot contributions for joint outcomes e = t + K·r.
+
+    Returns (own_t, own_r): (B, K) float32 — the token's own customer and
+    table contribution, zeroed for padding lanes.  Shared by the fused
+    kernel and the oracle (same ops, same bits).
+    """
+    z0 = e0 % k_topics
+    r0 = e0 // k_topics
+    karange = jax.lax.broadcasted_iota(jnp.int32, (1, k_topics), 1)
+    own_t = ((karange == z0[:, None]) & real[:, None]).astype(jnp.float32)
+    own_r = own_t * (r0[:, None] > 0).astype(jnp.float32)
+    return own_t, own_r
+
+
+def corrected_rows(m_row_raw: Array, s_row_raw: Array, own_t: Array,
+                   own_r: Array) -> tuple[Array, Array]:
+    """Apply the ^{-di} removal + CRP bookkeeping repair to gathered rows:
+    a removed non-opener cannot leave a table-less dish; a removed opener of
+    an empty dish removes its table."""
+    m_row = m_row_raw - own_t
+    s_row = s_row_raw - own_r
+    s_row = jnp.where(m_row > 0, jnp.maximum(s_row, 1.0), 0.0)
+    s_row = jnp.minimum(s_row, m_row)
+    return m_row, s_row
 
 
 def dense_probs(cfg: PDPConfig, shared: SharedStats) -> Array:
@@ -130,7 +182,7 @@ def build_alias(cfg: PDPConfig, shared: SharedStats) -> tuple[alias_mod.AliasTab
     return alias_mod.build(dp), dp
 
 
-@partial(jax.jit, static_argnames=("cfg", "method"))
+@partial(jax.jit, static_argnames=("cfg", "method", "layout"))
 def sweep(
     cfg: PDPConfig,
     local: LocalState,
@@ -141,8 +193,26 @@ def sweep(
     mask: Array,
     key: Array,
     method: str = "mhw",
+    layout: str = "scan",
+    sorted_layouts: tuple | None = None,
 ) -> tuple[LocalState, Array, Array]:
-    """One Gibbs sweep; returns new local state + (V,K) deltas for m and s."""
+    """One Gibbs sweep; returns new local state + (V,K) deltas for m and s.
+
+    ``layout="sorted"`` (mhw only) runs the generic token-sorted
+    tile-skipping pipeline over the 2K joint outcomes (see
+    ``repro.core.family``); pass prebuilt ``sorted_layouts`` from
+    ``family.get("pdp").build_sorted_layouts`` to hoist the per-shard sorts.
+    """
+    if layout == "sorted":
+        if method != "mhw":
+            raise ValueError("layout='sorted' requires method='mhw'")
+        from repro.core import family as family_mod
+        local2, deltas = family_mod.get("pdp").sweep_sorted(
+            cfg, local, shared, tables, stale_dense, tokens, mask, key,
+            sorted_layouts)
+        return local2, deltas["m_wk"], deltas["s_wk"]
+    if layout != "scan":
+        raise ValueError(f"unknown layout {layout!r}")
     d, l = tokens.shape
     k_topics = cfg.n_topics
     table = stirling.as_jax(cfg.stirling_n_max, cfg.discount)
@@ -159,13 +229,7 @@ def sweep(
         n_dk_m = n_dk.at[docs, z_old].add(-mf)
         own_t = jax.nn.one_hot(z_old, k_topics) * mf[:, None]
         own_r = own_t * r_old.astype(jnp.float32)[:, None]
-        m_row = m_wk[w] - own_t                    # (D, K)
-        s_row = s_wk[w] - own_r
-        # local repair mirroring the CRP bookkeeping: a removed non-opener
-        # cannot leave a table-less dish; a removed opener of an empty dish
-        # removes its table.
-        s_row = jnp.where(m_row > 0, jnp.maximum(s_row, 1.0), 0.0)
-        s_row = jnp.minimum(s_row, m_row)
+        m_row, s_row = corrected_rows(m_wk[w], s_wk[w], own_t, own_r)
         m_k_m = m_k[None, :] - own_t
         s_k_m = s_k[None, :] - own_r
 
@@ -200,19 +264,71 @@ def sweep(
     n_dk_final, (z_t, r_t) = jax.lax.scan(position_step, local.n_dk, inputs)
     z_new, r_new = z_t.T, r_t.T
 
+    delta_m, delta_s = deltas_from(cfg, tokens, mask, local.z, local.r,
+                                   z_new, r_new)
+    return (LocalState(z=z_new, r=r_new, n_dk=n_dk_final), delta_m, delta_s)
+
+
+def deltas_from(cfg: PDPConfig, tokens: Array, mask: Array, z_old: Array,
+                r_old: Array, z_new: Array, r_new: Array
+                ) -> tuple[Array, Array]:
+    """(V, K) customer/table count deltas between two assignment states."""
     w_flat = tokens.reshape(-1)
     mf = mask.reshape(-1).astype(jnp.float32)
     delta_m = (
         jnp.zeros((cfg.vocab_size, cfg.n_topics), jnp.float32)
         .at[w_flat, z_new.reshape(-1)].add(mf)
-        .at[w_flat, local.z.reshape(-1)].add(-mf)
+        .at[w_flat, z_old.reshape(-1)].add(-mf)
     )
     delta_s = (
         jnp.zeros((cfg.vocab_size, cfg.n_topics), jnp.float32)
         .at[w_flat, z_new.reshape(-1)].add(mf * r_new.reshape(-1))
-        .at[w_flat, local.z.reshape(-1)].add(-mf * local.r.reshape(-1))
+        .at[w_flat, z_old.reshape(-1)].add(-mf * r_old.reshape(-1))
     )
-    return (LocalState(z=z_new, r=r_new, n_dk=n_dk_final), delta_m, delta_s)
+    return delta_m, delta_s
+
+
+def sorted_chain_pdp(prob: Array, alias: Array, mass: Array, stale: Array,
+                     m_wk: Array, s_wk: Array, m_k: Array, s_k: Array,
+                     stirl: Array, prior: Array, rows: Array, e0: Array,
+                     ndk: Array, slot: Array, coin: Array, u_mix: Array,
+                     u_sparse: Array, u_acc: Array, *, b: float, a: float,
+                     gamma: float, gamma_bar: float) -> Array:
+    """Whole-shard MH chain over the token-sorted stream — PDP's 2K space.
+
+    Pure-jnp reference semantics of ``kernels.mhw_fused.pdp_sweep_fused``:
+    the fresh Stirling-ratio factors, the ^{-di} correction + CRP repair and
+    the chain itself (via ``mhw.mix_chain``) use the exact functions the
+    kernel uses, so outputs are bit-identical given the same uniforms.
+
+    prob/alias/stale: (V, 2K); mass: (V,); m_wk/s_wk: (V, K); m_k/s_k: (K,);
+    stirl: the log-Stirling table; prior: (2K,); rows/e0: (B,) sorted
+    token-types (≥V ⇒ padding, kept at e0) and joint-outcome chain init;
+    ndk: (B, K) *raw* gathered doc rows; uniforms: (S, B), slot in [0, 2K).
+    Returns (B,) int32 final joint outcomes.
+    """
+    v, k_topics = m_wk.shape
+    real = rows < v
+    r = jnp.clip(rows, 0, v - 1)
+
+    own_t, own_r = own_contrib(k_topics, e0, real)
+    m_row, s_row = corrected_rows(m_wk[r], s_wk[r], own_t, own_r)
+    m_k_m = m_k[None, :] - own_t
+    s_k_m = s_k[None, :] - own_r
+
+    log_f0, log_f1 = log_factors(stirl, m_row, s_row, m_k_m, s_k_m,
+                                 b=b, a=a, gamma=gamma, gamma_bar=gamma_bar)
+    log_f = jnp.concatenate([log_f0, log_f1], axis=-1)         # (B, 2K)
+    ndk_m = ndk - own_t
+    ndk_ext = jnp.concatenate([ndk_m, ndk_m], axis=-1)
+    sparse_w = ndk_ext * jnp.exp(log_f)
+
+    e = mhw.mix_chain(e0, doc=ndk_ext, prior=prior, logf=log_f,
+                      sparse_w=sparse_w, stale_rows=stale[r],
+                      prob_rows=prob[r], alias_rows=alias[r],
+                      dense_mass=mass[r], slot=slot, coin=coin, u_mix=u_mix,
+                      u_sparse=u_sparse, u_acc=u_acc)
+    return jnp.where(real, e, e0).astype(jnp.int32)
 
 
 def apply_delta(shared: SharedStats, delta_m: Array, delta_s: Array) -> SharedStats:

@@ -63,6 +63,12 @@ class SortedLayout(NamedTuple):
     offsets: Array
 
 
+def chunk_bounds(l: int, n_chunks: int) -> tuple[int, ...]:
+    """Position-chunk boundaries for a chunked sorted sweep (static per
+    shape): chunk c covers positions [bounds[c], bounds[c+1])."""
+    return tuple(round(i * l / n_chunks) for i in range(n_chunks + 1))
+
+
 def pick_tile(n: int, target: int) -> int:
     """Largest divisor of ``n`` that is ≤ ``target`` (tile-size helper)."""
     for t in range(min(target, n), 0, -1):
@@ -135,7 +141,7 @@ def build_chunked_layouts(tokens: Array, mask: Array, vocab_size: int, *,
     """Per-position-chunk layouts for ``lda.sweep(layout="sorted")``.
 
     ``bounds`` are the chunk boundaries over the position axis (see
-    ``lda.chunk_bounds``); chunk c covers positions [bounds[c], bounds[c+1]).
+    :func:`chunk_bounds`); chunk c covers positions [bounds[c], bounds[c+1]).
     Build once per shard and reuse across sweeps.
     """
     d = tokens.shape[0]

@@ -1,0 +1,6 @@
+"""Training engine: the unified multi-client driver over the ModelFamily
+protocol (``repro.engine.trainer``)."""
+
+from repro.engine.trainer import RunResult, Trainer, TrainerConfig
+
+__all__ = ["RunResult", "Trainer", "TrainerConfig"]

@@ -1,0 +1,270 @@
+"""``Trainer``: the one driver loop for every ModelFamily (paper §5).
+
+Replaces the hand-rolled per-model driver loops that used to live in
+``examples/quickstart.py``, ``examples/distributed_lvm.py`` and
+``benchmarks/bench_{lda,pdp,hdp}.py``, and the per-model adapter classes of
+``core/distributed.py``: model specifics enter only through the
+``repro.core.family`` registry, so LDA / PDP / HDP — and any future family —
+run the identical lifecycle:
+
+    pull    — snapshot the shared statistics (frozen for the round),
+    sample  — ``tau`` local Gibbs sweeps per client against the snapshot
+              (scan oracle layout or the token-sorted tile-skipping fast
+              path, selected by ``TrainerConfig.layout``), each client
+              applying its own deltas locally (bounded staleness, §5.2),
+    filter  — communication filter + error-feedback residuals on the
+              accumulated delta (§5.3),
+    push    — sum of filtered deltas applied to the canonical statistics,
+    project — constraint projection on the shared polytope (§5.5) plus the
+              family's client-local rules (e.g. HDP's 1 ≤ m_dk ≤ n_dk),
+    (post)  — family auxiliary resampling (HDP CRT tables + θ0).
+
+The Trainer also owns the alias-table refresh cadence (the l/n staleness
+rule of §3.3): tables are rebuilt every ``alias_refresh_every`` rounds and
+reused in between, which is the producer half of the paper's §5.1
+producer/consumer design.
+
+The loop is semantically the single-device simulation of
+``core.distributed.make_round_fn`` (clients iterated instead of
+shard_mapped); RNG streams are keyed identically to the historical
+``benchmarks.common.run_multiclient``.  One deliberate behavior change
+from that loop: projection now runs uniformly per ``project_every`` for
+*every* family (the old loop never projected LDA) — matching the
+distributed round's paper-production default; pass ``project_every=0``
+to disable.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import family as family_mod
+from repro.core import ps
+from repro.data.synthetic import shard_corpus
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class TrainerConfig:
+    """Driver-side knobs; model-side knobs live in the family's config."""
+
+    layout: str = "scan"          # "scan" (oracle) | "sorted" (fast path)
+    method: str = "mhw"           # "mhw" | "exact" (scan layout only)
+    n_clients: int = 1
+    tau: int = 1                  # local sweeps per sync round (staleness)
+    # Rounds between alias-table rebuilds; None → the model config's value.
+    alias_refresh_every: int | None = None
+    project_every: int = 1        # rounds between projections (0 = never)
+    filter: ps.FilterSpec = field(default_factory=ps.FilterSpec)
+    # Failure injection (§5.4): (client_id, from_round, to_round) — that
+    # client's pushes are lost for those rounds; on recovery it continues
+    # from its snapshot against the freshly-pulled shared state.
+    drop_client: tuple[int, int, int] | None = None
+
+
+@dataclass
+class RunResult:
+    perplexities: list[float] = field(default_factory=list)
+    topics_per_word: list[float] = field(default_factory=list)
+    iter_times: list[float] = field(default_factory=list)
+    violations: list[float] = field(default_factory=list)
+    tokens: int = 0
+
+    @property
+    def tokens_per_s(self) -> float:
+        t = float(np.mean(self.iter_times)) if self.iter_times else 1.0
+        return self.tokens / max(t, 1e-9)
+
+
+class Trainer:
+    """Multi-client trainer for one registered model family.
+
+    >>> cfg = lda.LDAConfig(n_topics=8, vocab_size=400)
+    >>> t = Trainer(cfg, tokens, mask,
+    ...             config=TrainerConfig(n_clients=4, layout="sorted"))
+    >>> result = t.run(n_rounds=20, eval_every=5)
+
+    The family is resolved from the model config's type via the registry
+    (``family.family_of``).  State lives on the instance: per-client local
+    states, the canonical shared statistics, prebuilt sorted layouts (the
+    token stream never changes between sweeps, so the per-shard sorts are
+    hoisted out of the loop), alias tables + their staleness, and the
+    error-feedback residuals of the communication filter.
+    """
+
+    def __init__(self, model_cfg, tokens: Array, mask: Array, *,
+                 config: TrainerConfig = TrainerConfig(),
+                 key: Array | None = None):
+        if config.layout not in ("scan", "sorted"):
+            raise ValueError(f"unknown layout {config.layout!r}")
+        if config.layout == "sorted" and config.method != "mhw":
+            raise ValueError("layout='sorted' requires method='mhw'")
+        self.cfg = model_cfg
+        self.tcfg = config
+        self.family = family_mod.family_of(model_cfg)
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.tokens = jnp.asarray(tokens)
+        self.mask = jnp.asarray(mask)
+        self.n_tokens = int(np.asarray(mask).sum())
+
+        shards = shard_corpus(np.asarray(tokens), np.asarray(mask),
+                              config.n_clients)
+        self.shards = [(jnp.asarray(t), jnp.asarray(m)) for t, m in shards]
+
+        # init() builds per-shard stats; the canonical shared state is
+        # their sum (replicated stats — e.g. θ0 — taken from shard 0).
+        self.locals_: list = []
+        shared = None
+        for c, (t, m) in enumerate(self.shards):
+            loc, sh = self.family.init_state(model_cfg, t, m,
+                                             jax.random.fold_in(self.key, c))
+            self.locals_.append(loc)
+            shared = sh if shared is None else self._merge_shared(shared, sh)
+        self.shared = shared
+
+        # Hoisted sorted layouts: one tuple of per-chunk layouts per shard.
+        self.layouts = None
+        if config.layout == "sorted":
+            self.layouts = [
+                self.family.build_sorted_layouts(model_cfg, t, m)
+                for t, m in self.shards]
+
+        self.alias_refresh_every = (
+            config.alias_refresh_every
+            if config.alias_refresh_every is not None
+            else getattr(model_cfg, "alias_refresh_every", 1))
+        self.tables = None
+        self.stale = None
+        # Error-feedback residuals (ps.residual_update): what a
+        # communication filter withholds is carried to the next round,
+        # never dropped — count mass must be conserved or the statistics
+        # drift negative (paper §5.3's eventual-consistency contract).
+        self.residuals: list = [None] * config.n_clients
+        self.round_idx = 0
+
+    # ------------------------------------------------------------------
+    def _merge_shared(self, acc, sh):
+        fam = self.family
+        a, b = fam.stats_dict(acc), fam.stats_dict(sh)
+        merged = {n: (a[n] if n in fam.replicated_stats or a[n].shape == ()
+                      else a[n] + b[n])
+                  for n in a}
+        return fam.shared_from_dict(merged)
+
+    def _refresh_alias(self) -> None:
+        if self.tables is None or \
+                self.round_idx % self.alias_refresh_every == 0:
+            self.tables, self.stale = self.family.build_alias(self.cfg,
+                                                              self.shared)
+
+    def _client_failed(self, c: int) -> bool:
+        drop = self.tcfg.drop_client
+        return (drop is not None and c == drop[0]
+                and drop[1] <= self.round_idx < drop[2])
+
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        """One sync round: pull → sample → filter → push → project."""
+        fam, cfg, tcfg = self.family, self.cfg, self.tcfg
+        r = self.round_idx
+        self._refresh_alias()
+
+        snapshot = self.shared                       # pull (frozen)
+        total_delta = None
+        for c in range(tcfg.n_clients):
+            if self._client_failed(c):
+                continue   # failed client: contributes nothing this round
+            t, m = self.shards[c]
+            lays = self.layouts[c] if self.layouts is not None else None
+            local_shared = snapshot
+            acc = None
+            for s in range(tcfg.tau):                # sample (τ sweeps)
+                k = jax.random.fold_in(self.key, r * 131 + c * 17 + s)
+                self.locals_[c], d = fam.sweep(
+                    cfg, self.locals_[c], local_shared, self.tables,
+                    self.stale, t, m, k, method=tcfg.method,
+                    layout=tcfg.layout, sorted_layouts=lays)
+                local_shared = fam.apply_delta(local_shared, d)
+                acc = d if acc is None else {n: acc[n] + d[n] for n in d}
+            # Client-local constraint rules (e.g. HDP's table-count
+            # polytope 1 ≤ m_dk ≤ n_dk) — applied every round, exactly as
+            # the distributed round does.
+            self.locals_[c] = fam.local_project(self.locals_[c])
+            if tcfg.filter.kind != "dense":          # filter (§5.3)
+                kf = jax.random.fold_in(self.key, 7000 + r * 131 + c)
+                if self.residuals[c] is not None:
+                    acc = {n: acc[n] + self.residuals[c][n] for n in acc}
+                sent = {n: ps.filter_delta(v, tcfg.filter,
+                                           jax.random.fold_in(kf, i))
+                        for i, (n, v) in enumerate(acc.items())}
+                self.residuals[c] = {n: acc[n] - sent[n] for n in acc}
+                acc = sent
+            total_delta = acc if total_delta is None else {
+                n: total_delta[n] + acc[n] for n in acc}
+
+        if total_delta is not None:                  # push
+            self.shared = fam.apply_delta(self.shared, total_delta)
+        if tcfg.project_every and r % tcfg.project_every == 0:   # project
+            self.shared = fam.project(self.shared)
+        self.locals_, self.shared = fam.post_round(  # family auxiliaries
+            cfg, self.locals_, self.shared,
+            jax.random.fold_in(self.key, 9000 + r))
+        jax.block_until_ready(
+            jax.tree.leaves(fam.stats_dict(self.shared))[0])
+        self.round_idx += 1
+
+    def run(self, n_rounds: int, *, eval_every: int = 5,
+            eval_docs: int = 32) -> RunResult:
+        """Run ``n_rounds`` sync rounds with periodic held-out evaluation."""
+        import time
+
+        fam, cfg = self.family, self.cfg
+        eval_t = self.tokens[:eval_docs]
+        eval_m = self.mask[:eval_docs]
+        res = RunResult(tokens=self.n_tokens)
+        first = self.round_idx
+        for r in range(first, first + n_rounds):
+            t0 = time.perf_counter()
+            self.step()
+            res.iter_times.append(time.perf_counter() - t0)
+            if (r - first) % eval_every == 0 or r == first + n_rounds - 1:
+                res.perplexities.append(float(fam.perplexity(
+                    cfg, self.shared, eval_t, eval_m,
+                    jax.random.PRNGKey(42))))
+                res.topics_per_word.append(
+                    float(fam.topics_per_word(self.shared)))
+                res.violations.append(
+                    float(fam.count_violations(self.shared)))
+        return res
+
+    # ------------------------------------------------------------ queries
+    def perplexity(self, tokens: Array | None = None,
+                   mask: Array | None = None,
+                   key: Array | None = None) -> float:
+        return float(self.family.perplexity(
+            self.cfg, self.shared,
+            self.tokens if tokens is None else tokens,
+            self.mask if mask is None else mask,
+            jax.random.PRNGKey(42) if key is None else key))
+
+    def consistency_error(self) -> float:
+        """Max |counts-from-assignments − maintained| over the family's
+        count-conserved shared statistics, summed across client shards.
+
+        With the dense filter this must be exactly 0.0 in either layout —
+        the sufficient-statistics parity contract between the sorted fast
+        path and the scan oracle (integer-valued fp32 counts are exact).
+        """
+        fam, cfg = self.family, self.cfg
+        totals: dict[str, Array] = {}
+        for (t, m), loc in zip(self.shards, self.locals_):
+            for n, v in fam.count_stats(cfg, t, m, loc).items():
+                totals[n] = v if n not in totals else totals[n] + v
+        stats = fam.stats_dict(self.shared)
+        return max(float(jnp.abs(totals[n] - stats[n]).max())
+                   for n in fam.conserved_stats)

@@ -1,26 +1,38 @@
-"""Pallas TPU kernel: fused MHW sweep step over the token-sorted layout.
+"""Pallas TPU kernels: fused MHW sweep steps over the token-sorted layout.
 
 One program = one (batch-tile, resident-vocab-tile) pair of the sorted
-stream (``repro.data.segment``).  With the (TILE_V, K) table tile — alias
+stream (``repro.data.segment``).  With the (TILE_V, E) table tile — alias
 ``prob``/``alias``/``mass`` rows, the stale dense matrix and the *fresh*
-``n_wk`` rows — resident in VMEM, the whole per-token MH chain of paper §3
-retires in a single residency:
+shared-statistic rows — resident in VMEM, the whole per-token MH chain of
+paper §3 retires in a single residency:
 
-  1. fresh language-model rows  lm = (n_wk[w] − own + β)/(n_k − own + β̄)
-     read from the resident tile — each word-topic row is touched once per
-     (batch-tile, vocab-tile) pair instead of once per scan position;
+  1. the fresh per-outcome factor f is computed from the resident tile —
+     each word-topic row is touched once per (batch-tile, vocab-tile) pair
+     instead of once per scan position;
   2. the sparse+dense mixture proposal (paper eq. 4): document-sparse term
-     via an inverse-CDF draw over the K lanes, corpus-dense term via the
+     via an inverse-CDF draw over the E lanes, corpus-dense term via the
      alias-table slot/coin draw;
   3. the stale-q point gathers and the MH acceptance coin (paper eq. 7).
 
 Unfused, steps 2–3 are five HBM round trips per MH step (proposal draw,
-two q gathers, two p gathers) plus a fresh ``n_wk`` gather per token; fused
-they are VMEM reads.  Grid programs outside a batch tile's vocab window are
-skipped via scalar prefetch exactly as in ``alias_sample_sorted``.
+two q gathers, two p gathers) plus a fresh statistics gather per token;
+fused they are VMEM reads.  Grid programs outside a batch tile's vocab
+window are skipped via scalar prefetch exactly as in ``alias_sample_sorted``.
 
-``repro.core.mhw.sorted_chain`` is the pure-jnp oracle: identical formulas,
-identical uniforms, bit-identical outputs (tests/test_sorted_sweep.py).
+Two kernels instantiate the ``ModelFamily`` dense-proposal factorization
+(p(e) ∝ (doc_e + prior_e)·f_e, see ``repro.core.mhw``):
+
+* :func:`mhw_sweep_fused` — lm families (LDA, HDP-LDA): E = K outcomes,
+  f = (n_wk − own + β)/(n_k − own + β̄), per-topic ``prior`` vector
+  (α·1 for LDA, b1·θ0 for HDP).  Oracle: ``mhw.sorted_chain``.
+* :func:`pdp_sweep_fused` — PDP: E = 2K joint (topic, table-indicator)
+  outcomes, f = the generalized-Stirling-ratio factors of paper eqs. (5)-(6)
+  computed from resident (m_wk, s_wk) tiles plus the VMEM-resident
+  log-Stirling table.  Oracle: ``pdp.sorted_chain_pdp``.
+
+Both kernels delegate the chain itself to ``mhw.mix_chain`` — the same
+function their oracles call — so kernel and oracle are bit-identical given
+the same uniforms (tests/test_sorted_sweep.py).
 """
 
 from __future__ import annotations
@@ -32,18 +44,43 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# Shared with the oracle: the bit-exactness contract requires the kernel
-# and mhw.sorted_chain to use the identical guard constant and gather.
-from repro.core.mhw import _EPS, _gather_k
+# Shared with the oracles: the bit-exactness contract requires kernels and
+# oracles to run the identical chain math on identical factor values.
+from repro.core.mhw import _EPS, mix_chain
+from repro.core.pdp import corrected_rows, log_factors, own_contrib
 from repro.kernels.alias_sample import DEFAULT_TILE_B, DEFAULT_TILE_V
+
+
+def _index_maps(nv: int):
+    """BlockSpec index maps shared by both sorted-layout kernels: per-batch
+    blocks, per-step uniform blocks, whole-array residents, and the
+    scalar-prefetched vocab-tile-window maps (the tile-skip re-point)."""
+    def bmap(bi, vi, vs, vc):
+        return (bi,)
+
+    def bmap2(bi, vi, vs, vc):
+        return (bi, 0)
+
+    def smap(bi, vi, vs, vc):
+        return (0, bi)
+
+    def fullmap(bi, vi, vs, vc):
+        return (0, 0)
+
+    def vmap_(bi, vi, vs, vc):
+        return (jnp.clip(vs[bi] + jnp.minimum(vi, vc[bi] - 1), 0, nv - 1), 0)
+
+    def vmap1(bi, vi, vs, vc):
+        return (jnp.clip(vs[bi] + jnp.minimum(vi, vc[bi] - 1), 0, nv - 1),)
+
+    return bmap, bmap2, smap, fullmap, vmap_, vmap1
 
 
 def _mhw_fused_kernel(vstart_ref, vcount_ref, rows_ref, z_ref, ndk_ref,
                       slot_ref, coin_ref, umix_ref, usp_ref, uacc_ref,
                       prob_ref, alias_ref, mass_ref, stale_ref, nwk_ref,
-                      nk_ref, out_ref, *, tile_v: int, n_vtiles: int,
-                      n_steps: int, alpha: float, beta: float,
-                      beta_bar: float):
+                      nk_ref, prior_ref, out_ref, *, tile_v: int,
+                      n_vtiles: int, beta: float, beta_bar: float):
     bi = pl.program_id(0)
     vi = pl.program_id(1)
     tid = jnp.clip(vstart_ref[bi] + jnp.minimum(vi, vcount_ref[bi] - 1),
@@ -73,69 +110,41 @@ def _mhw_fused_kernel(vstart_ref, vcount_ref, rows_ref, z_ref, ndk_ref,
         rows_wk = nwk_ref[...][lidx]               # (TILE_B, K)
         lm = (rows_wk - own + beta) / (nk_ref[...] - own + beta_bar)
 
-        sparse_w = ndk * lm                        # exact sparse term
-        cdf = jnp.cumsum(sparse_w, axis=-1)
-        sparse_mass = cdf[:, -1]
-        dense_mass = mass_ref[...][lidx]
-        stale = stale_ref[...]                     # (TILE_V, K)
-        ptile = prob_ref[...]
-        atile = alias_ref[...]
-
-        def log_p(t):
-            return (jnp.log(_gather_k(ndk, t) + alpha)
-                    + jnp.log(_gather_k(lm, t) + _EPS))
-
-        def log_q(t):
-            return jnp.log(_gather_k(sparse_w, t) + stale[lidx, t] + _EPS)
-
-        z = z0
-        lp_z = log_p(z)
-        lq_z = log_q(z)
-        for s in range(n_steps):
-            slot = slot_ref[...][s]
-            dense_draw = jnp.where(coin_ref[...][s] < ptile[lidx, slot],
-                                   slot, atile[lidx, slot])
-            target = usp_ref[...][s] * sparse_mass
-            sparse_draw = jnp.clip(
-                jnp.sum((cdf <= target[:, None]).astype(jnp.int32), axis=-1),
-                0, k_topics - 1)
-            pick_sparse = (umix_ref[...][s] * (sparse_mass + dense_mass)
-                           < sparse_mass)
-            cand = jnp.where(pick_sparse, sparse_draw,
-                             dense_draw).astype(jnp.int32)
-            lp_c = log_p(cand)
-            lq_c = log_q(cand)
-            accept = (jnp.log(uacc_ref[...][s] + _EPS)
-                      < lp_c - lp_z + lq_z - lq_c)
-            z = jnp.where(accept, cand, z)
-            lp_z = jnp.where(accept, lp_c, lp_z)
-            lq_z = jnp.where(accept, lq_c, lq_z)
+        z = mix_chain(
+            z0, doc=ndk, prior=prior_ref[...][0], logf=jnp.log(lm + _EPS),
+            sparse_w=ndk * lm, stale_rows=stale_ref[...][lidx],
+            prob_rows=prob_ref[...][lidx], alias_rows=alias_ref[...][lidx],
+            dense_mass=mass_ref[...][lidx], slot=slot_ref[...],
+            coin=coin_ref[...], u_mix=umix_ref[...], u_sparse=usp_ref[...],
+            u_acc=uacc_ref[...])
 
         out_ref[...] = jnp.where(in_tile, z.astype(jnp.int32), out_ref[...])
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("tile_v", "tile_b", "n_steps", "alpha",
-                                    "beta", "beta_bar", "interpret"))
+                   static_argnames=("tile_v", "tile_b", "n_steps", "beta",
+                                    "beta_bar", "interpret"))
 def mhw_sweep_fused(prob: jax.Array, alias: jax.Array, mass: jax.Array,
                     stale: jax.Array, n_wk: jax.Array, n_k: jax.Array,
-                    rows: jax.Array, z0: jax.Array, ndk: jax.Array,
-                    slot: jax.Array, coin: jax.Array, u_mix: jax.Array,
-                    u_sparse: jax.Array, u_acc: jax.Array,
+                    prior: jax.Array, rows: jax.Array, z0: jax.Array,
+                    ndk: jax.Array, slot: jax.Array, coin: jax.Array,
+                    u_mix: jax.Array, u_sparse: jax.Array, u_acc: jax.Array,
                     vstart: jax.Array, vcount: jax.Array, *,
                     tile_v: int = DEFAULT_TILE_V,
                     tile_b: int = DEFAULT_TILE_B,
-                    n_steps: int = 2, alpha: float = 0.1, beta: float = 0.01,
+                    n_steps: int = 2, beta: float = 0.01,
                     beta_bar: float | None = None,
                     interpret: bool = True) -> jax.Array:
-    """Fused sorted-layout MHW chain for one sweep.
+    """Fused sorted-layout MHW chain for one sweep — lm families (LDA/HDP).
 
-    prob/alias/stale/n_wk: (V, K); mass: (V,); n_k: (K,).
+    prob/alias/stale/n_wk: (V, K); mass: (V,); n_k: (K,); prior: (K,)
+    per-topic prior mass (α·1 for LDA, b1·θ0 for HDP).
     rows/z0: (B,) sorted token-types (≥V ⇒ padding, left at z0) and chain
-    init; ndk: (B, K) own-token-removed doc-topic rows per sorted draw.
-    slot/coin/u_mix/u_sparse/u_acc: (n_steps, B) per-MH-step uniforms
-    (slot is int32 in [0, K)).  vstart/vcount: (B/tile_b,) vocab-tile
-    windows from ``segment.build_layout``.  Returns (B,) int32 final states.
+    init; ndk: (B, K) *raw* gathered doc-topic rows per sorted draw (the
+    ^{-di} removal happens in-kernel).  slot/coin/u_mix/u_sparse/u_acc:
+    (n_steps, B) per-MH-step uniforms (slot is int32 in [0, K)).
+    vstart/vcount: (B/tile_b,) vocab-tile windows from
+    ``segment.build_layout``.  Returns (B,) int32 final states.
     """
     v, k = prob.shape
     b = rows.shape[0]
@@ -148,23 +157,8 @@ def mhw_sweep_fused(prob: jax.Array, alias: jax.Array, mass: jax.Array,
         beta_bar = beta * v
 
     kernel = functools.partial(_mhw_fused_kernel, tile_v=tile_v, n_vtiles=nv,
-                               n_steps=n_steps, alpha=alpha, beta=beta,
-                               beta_bar=beta_bar)
-
-    def bmap(bi, vi, vs, vc):
-        return (bi,)
-
-    def bmap2(bi, vi, vs, vc):
-        return (bi, 0)
-
-    def smap(bi, vi, vs, vc):
-        return (0, bi)
-
-    def vmap_(bi, vi, vs, vc):
-        return (jnp.clip(vs[bi] + jnp.minimum(vi, vc[bi] - 1), 0, nv - 1), 0)
-
-    def vmap1(bi, vi, vs, vc):
-        return (jnp.clip(vs[bi] + jnp.minimum(vi, vc[bi] - 1), 0, nv - 1),)
+                               beta=beta, beta_bar=beta_bar)
+    bmap, bmap2, smap, fullmap, vmap_, vmap1 = _index_maps(nv)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -183,7 +177,8 @@ def mhw_sweep_fused(prob: jax.Array, alias: jax.Array, mass: jax.Array,
             pl.BlockSpec((tile_v,), vmap1),          # mass
             pl.BlockSpec((tile_v, k), vmap_),        # stale
             pl.BlockSpec((tile_v, k), vmap_),        # n_wk
-            pl.BlockSpec((1, k), lambda bi, vi, vs, vc: (0, 0)),  # n_k
+            pl.BlockSpec((1, k), fullmap),           # n_k
+            pl.BlockSpec((1, k), fullmap),           # prior
         ],
         out_specs=pl.BlockSpec((tile_b,), bmap),
     )
@@ -193,4 +188,141 @@ def mhw_sweep_fused(prob: jax.Array, alias: jax.Array, mass: jax.Array,
         out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
         interpret=interpret,
     )(vstart, vcount, rows, z0, ndk, slot, coin, u_mix, u_sparse, u_acc,
-      prob, alias, mass, stale, n_wk, n_k.reshape(1, -1))
+      prob, alias, mass, stale, n_wk, n_k.reshape(1, -1),
+      prior.reshape(1, -1))
+
+
+# ---------------------------------------------------------------------------
+# PDP: joint (topic, table-indicator) outcomes e = t + K·r  (paper §2.2)
+# ---------------------------------------------------------------------------
+
+
+def _pdp_fused_kernel(vstart_ref, vcount_ref, rows_ref, e_ref, ndk_ref,
+                      slot_ref, coin_ref, umix_ref, usp_ref, uacc_ref,
+                      prob_ref, alias_ref, mass_ref, stale_ref, mwk_ref,
+                      swk_ref, mk_ref, sk_ref, prior_ref, stirl_ref, out_ref,
+                      *, tile_v: int, n_vtiles: int, b: float, a: float,
+                      gamma: float, gamma_bar: float):
+    bi = pl.program_id(0)
+    vi = pl.program_id(1)
+    tid = jnp.clip(vstart_ref[bi] + jnp.minimum(vi, vcount_ref[bi] - 1),
+                   0, n_vtiles - 1)
+    row_lo = tid * tile_v
+
+    @pl.when(vi == 0)
+    def _init():
+        out_ref[...] = e_ref[...]
+
+    @pl.when(vi < vcount_ref[bi])
+    def _body():
+        rows = rows_ref[...]
+        local = rows - row_lo
+        in_tile = (local >= 0) & (local < tile_v)
+        lidx = jnp.clip(local, 0, tile_v - 1)
+
+        e0 = e_ref[...]                            # (TILE_B,) joint outcome
+        k_topics = ndk_ref.shape[-1]
+
+        # ^{-di}: remove the token's own customer/table contribution from
+        # the gathered rows, the aggregates and its doc row, with the CRP
+        # bookkeeping repair — same functions as the oracle.
+        own_t, own_r = own_contrib(k_topics, e0, in_tile)
+        m_row, s_row = corrected_rows(mwk_ref[...][lidx], swk_ref[...][lidx],
+                                      own_t, own_r)
+        m_k_m = mk_ref[...] - own_t                # (TILE_B, K) via broadcast
+        s_k_m = sk_ref[...] - own_r
+
+        log_f0, log_f1 = log_factors(stirl_ref[...], m_row, s_row, m_k_m,
+                                     s_k_m, b=b, a=a, gamma=gamma,
+                                     gamma_bar=gamma_bar)
+        log_f = jnp.concatenate([log_f0, log_f1], axis=-1)   # (TILE_B, 2K)
+        ndk_m = ndk_ref[...] - own_t
+        ndk_ext = jnp.concatenate([ndk_m, ndk_m], axis=-1)
+
+        e = mix_chain(
+            e0, doc=ndk_ext, prior=prior_ref[...][0], logf=log_f,
+            sparse_w=ndk_ext * jnp.exp(log_f),
+            stale_rows=stale_ref[...][lidx], prob_rows=prob_ref[...][lidx],
+            alias_rows=alias_ref[...][lidx], dense_mass=mass_ref[...][lidx],
+            slot=slot_ref[...], coin=coin_ref[...], u_mix=umix_ref[...],
+            u_sparse=usp_ref[...], u_acc=uacc_ref[...])
+
+        out_ref[...] = jnp.where(in_tile, e.astype(jnp.int32), out_ref[...])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_v", "tile_b", "n_steps", "b_conc",
+                                    "a_disc", "gamma", "gamma_bar",
+                                    "interpret"))
+def pdp_sweep_fused(prob: jax.Array, alias: jax.Array, mass: jax.Array,
+                    stale: jax.Array, m_wk: jax.Array, s_wk: jax.Array,
+                    m_k: jax.Array, s_k: jax.Array, stirl: jax.Array,
+                    prior: jax.Array, rows: jax.Array, e0: jax.Array,
+                    ndk: jax.Array, slot: jax.Array, coin: jax.Array,
+                    u_mix: jax.Array, u_sparse: jax.Array, u_acc: jax.Array,
+                    vstart: jax.Array, vcount: jax.Array, *,
+                    tile_v: int = DEFAULT_TILE_V,
+                    tile_b: int = DEFAULT_TILE_B, n_steps: int = 2,
+                    b_conc: float = 10.0, a_disc: float = 0.1,
+                    gamma: float = 0.5, gamma_bar: float | None = None,
+                    interpret: bool = True) -> jax.Array:
+    """Fused sorted-layout MHW chain for one PDP sweep (2K outcomes).
+
+    prob/alias/stale: (V, 2K) joint-outcome tables; mass: (V,);
+    m_wk/s_wk: (V, K) customer/table counts; m_k/s_k: (K,); stirl: the
+    log-Stirling table (resident in VMEM — ≤ (513, 513) fp32 ≈ 1 MB);
+    prior: (2K,) = α·1.  rows/e0: (B,) sorted token-types and joint-outcome
+    chain init; ndk: (B, K) raw gathered doc rows; uniforms (n_steps, B),
+    slot int32 in [0, 2K).  Returns (B,) int32 final joint outcomes.
+    """
+    v, e_out = prob.shape
+    k = m_wk.shape[1]
+    assert e_out == 2 * k
+    bsz = rows.shape[0]
+    tile_v = min(tile_v, v)
+    tile_b = min(tile_b, bsz)
+    assert v % tile_v == 0 and bsz % tile_b == 0
+    nb, nv = bsz // tile_b, v // tile_v
+    assert vstart.shape == (nb,) and vcount.shape == (nb,)
+    if gamma_bar is None:
+        gamma_bar = gamma * v
+
+    kernel = functools.partial(_pdp_fused_kernel, tile_v=tile_v, n_vtiles=nv,
+                               b=b_conc, a=a_disc, gamma=gamma,
+                               gamma_bar=gamma_bar)
+    bmap, bmap2, smap, fullmap, vmap_, vmap1 = _index_maps(nv)
+
+    s_dim = stirl.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nb, nv),
+        in_specs=[
+            pl.BlockSpec((tile_b,), bmap),            # rows
+            pl.BlockSpec((tile_b,), bmap),            # e0
+            pl.BlockSpec((tile_b, k), bmap2),         # ndk
+            pl.BlockSpec((n_steps, tile_b), smap),    # slot
+            pl.BlockSpec((n_steps, tile_b), smap),    # coin
+            pl.BlockSpec((n_steps, tile_b), smap),    # u_mix
+            pl.BlockSpec((n_steps, tile_b), smap),    # u_sparse
+            pl.BlockSpec((n_steps, tile_b), smap),    # u_acc
+            pl.BlockSpec((tile_v, e_out), vmap_),     # prob
+            pl.BlockSpec((tile_v, e_out), vmap_),     # alias
+            pl.BlockSpec((tile_v,), vmap1),           # mass
+            pl.BlockSpec((tile_v, e_out), vmap_),     # stale
+            pl.BlockSpec((tile_v, k), vmap_),         # m_wk
+            pl.BlockSpec((tile_v, k), vmap_),         # s_wk
+            pl.BlockSpec((1, k), fullmap),            # m_k
+            pl.BlockSpec((1, k), fullmap),            # s_k
+            pl.BlockSpec((1, e_out), fullmap),        # prior
+            pl.BlockSpec((s_dim, s_dim), fullmap),    # stirling table
+        ],
+        out_specs=pl.BlockSpec((tile_b,), bmap),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz,), jnp.int32),
+        interpret=interpret,
+    )(vstart, vcount, rows, e0, ndk, slot, coin, u_mix, u_sparse, u_acc,
+      prob, alias, mass, stale, m_wk, s_wk, m_k.reshape(1, -1),
+      s_k.reshape(1, -1), prior.reshape(1, -1), stirl)

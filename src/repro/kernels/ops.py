@@ -75,29 +75,60 @@ def sample_rows_sorted(tables: AliasTable, rows: jax.Array,
         interpret=INTERPRET if interpret is None else interpret)
 
 
+def _step_uniforms(key: jax.Array, n_outcomes: int, mh_steps: int, b: int):
+    """The five per-MH-step uniform streams every fused sorted chain uses."""
+    ks = jax.random.split(key, 5)
+    slot = jax.random.randint(ks[0], (mh_steps, b), 0, n_outcomes,
+                              dtype=jnp.int32)
+    return (slot,) + tuple(jax.random.uniform(ks[i], (mh_steps, b))
+                           for i in range(1, 5))
+
+
 def mhw_sweep_sorted(tables: AliasTable, stale: jax.Array, n_wk: jax.Array,
-                     n_k: jax.Array, rows: jax.Array, z0: jax.Array,
-                     ndk: jax.Array, vstart: jax.Array, vcount: jax.Array,
-                     key: jax.Array, *, mh_steps: int, alpha: float,
+                     n_k: jax.Array, prior: jax.Array, rows: jax.Array,
+                     z0: jax.Array, ndk: jax.Array, vstart: jax.Array,
+                     vcount: jax.Array, key: jax.Array, *, mh_steps: int,
                      beta: float, beta_bar: float,
                      tile_v: int = _sample.DEFAULT_TILE_V,
                      tile_b: int = _sample.DEFAULT_TILE_B,
                      interpret: bool | None = None) -> jax.Array:
-    """Fused sorted-layout MHW chain: draws the per-step uniforms and runs
+    """Fused sorted-layout MHW chain for the lm families (LDA: prior = α·1,
+    HDP: prior = b1·θ0): draws the per-step uniforms and runs
     ``kernels.mhw_fused.mhw_sweep_fused`` (see that module's docstring)."""
     k = tables.prob.shape[-1]
     b = rows.shape[0]
-    ks = jax.random.split(key, 5)
-    slot = jax.random.randint(ks[0], (mh_steps, b), 0, k, dtype=jnp.int32)
-    coin = jax.random.uniform(ks[1], (mh_steps, b))
-    u_mix = jax.random.uniform(ks[2], (mh_steps, b))
-    u_sparse = jax.random.uniform(ks[3], (mh_steps, b))
-    u_acc = jax.random.uniform(ks[4], (mh_steps, b))
+    slot, coin, u_mix, u_sparse, u_acc = _step_uniforms(key, k, mh_steps, b)
     return _fused.mhw_sweep_fused(
-        tables.prob, tables.alias, tables.mass, stale, n_wk, n_k, rows, z0,
-        ndk, slot, coin, u_mix, u_sparse, u_acc, vstart, vcount,
-        tile_v=tile_v, tile_b=tile_b, n_steps=mh_steps, alpha=alpha,
-        beta=beta, beta_bar=beta_bar,
+        tables.prob, tables.alias, tables.mass, stale, n_wk, n_k, prior,
+        rows, z0, ndk, slot, coin, u_mix, u_sparse, u_acc, vstart, vcount,
+        tile_v=tile_v, tile_b=tile_b, n_steps=mh_steps, beta=beta,
+        beta_bar=beta_bar,
+        interpret=INTERPRET if interpret is None else interpret)
+
+
+def pdp_sweep_sorted(tables: AliasTable, stale: jax.Array, m_wk: jax.Array,
+                     s_wk: jax.Array, m_k: jax.Array, s_k: jax.Array,
+                     stirl: jax.Array, prior: jax.Array, rows: jax.Array,
+                     e0: jax.Array, ndk: jax.Array, vstart: jax.Array,
+                     vcount: jax.Array, key: jax.Array, *, mh_steps: int,
+                     concentration: float, discount: float, gamma: float,
+                     gamma_bar: float,
+                     tile_v: int = _sample.DEFAULT_TILE_V,
+                     tile_b: int = _sample.DEFAULT_TILE_B,
+                     interpret: bool | None = None) -> jax.Array:
+    """Fused sorted-layout MHW chain for PDP's joint 2K outcome space:
+    draws the per-step uniforms (slot over [0, 2K)) and runs
+    ``kernels.mhw_fused.pdp_sweep_fused``."""
+    e_out = tables.prob.shape[-1]
+    b = rows.shape[0]
+    slot, coin, u_mix, u_sparse, u_acc = _step_uniforms(key, e_out,
+                                                        mh_steps, b)
+    return _fused.pdp_sweep_fused(
+        tables.prob, tables.alias, tables.mass, stale, m_wk, s_wk, m_k, s_k,
+        stirl, prior, rows, e0, ndk, slot, coin, u_mix, u_sparse, u_acc,
+        vstart, vcount, tile_v=tile_v, tile_b=tile_b, n_steps=mh_steps,
+        b_conc=concentration, a_disc=discount, gamma=gamma,
+        gamma_bar=gamma_bar,
         interpret=INTERPRET if interpret is None else interpret)
 
 

@@ -57,14 +57,28 @@ def alias_sample_sorted_ref(prob: jax.Array, alias: jax.Array,
     return jnp.where(rows < v, draw, 0).astype(jnp.int32)
 
 
-def mhw_sweep_sorted_ref(prob, alias, mass, stale, n_wk, n_k, rows, z0, ndk,
-                         slot, coin, u_mix, u_sparse, u_acc, *, alpha, beta,
-                         beta_bar):
-    """Oracle for ``kernels.mhw_fused.mhw_sweep_fused`` — delegates to the
+def mhw_sweep_sorted_ref(prob, alias, mass, stale, n_wk, n_k, prior, rows,
+                         z0, ndk, slot, coin, u_mix, u_sparse, u_acc, *,
+                         beta, beta_bar):
+    """Oracle for ``kernels.mhw_fused.mhw_sweep_fused`` (lm families:
+    LDA with prior = α·1, HDP with prior = b1·θ0) — delegates to the
     pure-jnp chain semantics owned by ``repro.core.mhw``."""
-    return mhw_mod.sorted_chain(prob, alias, mass, stale, n_wk, n_k, rows,
-                                z0, ndk, slot, coin, u_mix, u_sparse, u_acc,
-                                alpha=alpha, beta=beta, beta_bar=beta_bar)
+    return mhw_mod.sorted_chain(prob, alias, mass, stale, n_wk, n_k, prior,
+                                rows, z0, ndk, slot, coin, u_mix, u_sparse,
+                                u_acc, beta=beta, beta_bar=beta_bar)
+
+
+def pdp_sweep_sorted_ref(prob, alias, mass, stale, m_wk, s_wk, m_k, s_k,
+                         stirl, prior, rows, e0, ndk, slot, coin, u_mix,
+                         u_sparse, u_acc, *, b, a, gamma, gamma_bar):
+    """Oracle for ``kernels.mhw_fused.pdp_sweep_fused`` — delegates to the
+    pure-jnp chain semantics owned by ``repro.core.pdp``."""
+    from repro.core import pdp as pdp_mod
+    return pdp_mod.sorted_chain_pdp(prob, alias, mass, stale, m_wk, s_wk,
+                                    m_k, s_k, stirl, prior, rows, e0, ndk,
+                                    slot, coin, u_mix, u_sparse, u_acc,
+                                    b=b, a=a, gamma=gamma,
+                                    gamma_bar=gamma_bar)
 
 
 def mh_accept_ref(z: jax.Array, cand: jax.Array, log_p_z: jax.Array,

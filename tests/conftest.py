@@ -38,3 +38,21 @@ def make_synthetic_corpus(n_topics, vocab, n_docs, doc_len, seed=0,
 def small_corpus():
     return make_synthetic_corpus(n_topics=6, vocab=120, n_docs=64, doc_len=40,
                                  seed=1)
+
+
+def make_family_cfg(name, *, n_topics, vocab_size, mh_steps=2):
+    """Test-sized model config for a registered ModelFamily — one factory
+    so per-family hyperparameter defaults cannot drift between test files.
+    Sizes (K, V) stay per-call-site; family-specific knobs live here."""
+    from repro.core import hdp, lda, pdp
+    if name == "lda":
+        return lda.LDAConfig(n_topics=n_topics, vocab_size=vocab_size,
+                             mh_steps=mh_steps)
+    if name == "pdp":
+        return pdp.PDPConfig(n_topics=n_topics, vocab_size=vocab_size,
+                             mh_steps=mh_steps, stirling_n_max=128,
+                             concentration=5.0)
+    if name == "hdp":
+        return hdp.HDPConfig(n_topics=n_topics, vocab_size=vocab_size,
+                             b1=2.0, mh_steps=mh_steps)
+    raise ValueError(name)

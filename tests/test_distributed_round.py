@@ -60,7 +60,71 @@ SCRIPT = textwrap.dedent("""
         p2 = float(lda.perplexity(cfg, shared2, tokens[:16], mask[:16],
                                   jax.random.PRNGKey(5)))
     assert np.isfinite(p2) and p2 < p0, (p0, p2)
-    print("DISTRIBUTED_ROUND_OK", p0, p1, p2)
+
+    # The token-sorted fast path under shard_map: the same registry round
+    # with DistConfig(layout="sorted") must run on the mesh and keep the
+    # shared statistics consistent with the summed local assignments.
+    with mesh:
+        round_fn_sorted = distributed.make_round_fn(
+            cfg, distributed.DistConfig(model="lda", tau=1,
+                                        layout="sorted"), mesh)
+        alive = jnp.ones((4,), bool)
+        tables, stale = lda.build_alias(cfg, shared)
+        local_s, shared_s = round_fn_sorted(local, shared, tables, stale,
+                                            tokens, mask,
+                                            jax.random.fold_in(key, 400),
+                                            alive)
+    ps_ = float(lda.perplexity(cfg, shared_s, tokens[:16], mask[:16],
+                               jax.random.PRNGKey(5)))
+    assert np.isfinite(ps_), ps_
+    nwk_s = lda.count_wk(cfg, tokens, local_s.z, mask)
+    assert float(jnp.abs(nwk_s - shared_s.n_wk).max()) == 0.0
+
+    # PDP and HDP through the same registry-driven round: the one round
+    # implementation serves every family (no per-model adapters).
+    from repro.core import family, hdp, pdp, projection
+
+    pcfg = pdp.PDPConfig(n_topics=8, vocab_size=128, mh_steps=2,
+                         stirling_n_max=128, concentration=5.0)
+    plocal, pshared = pdp.init_state(pcfg, tokens, mask, key)
+    alive = jnp.ones((4,), bool)
+    with mesh:
+        round_fn = distributed.make_round_fn(
+            pcfg, distributed.DistConfig(model="pdp", tau=1), mesh)
+        for r in range(2):
+            tables, stale = pdp.build_alias(pcfg, pshared)
+            plocal, pshared = round_fn(plocal, pshared, tables, stale,
+                                       tokens, mask,
+                                       jax.random.fold_in(key, 200 + r),
+                                       alive)
+    ppdp = float(pdp.perplexity(pcfg, pshared, tokens[:16], mask[:16],
+                                jax.random.PRNGKey(5)))
+    assert np.isfinite(ppdp)
+    # shared projection held the PDP polytope
+    fam = family.get("pdp")
+    assert float(fam.count_violations(pshared)) == 0.0
+
+    hcfg = hdp.HDPConfig(n_topics=8, vocab_size=128, b1=2.0, mh_steps=2)
+    hlocal, hshared = hdp.init_state(hcfg, tokens, mask, key)
+    with mesh:
+        round_fn = distributed.make_round_fn(
+            hcfg, distributed.DistConfig(model="hdp", tau=1), mesh)
+        for r in range(2):
+            tables, stale = hdp.build_alias(hcfg, hshared)
+            hlocal, hshared = round_fn(hlocal, hshared, tables, stale,
+                                       tokens, mask,
+                                       jax.random.fold_in(key, 300 + r),
+                                       alive)
+    phdp = float(hdp.perplexity(hcfg, hshared, tokens[:16], mask[:16],
+                                jax.random.PRNGKey(5)))
+    assert np.isfinite(phdp)
+    # HDP's local table-count polytope (1 <= m_dk <= n_dk) — previously
+    # silently dropped by the ad-hoc adapter — is enforced in-round.
+    hfam = family.get("hdp")
+    lv = float(projection.count_violations(
+        {"m_dk": hlocal.m_dk, "n_dk": hlocal.n_dk}, hfam.local_rules))
+    assert lv == 0.0, lv
+    print("DISTRIBUTED_ROUND_OK", p0, p1, p2, ppdp, phdp)
 """)
 
 

@@ -15,17 +15,15 @@ Three layers of guarantees:
 
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import lda, mhw
+from repro.core import family, lda, mhw, pdp, stirling
 from repro.data import segment
 from repro.kernels import alias_build, alias_sample, mhw_fused, ops, ref
-from tests.conftest import make_synthetic_corpus
+from tests.conftest import make_family_cfg, make_synthetic_corpus
 
 
 def _sorted_rows(key, b, lo, hi, v, n_pad=0):
@@ -65,20 +63,29 @@ def test_alias_sample_sorted_exact(v, k, b, tile_v, tile_b, lo, hi, n_pad):
     assert bool(jnp.all(out_k == out_r))
 
 
+@pytest.mark.parametrize("prior_kind", ["lda", "hdp"])
 @pytest.mark.parametrize("v,k,b,tile_v,tile_b,lo,hi,n_pad,steps", [
     (60, 16, 384, 12, 128, 0, 60, 0, 2),
     (120, 32, 256, 12, 64, 24, 60, 0, 3),   # most vocab tiles empty
     (60, 16, 256, 12, 64, 0, 7, 61, 2),     # skew + padding
 ])
 def test_mhw_fused_kernel_vs_oracle(v, k, b, tile_v, tile_b, lo, hi, n_pad,
-                                    steps):
-    """The fused draw+accept kernel is bit-identical to mhw.sorted_chain."""
+                                    steps, prior_kind):
+    """The fused draw+accept kernel is bit-identical to mhw.sorted_chain —
+    with the uniform LDA prior α·1 and a non-uniform HDP prior b1·θ0."""
     key = jax.random.PRNGKey(v * k + b)
     alpha, beta = 0.1, 0.01
     beta_bar = beta * v
     n_wk = jax.random.gamma(key, 1.0, (v, k)) * 5
     n_k = n_wk.sum(0)
-    stale = alpha * (n_wk + beta) / (n_k[None, :] + beta_bar)
+    lm = (n_wk + beta) / (n_k[None, :] + beta_bar)
+    if prior_kind == "lda":
+        prior = jnp.full((k,), alpha, jnp.float32)
+    else:  # HDP: dense term b1·θ0_t
+        theta0 = jax.random.dirichlet(jax.random.fold_in(key, 9),
+                                      jnp.ones((k,)))
+        prior = 2.0 * theta0
+    stale = prior[None, :] * lm
     tabs = ops.build_tables(stale, tile_r=segment.pick_tile(v, 8))
 
     rows = _sorted_rows(jax.random.fold_in(key, 1), b, lo, hi, v, n_pad)
@@ -93,17 +100,66 @@ def test_mhw_fused_kernel_vs_oracle(v, k, b, tile_v, tile_b, lo, hi, n_pad,
     vstart, vcount = _windows(rows, v, tile_v, tile_b)
 
     out_k = mhw_fused.mhw_sweep_fused(
-        tabs.prob, tabs.alias, tabs.mass, stale, n_wk, n_k, rows, z0, ndk,
-        slot, *uni, vstart, vcount, tile_v=tile_v, tile_b=tile_b,
-        n_steps=steps, alpha=alpha, beta=beta, beta_bar=beta_bar)
+        tabs.prob, tabs.alias, tabs.mass, stale, n_wk, n_k, prior, rows, z0,
+        ndk, slot, *uni, vstart, vcount, tile_v=tile_v, tile_b=tile_b,
+        n_steps=steps, beta=beta, beta_bar=beta_bar)
     out_r = ref.mhw_sweep_sorted_ref(
-        tabs.prob, tabs.alias, tabs.mass, stale, n_wk, n_k, rows, z0, ndk,
-        slot, *uni, alpha=alpha, beta=beta, beta_bar=beta_bar)
+        tabs.prob, tabs.alias, tabs.mass, stale, n_wk, n_k, prior, rows, z0,
+        ndk, slot, *uni, beta=beta, beta_bar=beta_bar)
     assert bool(jnp.all(out_k == out_r)), \
         f"{int(jnp.sum(out_k != out_r))} of {b} draws differ"
     # padding sentinels keep their init state
     if n_pad:
         assert bool(jnp.all(out_k[-n_pad:] == z0[-n_pad:]))
+
+
+@pytest.mark.parametrize("v,k,b,tile_v,tile_b,lo,hi,n_pad,steps", [
+    (64, 8, 384, 16, 128, 0, 64, 0, 2),
+    (128, 8, 256, 16, 64, 32, 48, 0, 3),    # most vocab tiles empty
+    (64, 8, 256, 16, 64, 0, 9, 47, 2),      # skew + padding
+])
+def test_pdp_fused_kernel_vs_oracle(v, k, b, tile_v, tile_b, lo, hi, n_pad,
+                                    steps):
+    """The fused PDP kernel (2K joint outcomes, in-VMEM Stirling factors)
+    is bit-identical to pdp.sorted_chain_pdp."""
+    key = jax.random.PRNGKey(v * k + b + 1)
+    cfg = pdp.PDPConfig(n_topics=k, vocab_size=v, mh_steps=steps,
+                        stirling_n_max=128, concentration=5.0)
+    m_wk = jnp.floor(jax.random.gamma(key, 1.0, (v, k)) * 3)
+    s_wk = jnp.minimum(jnp.ceil(m_wk * 0.5), m_wk)
+    shared = pdp.SharedStats(m_wk=m_wk, s_wk=s_wk, m_k=m_wk.sum(0),
+                             s_k=s_wk.sum(0))
+    tabs, stale = pdp.build_alias(cfg, shared)
+    stirl = stirling.as_jax(cfg.stirling_n_max, cfg.discount)
+    prior = jnp.full((2 * k,), cfg.alpha, jnp.float32)
+
+    rows = _sorted_rows(jax.random.fold_in(key, 1), b, lo, hi, v, n_pad)
+    e0 = jax.random.randint(jax.random.fold_in(key, 2), (b,), 0, 2 * k,
+                            jnp.int32)
+    ndk = jnp.floor(jax.random.gamma(jax.random.fold_in(key, 3), 0.5,
+                                     (b, k)) * 2)
+    ndk = ndk.at[jnp.arange(b), e0 % k].add(1.0)
+    ks = jax.random.split(jax.random.fold_in(key, 4), 5)
+    slot = jax.random.randint(ks[0], (steps, b), 0, 2 * k, jnp.int32)
+    uni = [jax.random.uniform(ks[i], (steps, b)) for i in range(1, 5)]
+    vstart, vcount = _windows(rows, v, tile_v, tile_b)
+
+    out_k = mhw_fused.pdp_sweep_fused(
+        tabs.prob, tabs.alias, tabs.mass, stale, m_wk, s_wk, shared.m_k,
+        shared.s_k, stirl, prior, rows, e0, ndk, slot, *uni, vstart, vcount,
+        tile_v=tile_v, tile_b=tile_b, n_steps=steps, b_conc=cfg.concentration,
+        a_disc=cfg.discount, gamma=cfg.gamma, gamma_bar=cfg.gamma * v)
+    out_r = ref.pdp_sweep_sorted_ref(
+        tabs.prob, tabs.alias, tabs.mass, stale, m_wk, s_wk, shared.m_k,
+        shared.s_k, stirl, prior, rows, e0, ndk, slot, *uni,
+        b=cfg.concentration, a=cfg.discount, gamma=cfg.gamma,
+        gamma_bar=cfg.gamma * v)
+    assert bool(jnp.all(out_k == out_r)), \
+        f"{int(jnp.sum(out_k != out_r))} of {b} draws differ"
+    if n_pad:
+        assert bool(jnp.all(out_k[-n_pad:] == e0[-n_pad:]))
+    # joint outcomes stay in range
+    assert bool(jnp.all((out_k >= 0) & (out_k < 2 * k)))
 
 
 def test_ops_sample_rows_sorted_statistics():
@@ -144,9 +200,10 @@ def test_mhw_fused_moves_and_respects_empty_tiles():
     vstart, vcount = _windows(rows, v, 8, 64)
     np.testing.assert_array_equal(np.asarray(vcount), np.ones(4))
     np.testing.assert_array_equal(np.asarray(vstart), np.ones(4))
-    out = ops.mhw_sweep_sorted(tabs, stale, n_wk, n_k, rows, z0, ndk,
+    prior = jnp.full((k,), 0.1, jnp.float32)
+    out = ops.mhw_sweep_sorted(tabs, stale, n_wk, n_k, prior, rows, z0, ndk,
                                vstart, vcount, jax.random.fold_in(key, 4),
-                               mh_steps=2, alpha=0.1, beta=0.01,
+                               mh_steps=2, beta=0.01,
                                beta_bar=0.64, tile_v=8, tile_b=64)
     assert float(jnp.mean((out != z0).astype(jnp.float32))) > 0.2
 
@@ -243,3 +300,69 @@ def test_sorted_requires_mhw():
     with pytest.raises(ValueError, match="sorted"):
         lda.sweep(cfg, local, shared, tables, stale, tokens, mask,
                   jax.random.PRNGKey(1), method="exact", layout="sorted")
+
+
+# ---------------------------------------------------------------------------
+# Sorted layout for every family through the ModelFamily protocol
+# ---------------------------------------------------------------------------
+
+def _family_cfg(name):
+    return make_family_cfg(name, n_topics=12, vocab_size=96)
+
+
+@pytest.mark.parametrize("name", ["lda", "pdp", "hdp"])
+def test_family_sorted_sweep_statistics_consistent(name, tiny_corpus):
+    """After a sorted sweep of any family, the maintained sufficient
+    statistics agree bit-exactly with the statistics recomputed from the
+    final assignments — the sort → sample → unsort round trip is
+    permutation-consistent, as in the scan layout."""
+    tokens, mask, _ = tiny_corpus
+    fam = family.get(name)
+    cfg = _family_cfg(name)
+    local, shared = fam.init_state(cfg, tokens, mask, jax.random.PRNGKey(0))
+    tables, stale = fam.build_alias(cfg, shared)
+    local2, deltas = fam.sweep(cfg, local, shared, tables, stale, tokens,
+                               mask, jax.random.PRNGKey(1), method="mhw",
+                               layout="sorted")
+    counts = fam.count_stats(cfg, tokens, mask, local2)
+    stats = fam.stats_dict(shared)
+    for n in fam.conserved_stats:
+        np.testing.assert_array_equal(np.asarray(counts[n]),
+                                      np.asarray(stats[n] + deltas[n]))
+    # n_dk consistent with assignments
+    n_dk = jnp.einsum(
+        "dl,dlk->dk", mask.astype(jnp.float32),
+        jax.nn.one_hot(local2.z, cfg.n_topics, dtype=jnp.float32))
+    np.testing.assert_allclose(np.asarray(n_dk), np.asarray(local2.n_dk),
+                               atol=1e-4)
+    # masked positions never move; the sweep moved something; mass conserved
+    m = np.asarray(mask)
+    np.testing.assert_array_equal(np.asarray(local2.z)[~m],
+                                  np.asarray(local.z)[~m])
+    assert float(jnp.mean((local2.z != local.z)[mask].astype(jnp.float32))) \
+        > 0.1
+    for n in fam.delta_names:
+        assert abs(float(deltas[n].sum())) < 1e-3 or n == "s_wk"
+
+
+@pytest.mark.parametrize("name", ["pdp", "hdp"])
+def test_family_sorted_matches_scan_perplexity(name):
+    """Acceptance bar extended to PDP/HDP: sorted and scan layouts agree on
+    held-out perplexity after 4 single-client sweeps, seed-averaged (same
+    protocol as the LDA test above, shared with the benchmark artifact via
+    ``common.family_sweep_perplexity``)."""
+    from benchmarks import common
+    from repro.data.synthetic import CorpusConfig, make_topic_corpus
+    ccfg = CorpusConfig(n_topics=8, vocab_size=240, n_docs=48, doc_len=32,
+                        seed=5)
+    tokens, mask, _ = make_topic_corpus(ccfg)
+    tokens, mask = jnp.asarray(tokens), jnp.asarray(mask)
+    cfg = make_family_cfg(name, n_topics=16, vocab_size=240)
+    means = {
+        layout: sum(common.family_sweep_perplexity(cfg, tokens, mask,
+                                                   layout, seed, n_sweeps=4)
+                    for seed in (2, 3)) / 2
+        for layout in ("scan", "sorted")
+    }
+    rel = abs(means["sorted"] - means["scan"]) / means["scan"]
+    assert rel < 0.05, means

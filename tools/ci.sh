@@ -14,8 +14,12 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "=== tier-1 tests ==="
 python -m pytest -x -q
 
-echo "=== quick throughput benchmark (interpret/CPU) ==="
-python -m benchmarks.run --only throughput
+echo "=== quick benchmarks: throughput + Trainer smoke (interpret/CPU) ==="
+# One invocation so bench_results.csv keeps every module's rows.  The
+# lda/pdp/hdp modules drive all three model families through
+# engine.Trainer and both layouts (writing BENCH_{pdp,hdp}.json), so API
+# drift between families breaks CI, not just the nightly benchmarks.
+python -m benchmarks.run --only throughput,lda,pdp,hdp --quick
 
 echo "=== artifacts ==="
 ls -l BENCH_*.json bench_results.csv
