@@ -6,8 +6,17 @@ count while MHW stays ~flat.  We time one jitted sweep per method across K
 and report per-token cost plus the MH acceptance rate (the approximation-
 quality diagnostic of §3.3 — it must stay high or the chain mixes slowly).
 
-Also reports alias-table build throughput (tables/s) — the producer side of
-the paper's producer/consumer thread-pool design (§5.1).
+Also reports:
+
+* alias-table build throughput (tables/s) — the producer side of the
+  paper's producer/consumer thread-pool design (§5.1) — fused
+  (in-kernel dense term) vs. materialize-then-build, and the incremental
+  partial-rebuild cost, which must scale with the changed rows, not V;
+* the round engine: rounds/s of the compiled whole-round program
+  (engine.round, donated buffers, async dispatch) vs. the PR-2 Python
+  reference loop, plus a blocking per-phase breakdown of one round
+  (sample / filter+push / project / alias-rebuild) — the dispatch-overhead
+  win tracked in BENCH_throughput.json.
 """
 
 from __future__ import annotations
@@ -18,8 +27,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import alias as alias_mod
-from repro.core import lda
+from repro.core import family as family_mod
+from repro.core import lda, ps
 from repro.data.synthetic import CorpusConfig, make_topic_corpus
+from repro.engine import Trainer, TrainerConfig
+from repro.engine import round as round_mod
+from repro.kernels import ops as kernel_ops
 
 from benchmarks import common
 
@@ -71,6 +84,121 @@ def time_sweeps(cfg, tokens, mask, samplers, n_iter=5):
             times.append(time.perf_counter() - t0)
             st[0], st[1] = local, shared
     return {s: sorted(states[s][5])[n_iter // 2] for s in samplers}
+
+
+def time_round_engine(cfg, tokens, mask, n_rounds=6, n_clients=8, tau=2):
+    """Rounds/s: compiled whole-round program vs. the Python reference
+    loop, same config and RNG (the two produce bit-identical counts, so
+    this isolates dispatch overhead + per-round host sync)."""
+    out = {}
+    for compiled in (False, True):
+        trainer = Trainer(cfg, tokens, mask, config=TrainerConfig(
+            n_clients=n_clients, tau=tau, compiled=compiled))
+        trainer.step()                  # warmup/compile
+        trainer._sync()
+        t0 = time.perf_counter()
+        for _ in range(n_rounds):
+            trainer.step()
+        trainer._sync()
+        out["compiled" if compiled else "python_loop"] = \
+            (time.perf_counter() - t0) / n_rounds
+    out["speedup"] = out["python_loop"] / out["compiled"]
+    return out
+
+
+def round_phase_breakdown(cfg, tokens, mask, n_rounds=3, n_clients=2):
+    """Blocking per-phase wall-clock of one sync round, built from the
+    shared round body (engine.round) the way the reference loop dispatches
+    it: alias-rebuild → sample (tau sweeps/client) → filter+push →
+    project(+auxiliaries).  Phases are synced individually, so the numbers
+    over-count overlap on purpose — they bound each phase's share."""
+    spec = ps.FilterSpec(kind="topk", k_rows=cfg.vocab_size // 8,
+                         random_rows=cfg.vocab_size // 16)
+    trainer = Trainer(cfg, tokens, mask, config=TrainerConfig(
+        n_clients=n_clients, compiled=False, filter=spec))
+    fam = trainer.family
+
+    @jax.jit
+    def sample_fn(local, snapshot, tables, stale, t, m, keys):
+        return round_mod.tau_sweeps(cfg, fam, local, snapshot, tables,
+                                    stale, t, m, keys)
+
+    @jax.jit
+    def filter_push_fn(accs, snapshot, residuals, kfs):
+        total, res = None, []
+        for c, acc in enumerate(accs):
+            sent, r2 = round_mod.filter_push(fam, acc, spec, kfs[c],
+                                             residuals[c])
+            res.append(r2)
+            total = sent if total is None else {
+                n: total[n] + sent[n] for n in sent}
+        return fam.apply_delta(snapshot, total), tuple(res)
+
+    @jax.jit
+    def project_fn(locals_, shared, key):
+        return fam.post_round(cfg, list(locals_), fam.project(shared), key)
+
+    trainer.step()                      # warmup the trainer state
+    phases = {"alias_rebuild": 0.0, "sample": 0.0, "filter_push": 0.0,
+              "project": 0.0}
+    for r in range(1, 2 + n_rounds):    # round 1 warms the phase jits
+        t0 = time.perf_counter()
+        tables, stale = fam.build_alias(cfg, trainer.shared)
+        jax.block_until_ready(tables.prob)
+        phases["alias_rebuild"] += time.perf_counter() - t0
+
+        snapshot = trainer.shared
+        accs = []
+        t0 = time.perf_counter()
+        for c, (t, m) in enumerate(trainer.shards):
+            keys = jax.vmap(lambda s, c=c: jax.random.fold_in(
+                trainer.key, r * 131 + c * 17 + s))(jnp.arange(1))
+            trainer.locals_[c], acc = sample_fn(
+                trainer.locals_[c], snapshot, tables, stale, t, m, keys)
+            accs.append(acc)
+        jax.block_until_ready(accs[-1])
+        phases["sample"] += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        kfs = [jax.random.fold_in(trainer.key, 7000 + r * 131 + c)
+               for c in range(len(accs))]
+        trainer.shared, res = filter_push_fn(tuple(accs), snapshot,
+                                             tuple(trainer.residuals), kfs)
+        trainer.residuals = list(res)
+        jax.block_until_ready(fam.stats_dict(trainer.shared)[
+            fam.delta_names[0]])
+        phases["filter_push"] += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        trainer.locals_, trainer.shared = project_fn(
+            tuple(trainer.locals_), trainer.shared,
+            jax.random.fold_in(trainer.key, 9000 + r))
+        trainer.locals_ = list(trainer.locals_)
+        trainer._sync()
+        phases["project"] += time.perf_counter() - t0
+        if r == 1:                      # drop the compile round
+            phases = {k: 0.0 for k in phases}
+    return {k: v / n_rounds for k, v in phases.items()}
+
+
+def time_partial_rebuild(cfg, shared, tables, stale, row_counts):
+    """Incremental alias producer cost vs. number of changed rows — must
+    scale with R, not V (the full-rebuild baseline)."""
+    fam = family_mod.family_of(cfg)
+    out = {}
+    for n_rows in row_counts:
+        rows = jnp.arange(n_rows, dtype=jnp.int32)
+        valid = jnp.ones((n_rows,), bool)
+        fn = jax.jit(lambda sh, tb, st, rw, vl: fam.rebuild_alias_rows(
+            cfg, sh, tb, st, rw, vl))
+        t2, s2 = fn(shared, tables, stale, rows, valid)   # warmup/compile
+        jax.block_until_ready(t2.prob)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            t2, s2 = fn(shared, tables, stale, rows, valid)
+        jax.block_until_ready(t2.prob)
+        out[str(n_rows)] = (time.perf_counter() - t0) / 3
+    return out
 
 
 def run(quick: bool = True) -> None:
@@ -132,7 +260,10 @@ def run(quick: bool = True) -> None:
     common.emit("throughput_ppl_check", mhw=mean_ppl["mhw"],
                 mhw_sorted=mean_ppl["mhw_sorted"], rel_diff=rel)
 
-    # Alias build throughput (producer pool, §5.1).
+    # Alias build throughput (producer pool, §5.1): materialize-then-build
+    # (dense (V, K) term in HBM, then the table builder) vs. the fused
+    # kernel (dense term computed in-register from the raw statistics —
+    # saves the V×K round trip; see kernels/alias_build.py).
     cfg = lda.LDAConfig(n_topics=64, vocab_size=vocab)
     _, shared = lda.init_state(cfg, tokens, mask, jax.random.PRNGKey(0))
     t, _ = lda.build_alias(cfg, shared)
@@ -142,9 +273,67 @@ def run(quick: bool = True) -> None:
         t, _ = lda.build_alias(cfg, shared)
     jax.block_until_ready(t.prob)
     dt = (time.perf_counter() - t0) / 3
+    tile_r = max(t for t in (8, 4, 2, 1) if vocab % t == 0)
+    tf, _ = kernel_ops.build_tables_fused_lda(
+        shared.n_wk, shared.n_k, alpha=cfg.alpha, beta=cfg.beta,
+        vocab_size=vocab, tile_r=tile_r)
+    jax.block_until_ready(tf.prob)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        tf, _ = kernel_ops.build_tables_fused_lda(
+            shared.n_wk, shared.n_k, alpha=cfg.alpha, beta=cfg.beta,
+            vocab_size=vocab, tile_r=tile_r)
+    jax.block_until_ready(tf.prob)
+    dt_fused = (time.perf_counter() - t0) / 3
     common.emit("alias_build", vocab=vocab, n_topics=64,
-                tables_per_s=vocab / dt, s_per_build=dt)
-    artifact["alias_build"] = {"tables_per_s": vocab / dt, "s_per_build": dt}
+                tables_per_s=vocab / dt, s_per_build=dt,
+                s_per_build_fused=dt_fused)
+    artifact["alias_build"] = {"tables_per_s": vocab / dt,
+                               "s_per_build": dt,
+                               "s_per_build_fused": dt_fused}
+
+    # Incremental (delta-driven) partial rebuild: cost scales with the
+    # number of changed rows, not V — vs. s_per_build above as the
+    # full-rebuild baseline.
+    tables, stale = lda.build_alias(cfg, shared)
+    partial = time_partial_rebuild(cfg, shared, tables, stale,
+                                   (8, 32, 128) if quick
+                                   else (8, 32, 128, 512))
+    for n_rows, s in partial.items():
+        common.emit("alias_partial_rebuild", changed_rows=int(n_rows),
+                    s_per_rebuild=s)
+    artifact["alias_partial_rebuild"] = {
+        "s_full_rebuild": dt, "s_per_changed_rows": partial}
+
+    # Round engine: the compiled whole-round program vs. the PR-2 Python
+    # loop (one dispatch per op + a device sync every round), plus the
+    # blocking per-phase breakdown of the reference round.  Measured on a
+    # small shard so per-round dispatch + host-sync overhead — what fusion
+    # removes — is not drowned by kernel compute (the production regime:
+    # many clients, modest per-client shards).
+    rcfg = CorpusConfig(n_topics=8, vocab_size=vocab, n_docs=32,
+                        doc_len=16, seed=11)
+    rtokens, rmask, _ = make_topic_corpus(rcfg)
+    rtokens, rmask = jnp.asarray(rtokens), jnp.asarray(rmask)
+    cfg_round = lda.LDAConfig(n_topics=16 if quick else 64,
+                              vocab_size=vocab)
+    engine = time_round_engine(cfg_round, rtokens, rmask,
+                               n_rounds=10 if quick else 16)
+    common.emit("round_engine", s_per_round_python=engine["python_loop"],
+                s_per_round_compiled=engine["compiled"],
+                rounds_per_s_python=1.0 / engine["python_loop"],
+                rounds_per_s_compiled=1.0 / engine["compiled"],
+                speedup=engine["speedup"])
+    phases = round_phase_breakdown(cfg_round, rtokens, rmask)
+    for ph, s in phases.items():
+        common.emit("round_phase", phase=ph, s_per_round=s)
+    artifact["round_engine"] = {
+        "s_per_round": {"python_loop": engine["python_loop"],
+                        "compiled": engine["compiled"]},
+        "rounds_per_s": {"python_loop": 1.0 / engine["python_loop"],
+                         "compiled": 1.0 / engine["compiled"]},
+        "compiled_speedup": engine["speedup"],
+        "phase_breakdown_s": phases}
 
     # MH acceptance rate vs staleness (§3.3): how far can the alias table
     # lag before the chain stops moving?  This is the napkin math behind the

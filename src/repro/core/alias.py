@@ -166,6 +166,29 @@ def sample_rows(tables: AliasTable, rows: jax.Array, key: jax.Array) -> jax.Arra
     return jnp.where(coin < prob, slot, alias).astype(jnp.int32)
 
 
+def update_rows(tables: AliasTable, stale: jax.Array, rows: jax.Array,
+                valid: jax.Array, sub: AliasTable, p_rows: jax.Array
+                ) -> tuple[AliasTable, jax.Array]:
+    """Scatter freshly built rows into a resident table + stale snapshot.
+
+    The consumer half of the incremental alias producer (paper §5.1): rows
+    of ``sub``/``p_rows`` (built over the gathered, drifted token-types
+    ``rows``) replace the resident entries; rows with ``valid=False`` keep
+    their current entries, so a fixed-size top-k selection can carry
+    below-threshold padding without touching the table.  ``rows`` must be
+    duplicate-free for valid entries (``lax.top_k`` indices are).
+    """
+    keep = ~valid
+    sel = lambda old_rows, new_rows: jnp.where(  # noqa: E731 — local select
+        keep.reshape(keep.shape + (1,) * (new_rows.ndim - 1)),
+        old_rows, new_rows)
+    return AliasTable(
+        prob=tables.prob.at[rows].set(sel(tables.prob[rows], sub.prob)),
+        alias=tables.alias.at[rows].set(sel(tables.alias[rows], sub.alias)),
+        mass=tables.mass.at[rows].set(sel(tables.mass[rows], sub.mass)),
+    ), stale.at[rows].set(sel(stale[rows], p_rows))
+
+
 def logpdf_rows(p_rows: jax.Array, rows: jax.Array, outcome: jax.Array) -> jax.Array:
     """Unnormalized log-density of ``outcome`` under the *exact* distribution
     rows ``p_rows[rows]`` — used by MH acceptance when the alias table acts as

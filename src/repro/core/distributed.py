@@ -18,7 +18,11 @@ Model specifics enter only through the ``repro.core.family`` registry —
 there is exactly one round implementation for LDA / PDP / HDP, and a
 family's projection rules are sourced verbatim from
 ``repro.core.projection.*_RULES`` (split by operand locality, never
-hand-copied here).
+hand-copied here).  The per-client round body (:func:`tau_sweeps` — the
+staleness loop as a ``lax.scan`` — and :func:`filter_push`) is defined
+here and consumed verbatim by the single-device ``engine.Trainer``'s
+compiled whole-round program (``repro.engine.round``), so the mesh round
+and the client-iterated round cannot drift apart.
 
 Failure injection (paper §5.4): a boolean per-client ``alive`` mask zeroes a
 failed client's contribution for the round — the recovery path (reload from
@@ -37,6 +41,67 @@ from repro.core import family as family_mod
 from repro.core import projection, ps
 
 Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# The per-client round body — shared with engine.round's compiled round
+# --------------------------------------------------------------------------
+
+def tau_sweeps(model_cfg, fam: family_mod.ModelFamily, local, snapshot,
+               tables, stale_dense, tokens, mask, sweep_keys, *,
+               method: str = "mhw", layout: str = "scan",
+               sorted_layouts: tuple | None = None):
+    """One client's work for a sync round: ``tau`` sweeps against the frozen
+    snapshot, applying its own deltas locally between sweeps (the paper's
+    clients update their replica immediately and push asynchronously), then
+    the family's client-local constraint rules.
+
+    ``sweep_keys`` is the (tau, ...) stacked per-sweep key array — the
+    caller owns the keying so the mesh round and the Trainer each preserve
+    their historical RNG streams.  The staleness loop is a ``lax.scan`` so
+    ``tau`` does not multiply the trace.
+
+    Returns (local', accumulated_deltas).
+    """
+    zero = {n: jnp.zeros_like(fam.stats_dict(snapshot)[n])
+            for n in fam.delta_names}
+
+    def one_sweep(carry, key):
+        local, shared_local, acc = carry
+        local, deltas = fam.sweep(model_cfg, local, shared_local, tables,
+                                  stale_dense, tokens, mask, key,
+                                  method=method, layout=layout,
+                                  sorted_layouts=sorted_layouts)
+        shared_local = fam.apply_delta(shared_local, deltas)
+        acc = {n: acc[n] + deltas[n] for n in acc}
+        return (local, shared_local, acc), None
+
+    (local, _, acc), _ = jax.lax.scan(one_sweep, (local, snapshot, zero),
+                                      sweep_keys)
+    # Local projection: the rules whose operands live in client state
+    # (HDP's m_dk polytope) — shard-local and embarrassingly parallel.
+    local = fam.local_project(local)
+    return local, acc
+
+
+def filter_push(fam: family_mod.ModelFamily, deltas: dict[str, Array],
+                spec: ps.FilterSpec, key: Array,
+                residual: dict[str, Array] | None = None):
+    """Communication filter + error feedback on a client's accumulated
+    delta (§5.3).  What the filter withholds is carried in ``residual`` to
+    the next round, never dropped — count mass must be conserved or the
+    statistics drift negative.
+
+    Returns (sent, residual').  With the dense filter both pass through
+    unchanged (and ``residual`` may stay ``None``).
+    """
+    if spec.kind == "dense":
+        return deltas, residual
+    if residual is not None:
+        deltas = {n: deltas[n] + residual[n] for n in deltas}
+    sent = {n: ps.filter_delta(v, spec, jax.random.fold_in(key, i))
+            for i, (n, v) in enumerate(deltas.items())}
+    return sent, {n: deltas[n] - sent[n] for n in deltas}
 
 
 @dataclass(frozen=True)
@@ -65,21 +130,16 @@ def client_round(model_cfg, fam: family_mod.ModelFamily,
     clients update their local replica immediately and push asynchronously),
     then the family's client-local constraint rules.
 
-    Returns (local', accumulated_deltas)."""
-    shared_local = snapshot
-    acc = None
-    for s in range(dist_cfg.tau):
-        k = jax.random.fold_in(key, s)
-        local, deltas = fam.sweep(model_cfg, local, shared_local, tables,
-                                  stale_dense, tokens, mask, k,
-                                  method=method, layout=dist_cfg.layout)
-        shared_local = fam.apply_delta(shared_local, deltas)
-        acc = deltas if acc is None else {n: acc[n] + deltas[n] for n in deltas}
-    # Local projection: the rules whose operands live in client state
-    # (HDP's m_dk polytope) — previously silently dropped in distributed
-    # rounds; shard-local and embarrassingly parallel, so applied here.
-    local = fam.local_project(local)
-    return local, acc
+    Returns (local', accumulated_deltas).
+
+    Thin wrapper over the shared round body (:func:`tau_sweeps`)
+    preserving this module's historical per-sweep keying
+    ``fold_in(key, s)``."""
+    sweep_keys = jax.vmap(lambda s: jax.random.fold_in(key, s))(
+        jnp.arange(dist_cfg.tau))
+    return tau_sweeps(
+        model_cfg, fam, local, snapshot, tables, stale_dense, tokens, mask,
+        sweep_keys, method=method, layout=dist_cfg.layout)
 
 
 def make_round_fn(model_cfg, dist_cfg: DistConfig, mesh: Mesh,
@@ -117,13 +177,12 @@ def make_round_fn(model_cfg, dist_cfg: DistConfig, mesh: Mesh,
                 tables_rep, stale_rep, tokens_shard, mask_shard,
                 key_shard[0], method)
             a = alive_shard[0].astype(jnp.float32)
-            k_filter = jax.random.fold_in(key_shard[0], 7)
-            out = {}
-            for i, name in enumerate(fam.delta_names):
-                filt = ps.filter_delta(deltas[name], dist_cfg.filter,
-                                       jax.random.fold_in(k_filter, i))
-                # 4. push: eventual-consistency reduce across clients.
-                out[name] = jax.lax.psum(filt * a, data_axis)
+            sent, _ = filter_push(
+                fam, deltas, dist_cfg.filter,
+                jax.random.fold_in(key_shard[0], 7))
+            # 4. push: eventual-consistency reduce across clients.
+            out = {name: jax.lax.psum(sent[name] * a, data_axis)
+                   for name in fam.delta_names}
             return local2, out
 
         spec_local = jax.tree.map(lambda _: P(data_axis), local)

@@ -38,6 +38,7 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import alias as alias_mod
 from repro.core import hdp, lda, pdp, projection
 from repro.core import mhw as mhw_mod
 from repro.core import stirling
@@ -124,6 +125,35 @@ class ModelFamily:
         """(E,) per-outcome prior mass added to the document-sparse counts
         in the target: α·1 for LDA/PDP, b1·θ0 for HDP."""
         raise NotImplementedError
+
+    # --------------------------------------- incremental alias maintenance
+    @property
+    def alias_delta_stats(self) -> tuple[str, ...]:
+        """Shared statistics whose per-row drift stales the alias rows —
+        what the delta-driven producer watches (n_wk for the LM families;
+        both m_wk and s_wk for PDP, whose dense rows depend on both)."""
+        return self.delta_names
+
+    def dense_probs_rows(self, cfg, shared, rows: Array) -> Array:
+        """Gathered (R, E) dense-proposal rows for token-types ``rows`` —
+        must match ``dense_probs(cfg, shared)[rows]`` bit-for-bit.  The
+        default materializes the full dense term; families override with
+        O(R·E) gathered math so incremental rebuild cost scales with the
+        changed rows, not V."""
+        return self.dense_probs(cfg, shared)[rows]
+
+    def rebuild_alias_rows(self, cfg, shared, tables: alias_mod.AliasTable,
+                           stale: Array, rows: Array, valid: Array
+                           ) -> tuple[alias_mod.AliasTable, Array]:
+        """Incremental alias producer (paper §5.1 / §3.3): rebuild only the
+        token-type ``rows`` (gather → build-from-stats kernel → scatter into
+        the resident table + stale snapshot).  Rows with ``valid=False``
+        keep their current entries.  Generic path: gathered dense rows +
+        the compacted-rows build kernel; the LM families override with the
+        fully fused gather kernel."""
+        p_rows = self.dense_probs_rows(cfg, shared, rows)
+        sub = ops.build_tables_rows(p_rows)
+        return alias_mod.update_rows(tables, stale, rows, valid, sub, p_rows)
 
     def doc_sparse_logp(self, cfg, shared, doc_rows: Array, outcome: Array
                         ) -> Array:
@@ -332,6 +362,24 @@ class _LMFamilyBase(ModelFamily):
         beta_bar = cfg.beta * cfg.vocab_size
         return (shared.n_wk + cfg.beta) / (shared.n_k[None, :] + beta_bar)
 
+    def dense_probs_rows(self, cfg, shared, rows: Array) -> Array:
+        # prior · (LM row) with the division grouped first — the exact
+        # operation order of dense_probs, so partial and full rebuilds of
+        # the same statistics agree bit-for-bit.
+        beta_bar = cfg.beta * cfg.vocab_size
+        return (self.sparse_prior(cfg, shared)[None, :]
+                * ((shared.n_wk[rows] + cfg.beta)
+                   / (shared.n_k[None, :] + beta_bar)))
+
+    def rebuild_alias_rows(self, cfg, shared, tables, stale, rows, valid):
+        """LM-dense fast path: the scalar-prefetched gather kernel computes
+        prior_e·(n_wk+β)/(n_k+β̄) in-register from the gathered rows and
+        builds the sub-table in one fused launch."""
+        sub, p_rows = ops.build_tables_gather_fused(
+            shared.n_wk, shared.n_k, self.sparse_prior(cfg, shared), rows,
+            beta=cfg.beta, beta_bar=cfg.beta * cfg.vocab_size)
+        return alias_mod.update_rows(tables, stale, rows, valid, sub, p_rows)
+
     def encode(self, cfg, local) -> Array:
         return local.z
 
@@ -500,6 +548,17 @@ class PDPFamily(ModelFamily):
 
     def sparse_prior(self, cfg, shared) -> Array:
         return jnp.full((2 * cfg.n_topics,), cfg.alpha, jnp.float32)
+
+    def dense_probs_rows(self, cfg, shared, rows: Array) -> Array:
+        # The (m, s)-dependent joint rows: both table and customer counts
+        # of the gathered token-types feed the 2K outcome columns — which
+        # is why alias_delta_stats tracks m_wk AND s_wk drift for PDP.
+        table = stirling.as_jax(cfg.stirling_n_max, cfg.discount)
+        log_f0, log_f1 = pdp._log_factors(
+            cfg, table, shared.m_wk[rows], shared.s_wk[rows],
+            shared.m_k[None, :], shared.s_k[None, :])
+        return cfg.alpha * jnp.concatenate(
+            [jnp.exp(log_f0), jnp.exp(log_f1)], axis=-1)
 
     def sweep(self, cfg, local, shared, tables, stale, tokens, mask, key, *,
               method="mhw", layout="scan", sorted_layouts=None):

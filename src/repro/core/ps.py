@@ -113,6 +113,25 @@ def filter_delta(delta: Array, spec: FilterSpec, key: Array) -> Array:
     raise ValueError(spec.kind)
 
 
+def changed_rows(row_mass: Array, k_rows: int, threshold: float
+                 ) -> tuple[Array, Array]:
+    """Select the rows an incremental alias rebuild should touch.
+
+    The same magnitude-priority machinery as the top-k communication filter
+    (:func:`compress_delta`): the ``k_rows`` rows with the largest
+    accumulated L1 delta mass, plus a validity mask ``mass > threshold`` so
+    below-threshold rows inside the fixed-size selection are left untouched
+    (shapes must be static under jit; masked rows cost a no-op scatter).
+
+    ``row_mass`` is the (V,) per-row L1 mass of the summed pushed delta —
+    with a top-k communication filter at most ``k_rows + random_rows`` rows
+    are non-zero, so size the rebuild budget accordingly.
+    """
+    k_rows = min(k_rows, row_mass.shape[0])
+    mass, idx = jax.lax.top_k(row_mass, k_rows)
+    return idx.astype(jnp.int32), mass > threshold
+
+
 def residual_update(residual: Array, delta: Array, sent: Array) -> Array:
     """Error-feedback accumulator: what a filter withholds is carried to the
     next round instead of dropped, so every update is eventually applied —

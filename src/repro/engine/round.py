@@ -1,0 +1,166 @@
+"""The sync-round body, shared by every driver, compiled as one program.
+
+The paper's client loop is *one tight loop*, not a sequence of dispatches:
+pull → tau sweeps → filter → push → project → auxiliaries all live inside a
+single compiled program per round (§5.1-§5.3).  The per-client round body
+(``tau_sweeps`` + ``filter_push``) is defined once in
+``repro.core.distributed`` (core owns the round semantics; this engine
+module only adds the jit/donation/cadence machinery on top) and is consumed
+three ways:
+
+* by ``core.distributed.make_round_fn``'s shard_mapped mesh round
+  (clients = data-axis shards),
+* by :func:`trainer_round` — the whole-round function ``engine.Trainer``
+  jits: clients unrolled inside the trace, the tau staleness loop as
+  ``lax.scan``, projection under ``lax.cond`` (so the cadence does not
+  retrace), and the incremental alias producer fused at the tail,
+* by the Python reference loop ``Trainer._step_python`` — kept un-compiled
+  as the dispatch-per-op baseline the benchmarks compare against,
+
+so the three drivers cannot drift apart.
+
+Compiled-round invariants:
+
+* **One trace per (family, layout).**  Everything that varies between
+  rounds — the round index, the failure-injection ``alive`` mask, the
+  projection cadence — enters as *traced* scalars; RNG keys are derived
+  inside the trace with ``fold_in`` on the traced round index, reproducing
+  the reference loop's keying bit-for-bit.  ``trace_count`` exposes a
+  trace-time counter per (family, layout) as the regression guard.
+* **Donated buffers.**  The Trainer donates local states, shared statistics,
+  residuals (and, in incremental-alias mode, the resident tables + stale
+  snapshot), so XLA updates the round state in place instead of allocating
+  a second copy of the model every round.  Donation is skipped on backends
+  that ignore it (CPU) to avoid spurious warnings.
+* **Async pipelining.**  The round function never blocks; the Trainer only
+  synchronizes at evaluation points, so consecutive rounds overlap with
+  host-side Python (the dispatch of round r+1 rides on round r's compute).
+
+Incremental alias maintenance (§3.3 l/n staleness, §5.1 producer/consumer):
+after the push, the rows of the proposal term that actually drifted are
+identified from the summed delta's per-row L1 mass (``ps.changed_rows`` —
+the same magnitude-priority machinery as the top-k communication filter),
+and only those rows are rebuilt via the family's gather → build → scatter
+path (``ModelFamily.rebuild_alias_rows``).  Column aggregates (n_k, m_k,
+θ0) still drift for untouched rows; that staleness is exactly what the MH
+acceptance step corrects for, and a periodic full rebuild
+(``alias_full_rebuild_every``) bounds it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ps
+# Re-exported here for drivers/benchmarks that address the round body
+# through the engine namespace.
+from repro.core.distributed import filter_push, tau_sweeps  # noqa: F401
+
+# Trace-time counters, keyed (family_name, layout): the compile-stability
+# regression guard.  Bumped from inside the round body, which only executes
+# at trace time — a steady-state Trainer must not grow these.
+_TRACE_COUNTS: dict[tuple[str, str], int] = {}
+
+
+def trace_count(family_name: str, layout: str) -> int:
+    """How many times the compiled round has been traced for this
+    (family, layout) — across all Trainer instances (the jit cache is
+    shared, so a second Trainer with the same signature costs no trace)."""
+    return _TRACE_COUNTS.get((family_name, layout), 0)
+
+
+# ---------------------------------------------------------------------------
+# The Trainer's whole-round compiled program
+# ---------------------------------------------------------------------------
+
+def _round_impl(fam, model_cfg, tcfg, incremental, locals_, shared,
+                residuals, tables, stale, shard_tokens, shard_masks,
+                layouts, key, r, alive, do_project):
+    """One sync round as a single traced program.
+
+    Static: fam / model_cfg / tcfg / incremental (hashable configs — the
+    jit cache is shared across Trainer instances with equal signatures).
+    Traced: everything else, including the round index ``r``, the failure
+    mask ``alive`` and the projection flag ``do_project``, so per-round
+    cadence never retraces.
+    """
+    key_ = (fam.name, tcfg.layout)
+    _TRACE_COUNTS[key_] = _TRACE_COUNTS.get(key_, 0) + 1
+
+    snapshot = shared                                       # pull (frozen)
+    zero = {n: jnp.zeros_like(fam.stats_dict(snapshot)[n])
+            for n in fam.delta_names}
+    total = zero
+    new_locals, new_residuals = [], []
+    # RNG keying is the historical reference-loop scheme (flat fold_in on
+    # r*131 + c*17 + s / 7000+… / 9000+…), preserved so compiled and Python
+    # rounds are bit-identical.  Note the flat offsets can collide across
+    # phases once r*131 grows past 7000 (r ≳ 53) — a correlation quirk
+    # inherited from PR 2, kept until a coordinated re-keying of both paths.
+    for c in range(tcfg.n_clients):                         # clients unrolled
+        sweep_keys = jax.vmap(
+            lambda s, c=c: jax.random.fold_in(key, r * 131 + c * 17 + s)
+        )(jnp.arange(tcfg.tau))
+        loc, acc = tau_sweeps(
+            model_cfg, fam, locals_[c], snapshot, tables, stale,
+            shard_tokens[c], shard_masks[c], sweep_keys, method=tcfg.method,
+            layout=tcfg.layout,
+            sorted_layouts=layouts[c] if layouts is not None else None)
+        kf = jax.random.fold_in(key, 7000 + r * 131 + c)
+        sent, res = filter_push(fam, acc, tcfg.filter, kf, residuals[c])
+        # Failure injection (§5.4): a dead client's push is zeroed and its
+        # state/residual frozen — identical to skipping it entirely.
+        a = alive[c]
+        new_locals.append(jax.tree.map(
+            lambda new, old: jnp.where(a, new, old), loc, locals_[c]))
+        new_residuals.append(
+            res if res is None else jax.tree.map(
+                lambda new, old: jnp.where(a, new, old), res, residuals[c]))
+        af = a.astype(jnp.float32)
+        total = {n: total[n] + sent[n] * af for n in total}
+
+    shared = fam.apply_delta(snapshot, total)               # push
+    shared = jax.lax.cond(do_project, fam.project,          # project
+                          lambda s: s, shared)
+    new_locals, shared = fam.post_round(                    # auxiliaries
+        model_cfg, new_locals, shared, jax.random.fold_in(key, 9000 + r))
+
+    if not incremental:
+        return tuple(new_locals), shared, tuple(new_residuals)
+
+    # Incremental alias producer: rebuild only the token-type rows whose
+    # pushed delta mass drifted past the threshold, against the end-of-round
+    # statistics (freshest possible proposal for round r+1).
+    mass = functools.reduce(
+        jnp.add, (jnp.abs(total[n]).sum(-1) for n in fam.alias_delta_stats))
+    rows, valid = ps.changed_rows(mass, tcfg.alias_rebuild_rows,
+                                  tcfg.alias_rebuild_threshold)
+    tables, stale = fam.rebuild_alias_rows(model_cfg, shared, tables, stale,
+                                           rows, valid)
+    return tuple(new_locals), shared, tuple(new_residuals), tables, stale
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_round(incremental: bool, donate: bool):
+    """jit wrapper cache: donation depends on whether the alias buffers are
+    round outputs (incremental mode) and on backend support."""
+    donate_argnums = ()
+    if donate:
+        # locals_, shared, residuals — always owned by the round.
+        donate_argnums = (4, 5, 6)
+        if incremental:
+            donate_argnums += (7, 8)     # tables, stale rebuilt in-round
+    return jax.jit(_round_impl, static_argnums=(0, 1, 2, 3),
+                   donate_argnums=donate_argnums)
+
+
+def trainer_round(fam, model_cfg, tcfg, incremental, *args):
+    """Dispatch one compiled sync round (see :func:`_round_impl` for the
+    argument contract).  Buffers are donated only where the backend honors
+    donation — CPU ignores it and would warn on every compile."""
+    donate = jax.default_backend() != "cpu"
+    fn = _jitted_round(bool(incremental), donate)
+    return fn(fam, model_cfg, tcfg, bool(incremental), *args)

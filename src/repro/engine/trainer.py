@@ -19,14 +19,32 @@ run the identical lifecycle:
               family's client-local rules (e.g. HDP's 1 ≤ m_dk ≤ n_dk),
     (post)  — family auxiliary resampling (HDP CRT tables + θ0).
 
-The Trainer also owns the alias-table refresh cadence (the l/n staleness
-rule of §3.3): tables are rebuilt every ``alias_refresh_every`` rounds and
-reused in between, which is the producer half of the paper's §5.1
-producer/consumer design.
+Since PR 3 the whole round is **one compiled program**
+(``repro.engine.round``, DESIGN.md §8): clients are unrolled inside the
+trace, the tau loop is a ``lax.scan``, round state (locals / shared /
+residuals / alias buffers) is donated so XLA updates it in place, and
+``step()`` never blocks — rounds pipeline asynchronously and the Trainer
+synchronizes only at evaluation points.  ``TrainerConfig.compiled=False``
+keeps the PR-2 Python reference loop (one dispatch per op, blocking per
+round) for parity tests and as the benchmark baseline.
+
+The Trainer also owns the alias-table maintenance (the l/n staleness rule
+of §3.3 — the producer half of the paper's §5.1 producer/consumer design),
+in two modes:
+
+* cadence (default): tables fully rebuilt every ``alias_refresh_every``
+  rounds and reused in between;
+* incremental (``alias_rebuild_threshold`` set): every compiled round ends
+  by rebuilding *only* the token-type rows whose pushed delta mass exceeds
+  the threshold (top-``alias_rebuild_rows`` by L1 row mass — the same
+  machinery as the top-k communication filter), with a full rebuild every
+  ``alias_full_rebuild_every`` rounds to bound the drift of the column
+  aggregates that partial rebuilds leave stale.
 
 The loop is semantically the single-device simulation of
 ``core.distributed.make_round_fn`` (clients iterated instead of
-shard_mapped); RNG streams are keyed identically to the historical
+shard_mapped) — both drive the same round body in ``engine.round``; RNG
+streams are keyed identically to the historical
 ``benchmarks.common.run_multiclient``.  One deliberate behavior change
 from that loop: projection now runs uniformly per ``project_every`` for
 *every* family (the old loop never projected LDA) — matching the
@@ -36,6 +54,7 @@ to disable.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 import jax
@@ -45,6 +64,7 @@ import numpy as np
 from repro.core import family as family_mod
 from repro.core import ps
 from repro.data.synthetic import shard_corpus
+from repro.engine import round as round_mod
 
 Array = jax.Array
 
@@ -57,8 +77,22 @@ class TrainerConfig:
     method: str = "mhw"           # "mhw" | "exact" (scan layout only)
     n_clients: int = 1
     tau: int = 1                  # local sweeps per sync round (staleness)
-    # Rounds between alias-table rebuilds; None → the model config's value.
+    # One compiled program per round (donated buffers, async dispatch);
+    # False = the PR-2 Python reference loop (blocking, one jit per op).
+    compiled: bool = True
+    # --- alias maintenance (§3.3 l/n rule, §5.1 producer) ---------------
+    # Rounds between full alias-table rebuilds; None → the model config's
+    # value.  Cadence mode only (ignored when incremental mode is on).
     alias_refresh_every: int | None = None
+    # Incremental mode (compiled rounds only): when set, each round ends by
+    # rebuilding the ≤ alias_rebuild_rows token-type rows whose pushed
+    # delta L1 mass exceeds this threshold (0.0 = any changed row), inside
+    # the compiled round.  A full rebuild still runs every
+    # alias_full_rebuild_every rounds to bound aggregate drift.
+    alias_rebuild_threshold: float | None = None
+    alias_rebuild_rows: int = 64
+    alias_full_rebuild_every: int = 16
+    # --------------------------------------------------------------------
     project_every: int = 1        # rounds between projections (0 = never)
     filter: ps.FilterSpec = field(default_factory=ps.FilterSpec)
     # Failure injection (§5.4): (client_id, from_round, to_round) — that
@@ -77,7 +111,9 @@ class RunResult:
 
     @property
     def tokens_per_s(self) -> float:
-        t = float(np.mean(self.iter_times)) if self.iter_times else 1.0
+        if not self.iter_times:
+            return 0.0
+        t = float(np.mean(self.iter_times))
         return self.tokens / max(t, 1e-9)
 
 
@@ -104,6 +140,11 @@ class Trainer:
             raise ValueError(f"unknown layout {config.layout!r}")
         if config.layout == "sorted" and config.method != "mhw":
             raise ValueError("layout='sorted' requires method='mhw'")
+        if config.alias_rebuild_threshold is not None and not config.compiled:
+            raise ValueError("incremental alias rebuilds "
+                             "(alias_rebuild_threshold) require compiled "
+                             "rounds; the reference loop only supports the "
+                             "alias_refresh_every cadence")
         self.cfg = model_cfg
         self.tcfg = config
         self.family = family_mod.family_of(model_cfg)
@@ -130,9 +171,9 @@ class Trainer:
         # Hoisted sorted layouts: one tuple of per-chunk layouts per shard.
         self.layouts = None
         if config.layout == "sorted":
-            self.layouts = [
+            self.layouts = tuple(
                 self.family.build_sorted_layouts(model_cfg, t, m)
-                for t, m in self.shards]
+                for t, m in self.shards)
 
         self.alias_refresh_every = (
             config.alias_refresh_every
@@ -144,10 +185,30 @@ class Trainer:
         # communication filter withholds is carried to the next round,
         # never dropped — count mass must be conserved or the statistics
         # drift negative (paper §5.3's eventual-consistency contract).
-        self.residuals: list = [None] * config.n_clients
+        # Zero-initialized (not None) so the compiled round's pytree
+        # structure is stable from the first call.
+        if config.filter.kind != "dense":
+            stats = self.family.stats_dict(self.shared)
+            self.residuals: list = [
+                {n: jnp.zeros_like(stats[n]) for n in self.family.delta_names}
+                for _ in range(config.n_clients)]
+        else:
+            self.residuals = [None] * config.n_clients
         self.round_idx = 0
 
     # ------------------------------------------------------------------
+    @property
+    def _incremental(self) -> bool:
+        return self.tcfg.alias_rebuild_threshold is not None
+
+    @property
+    def round_traces(self) -> int:
+        """Trace count of this Trainer's compiled round signature — the
+        compile-stability guard (steady-state rounds must not grow it).
+        The jit cache is shared, so another Trainer with an equal signature
+        reuses the trace."""
+        return round_mod.trace_count(self.family.name, self.tcfg.layout)
+
     def _merge_shared(self, acc, sh):
         fam = self.family
         a, b = fam.stats_dict(acc), fam.stats_dict(sh)
@@ -157,7 +218,17 @@ class Trainer:
         return fam.shared_from_dict(merged)
 
     def _refresh_alias(self) -> None:
-        if self.tables is None or \
+        if self._incremental:
+            # Incremental mode: partial rebuilds happen inside the compiled
+            # round; the periodic full rebuild re-anchors the rows whose
+            # *aggregate* factors (n_k, m_k, θ0) drifted without row pushes.
+            if self.tables is None or (
+                    self.tcfg.alias_full_rebuild_every
+                    and self.round_idx
+                    % self.tcfg.alias_full_rebuild_every == 0):
+                self.tables, self.stale = self.family.build_alias(
+                    self.cfg, self.shared)
+        elif self.tables is None or \
                 self.round_idx % self.alias_refresh_every == 0:
             self.tables, self.stale = self.family.build_alias(self.cfg,
                                                               self.shared)
@@ -167,9 +238,52 @@ class Trainer:
         return (drop is not None and c == drop[0]
                 and drop[1] <= self.round_idx < drop[2])
 
+    def _sync(self) -> None:
+        """Block until every in-flight round has materialized (eval
+        points; compiled rounds otherwise pipeline asynchronously)."""
+        jax.block_until_ready(
+            jax.tree.leaves(self.family.stats_dict(self.shared))[0])
+
     # ------------------------------------------------------------------
     def step(self) -> None:
-        """One sync round: pull → sample → filter → push → project."""
+        """One sync round: pull → sample → filter → push → project.
+
+        Compiled mode (default): one jitted program, donated buffers, no
+        host sync — the call returns as soon as the round is dispatched.
+        """
+        if not self.tcfg.compiled:
+            self._step_python()
+            return
+        tcfg = self.tcfg
+        r = self.round_idx
+        self._refresh_alias()
+
+        alive = np.array([not self._client_failed(c)
+                          for c in range(tcfg.n_clients)])
+        do_project = bool(tcfg.project_every
+                          and r % tcfg.project_every == 0)
+        out = round_mod.trainer_round(
+            self.family, self.cfg, tcfg, self._incremental,
+            tuple(self.locals_), self.shared, tuple(self.residuals),
+            self.tables, self.stale,
+            tuple(t for t, _ in self.shards),
+            tuple(m for _, m in self.shards),
+            self.layouts, self.key, np.int32(r), alive,
+            np.bool_(do_project))
+        if self._incremental:
+            locals2, self.shared, residuals2, self.tables, self.stale = out
+        else:
+            locals2, self.shared, residuals2 = out
+        self.locals_ = list(locals2)
+        self.residuals = list(residuals2)
+        self.round_idx += 1
+
+    def _step_python(self) -> None:
+        """The PR-2 reference loop: one jitted dispatch per sweep/op and a
+        device sync every round.  Semantically identical to the compiled
+        round (same RNG keying — integer count statistics match
+        bit-exactly); kept as the parity oracle and the dispatch-overhead
+        baseline measured in benchmarks/bench_throughput.py."""
         fam, cfg, tcfg = self.family, self.cfg, self.tcfg
         r = self.round_idx
         self._refresh_alias()
@@ -195,15 +309,9 @@ class Trainer:
             # polytope 1 ≤ m_dk ≤ n_dk) — applied every round, exactly as
             # the distributed round does.
             self.locals_[c] = fam.local_project(self.locals_[c])
-            if tcfg.filter.kind != "dense":          # filter (§5.3)
-                kf = jax.random.fold_in(self.key, 7000 + r * 131 + c)
-                if self.residuals[c] is not None:
-                    acc = {n: acc[n] + self.residuals[c][n] for n in acc}
-                sent = {n: ps.filter_delta(v, tcfg.filter,
-                                           jax.random.fold_in(kf, i))
-                        for i, (n, v) in enumerate(acc.items())}
-                self.residuals[c] = {n: acc[n] - sent[n] for n in acc}
-                acc = sent
+            kf = jax.random.fold_in(self.key, 7000 + r * 131 + c)
+            acc, self.residuals[c] = round_mod.filter_push(   # filter (§5.3)
+                fam, acc, tcfg.filter, kf, self.residuals[c])
             total_delta = acc if total_delta is None else {
                 n: total_delta[n] + acc[n] for n in acc}
 
@@ -214,25 +322,30 @@ class Trainer:
         self.locals_, self.shared = fam.post_round(  # family auxiliaries
             cfg, self.locals_, self.shared,
             jax.random.fold_in(self.key, 9000 + r))
-        jax.block_until_ready(
-            jax.tree.leaves(fam.stats_dict(self.shared))[0])
+        self._sync()
         self.round_idx += 1
 
     def run(self, n_rounds: int, *, eval_every: int = 5,
             eval_docs: int = 32) -> RunResult:
-        """Run ``n_rounds`` sync rounds with periodic held-out evaluation."""
-        import time
+        """Run ``n_rounds`` sync rounds with periodic held-out evaluation.
 
+        Compiled rounds pipeline asynchronously between evaluation points;
+        per-round times are therefore measured per eval segment (wall time
+        from the previous sync, amortized over the segment's rounds)."""
         fam, cfg = self.family, self.cfg
         eval_t = self.tokens[:eval_docs]
         eval_m = self.mask[:eval_docs]
         res = RunResult(tokens=self.n_tokens)
         first = self.round_idx
+        seg_start = time.perf_counter()
+        seg_rounds = 0
         for r in range(first, first + n_rounds):
-            t0 = time.perf_counter()
             self.step()
-            res.iter_times.append(time.perf_counter() - t0)
+            seg_rounds += 1
             if (r - first) % eval_every == 0 or r == first + n_rounds - 1:
+                self._sync()
+                dt = (time.perf_counter() - seg_start) / seg_rounds
+                res.iter_times.extend([dt] * seg_rounds)
                 res.perplexities.append(float(fam.perplexity(
                     cfg, self.shared, eval_t, eval_m,
                     jax.random.PRNGKey(42))))
@@ -240,6 +353,8 @@ class Trainer:
                     float(fam.topics_per_word(self.shared)))
                 res.violations.append(
                     float(fam.count_violations(self.shared)))
+                seg_start = time.perf_counter()
+                seg_rounds = 0
         return res
 
     # ------------------------------------------------------------ queries

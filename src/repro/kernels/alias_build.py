@@ -14,7 +14,16 @@ cadence for every token-type row.  On TPU the thread pool dissolves into a
 The fused variant computes the dense LDA term α(n_wk+β)/(n_t+β̄) from the
 raw sufficient statistics *inside* the kernel, saving one V×K HBM round
 trip versus materializing the dense matrix and then building tables
-(measured in benchmarks/bench_kernels.py).
+(measured in the ``alias_build`` section of benchmarks/bench_throughput.py,
+fused vs. materialize-then-build).
+
+Incremental rebuilds (the delta-driven producer of the paper's §5.1
+producer/consumer design) use the *rows* variants: only the token-type rows
+whose pushed delta mass drifted are rebuilt — :func:`alias_build_rows` over
+a compacted (R, E) block, and :func:`alias_build_gather_fused`, whose
+scalar-prefetched row indices drive the input index map so the gather, the
+dense-term computation and the table build fuse into one kernel (cost
+scales with R changed rows, not V).
 
 Validated against ``repro.kernels.ref`` in interpret mode (CPU); the block
 shapes keep the working set ≤ a few MB of VMEM for production sizes
@@ -28,6 +37,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_TILE_R = 8
 
@@ -186,3 +196,93 @@ def alias_build_fused(n_wk: jax.Array, n_k: jax.Array, *, alpha: float,
         ],
         interpret=interpret,
     )(n_wk, n_k.reshape(1, -1))
+
+
+@functools.partial(jax.jit, static_argnames=("tile_r", "interpret"))
+def alias_build_rows(p: jax.Array, *, tile_r: int = DEFAULT_TILE_R,
+                     interpret: bool = True):
+    """Alias build over a compacted (R, K) row block — the gathered changed
+    rows of an incremental rebuild.  R need not be a tile_r multiple (rows
+    are padded with zero mass, which the kernel's uniform fallback absorbs,
+    and trimmed from the outputs)."""
+    r, k = p.shape
+    pad = (-r) % tile_r
+    p_pad = jnp.pad(p, ((0, pad), (0, 0))) if pad else p
+    prob, alias, mass = alias_build(p_pad, tile_r=min(tile_r, r + pad),
+                                    interpret=interpret)
+    return prob[:r], alias[:r], mass[:r]
+
+
+def _alias_build_gather_kernel(rows_ref, n_wk_ref, n_k_ref, prior_ref,
+                               prob_ref, alias_ref, mass_ref, stale_ref,
+                               *, beta, beta_bar):
+    """One gathered row per program: the scalar-prefetched row index drives
+    the n_wk index map (the gather *is* the DMA), the dense term
+    prior_e·(n_wk+β)/(n_k+β̄) is computed in-register, and the freshly built
+    table row plus the dense row (the stale-snapshot update) are written to
+    the compacted outputs."""
+    del rows_ref  # consumed by the index maps
+    n_wk = n_wk_ref[...].astype(jnp.float32)           # (1, K) gathered row
+    n_k = n_k_ref[...].astype(jnp.float32)             # (1, K)
+    # prior · (LM row), division grouped first — the exact operation order
+    # of the families' dense_probs, so partial rebuilds are bit-identical
+    # to a full rebuild of the same statistics.
+    p = prior_ref[...] * ((n_wk + beta) / (n_k + beta_bar))
+    k = p.shape[-1]
+    mass = jnp.sum(p, axis=-1)                         # (1,)
+    safe = mass > 0
+    pn = jnp.where(safe[:, None], p / jnp.where(safe, mass, 1.0)[:, None],
+                   jnp.full_like(p, 1.0 / k))
+    prob, alias = _build_tile(pn * k)
+    prob_ref[...] = prob
+    alias_ref[...] = alias
+    mass_ref[...] = mass.astype(jnp.float32)
+    stale_ref[...] = p
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("beta", "beta_bar", "interpret"))
+def alias_build_gather_fused(n_wk: jax.Array, n_k: jax.Array,
+                             prior: jax.Array, rows: jax.Array, *,
+                             beta: float, beta_bar: float,
+                             interpret: bool = True):
+    """Gather → fused dense-term + alias build over changed rows only.
+
+    ``prior`` is the (K,) per-topic prior-mass vector of the dense proposal
+    (α·1 for LDA, b1·θ0 for HDP), so one kernel serves every family whose
+    dense term factorizes as prior_e · LM row.  ``rows`` is the (R,) int32
+    changed-row selection.  Returns compacted (prob, alias, mass, dense)
+    rows of shapes (R, K)/(R, K)/(R,)/(R, K) for the caller to scatter
+    (``repro.core.alias.update_rows``).
+    """
+    v, k = n_wk.shape
+    r = rows.shape[0]
+    kernel = functools.partial(_alias_build_gather_kernel, beta=beta,
+                               beta_bar=beta_bar)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i, rows: (rows[i], 0)),
+            pl.BlockSpec((1, k), lambda i, rows: (0, 0)),
+            pl.BlockSpec((1, k), lambda i, rows: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i, rows: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, rows: (i, 0)),
+            pl.BlockSpec((1,), lambda i, rows: (i,)),
+            pl.BlockSpec((1, k), lambda i, rows: (i, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((r, k), jnp.float32),
+            jax.ShapeDtypeStruct((r, k), jnp.int32),
+            jax.ShapeDtypeStruct((r,), jnp.float32),
+            jax.ShapeDtypeStruct((r, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(rows.astype(jnp.int32), n_wk, n_k.reshape(1, -1),
+      prior.reshape(1, -1))

@@ -41,6 +41,31 @@ def build_tables_fused_lda(n_wk: jax.Array, n_k: jax.Array, *, alpha: float,
     return AliasTable(prob=prob, alias=alias, mass=mass), stale_dense
 
 
+def build_tables_rows(p_rows: jax.Array, *, tile_r: int = 8,
+                      interpret: bool | None = None) -> AliasTable:
+    """Alias build over a compacted (R, K) block of gathered changed rows
+    (the incremental producer's generic path; see alias_build_rows)."""
+    prob, alias, mass = _build.alias_build_rows(
+        p_rows, tile_r=tile_r,
+        interpret=INTERPRET if interpret is None else interpret)
+    return AliasTable(prob=prob, alias=alias, mass=mass)
+
+
+def build_tables_gather_fused(n_wk: jax.Array, n_k: jax.Array,
+                              prior: jax.Array, rows: jax.Array, *,
+                              beta: float, beta_bar: float,
+                              interpret: bool | None = None
+                              ) -> tuple[AliasTable, jax.Array]:
+    """Gather → fused dense-term + alias build over changed rows only, for
+    the LM-dense families (prior_e · (n_wk+β)/(n_k+β̄)).  Returns the
+    compacted sub-table plus the matching dense rows for the stale-snapshot
+    scatter (``repro.core.alias.update_rows``)."""
+    prob, alias, mass, dense = _build.alias_build_gather_fused(
+        n_wk, n_k, prior, rows, beta=beta, beta_bar=beta_bar,
+        interpret=INTERPRET if interpret is None else interpret)
+    return AliasTable(prob=prob, alias=alias, mass=mass), dense
+
+
 def sample_rows(tables: AliasTable, rows: jax.Array, key: jax.Array, *,
                 tile_v: int = 64, tile_b: int = 1024,
                 interpret: bool | None = None) -> jax.Array:

@@ -19,6 +19,9 @@ echo "=== quick benchmarks: throughput + Trainer smoke (interpret/CPU) ==="
 # lda/pdp/hdp modules drive all three model families through
 # engine.Trainer and both layouts (writing BENCH_{pdp,hdp}.json), so API
 # drift between families breaks CI, not just the nightly benchmarks.
+# The throughput module's round_engine / alias_partial_rebuild sections
+# track the compiled-round dispatch-overhead win and the incremental
+# alias rebuild cost as BENCH_throughput.json artifacts (DESIGN.md §8).
 python -m benchmarks.run --only throughput,lda,pdp,hdp --quick
 
 echo "=== artifacts ==="
