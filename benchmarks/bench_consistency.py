@@ -1,0 +1,150 @@
+"""Consistency-policy frontier (paper §5.2-§5.3; Yuan et al. 2014 §4).
+
+The parameter server's relaxed consistency model is the paper's central
+scaling lever: bulk-synchronous rounds (BSP) pay a full pull — snapshot
+refresh + alias-proposal rebuild — every round, while stale-synchronous
+clients (SSP, bound s) amortize that work over s+1 rounds and async
+clients never block on it at all.  The staleness is not free: clients
+sample against older statistics, so mixing can slow down.
+
+This bench records that trade as the staleness-vs-throughput-vs-perplexity
+frontier over the multi-client quick config: rounds/s and final held-out
+perplexity for BSP vs SSP(1) vs SSP(2) vs SSP(4) vs async, written to
+``BENCH_consistency.json``.  The acceptance contract (tracked by
+tools/ci.sh):
+
+* all policy entries present (bsp, ssp1, ssp2, ssp4, async);
+* SSP(bound ≥ 2) strictly faster (rounds/s) than BSP;
+* SSP (bounds 1-2) and async within 5% relative perplexity of BSP at
+  equal rounds.  SSP(4) is recorded as the deep-staleness frontier point
+  without a ppl gate: at quick-CI corpus sizes a refresh period of 5
+  rounds is a large fraction of the whole transient, so its gap
+  (~10-20%) reflects the tiny-corpus regime, not the production one the
+  paper targets (where per-round relative drift is orders of magnitude
+  smaller) — the artifact tracks it so the trade stays visible.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lda
+from repro.data.synthetic import CorpusConfig, make_topic_corpus
+from repro.engine import Trainer, TrainerConfig
+
+from benchmarks import common
+
+# Artifact keys, in the order reported.
+POLICIES = {
+    "bsp": "bsp",
+    "ssp1": "ssp:1",
+    "ssp2": "ssp:2",
+    "ssp4": "ssp:4",
+    "async": "async",
+}
+
+
+def time_policy(cfg, tokens, mask, consistency: str, *, n_clients: int,
+                n_rounds: int, seeds=(0, 1)) -> dict:
+    """Min-of-seeds s/round (timed segment excludes the compile/warmup
+    rounds; min because shared-box load only ever adds time) and
+    seed-averaged final perplexity for one consistency policy."""
+    times, ppls = [], []
+    for seed in seeds:
+        trainer = Trainer(cfg, tokens, mask, config=TrainerConfig(
+            n_clients=n_clients, consistency=consistency),
+            key=jax.random.PRNGKey(seed))
+        # Warmup: compile the round and settle the alias/pull schedule
+        # past the first refresh so every policy is timed steady-state.
+        for _ in range(2):
+            trainer.step()
+        trainer._sync()
+        t0 = time.perf_counter()
+        for _ in range(n_rounds):
+            trainer.step()
+        trainer._sync()
+        times.append((time.perf_counter() - t0) / n_rounds)
+        ppls.append(trainer.perplexity(tokens[:64], mask[:64]))
+        assert trainer.consistency_error() == 0.0, consistency
+    return {
+        "s_per_round": min(times),
+        "rounds_per_s": 1.0 / min(times),
+        "perplexity_final": sum(ppls) / len(ppls),
+    }
+
+
+def run(quick: bool = True) -> None:
+    # The regime the policies differentiate in: several clients with
+    # modest per-client shards, a vocabulary large enough that the
+    # per-round pull work (snapshot + alias-proposal rebuild over V rows)
+    # is a visible fraction of the round — exactly the work SSP amortizes
+    # over its staleness window — and a corpus large enough that
+    # per-round relative drift does not drown the stale clients.
+    ccfg = CorpusConfig(n_topics=8, vocab_size=2048 if quick else 8192,
+                        n_docs=256 if quick else 512,
+                        doc_len=48 if quick else 64, seed=13)
+    tokens, mask, _ = make_topic_corpus(ccfg)
+    tokens, mask = jnp.asarray(tokens), jnp.asarray(mask)
+    cfg = lda.LDAConfig(n_topics=16 if quick else 32,
+                        vocab_size=ccfg.vocab_size, mh_steps=2)
+    n_clients = 4
+    n_rounds = 30 if quick else 48
+
+    artifact = {"quick": quick, "vocab": ccfg.vocab_size,
+                "n_clients": n_clients, "n_rounds": n_rounds,
+                "policies": {}}
+    from repro.core.server import make_consistency
+    from repro.engine import round as round_mod
+    traces0 = {name: round_mod.trace_count(
+        "lda", "scan", make_consistency(c).key)
+        for name, c in POLICIES.items()}
+    results = {}
+    for name, consistency in POLICIES.items():
+        results[name] = time_policy(cfg, tokens, mask, consistency,
+                                    n_clients=n_clients, n_rounds=n_rounds,
+                                    seeds=(0, 1) if quick else (0, 1, 2))
+        common.emit("consistency", policy=name, **results[name])
+
+    bsp = results["bsp"]
+    for name, res in results.items():
+        res["speedup_vs_bsp"] = bsp["s_per_round"] / res["s_per_round"]
+        res["ppl_rel_vs_bsp"] = (abs(res["perplexity_final"]
+                                     - bsp["perplexity_final"])
+                                 / bsp["perplexity_final"])
+        artifact["policies"][name] = res
+    common.emit("consistency_summary",
+                ssp2_speedup_vs_bsp=results["ssp2"]["speedup_vs_bsp"],
+                ssp4_speedup_vs_bsp=results["ssp4"]["speedup_vs_bsp"],
+                async_ppl_rel_vs_bsp=results["async"]["ppl_rel_vs_bsp"])
+
+    # The acceptance contract, asserted here so a nightly/CI run fails
+    # loudly instead of silently shipping a regressed artifact.  SSP(4)
+    # carries no ppl gate — it is the deep-staleness frontier point (see
+    # module docstring).
+    for name in ("ssp2", "ssp4"):
+        assert results[name]["s_per_round"] < bsp["s_per_round"], (
+            f"{name} not strictly faster than BSP: {results[name]} vs {bsp}")
+    for name in ("ssp1", "ssp2", "async"):
+        assert results[name]["ppl_rel_vs_bsp"] <= 0.05, (name, results[name])
+
+    # Trace-count guard (must run in-process — jit caches die with the
+    # interpreter): per policy, this bench's Trainers (all seeds share one
+    # static signature) cost exactly one new trace, and nothing that
+    # varies per round (refresh flag, projection cadence, failure mask)
+    # may have retraced it.
+    for name, consistency in POLICIES.items():
+        pkey = make_consistency(consistency).key
+        n = round_mod.trace_count("lda", "scan", pkey) - traces0[name]
+        assert n == 1, (
+            f"compiled round traced {n}x for (lda, scan, {pkey}) in this "
+            "bench — steady-state rounds must not retrace")
+    common.emit("consistency_trace_guard", traces_per_policy=1)
+
+    common.write_artifact("consistency", artifact)
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -12,6 +12,8 @@ Mapping to the paper:
   bench_scaling     Fig 6  client-count scaling (doc log-likelihood)
   bench_throughput  §3/§6.3 sampler complexity vs K + alias build + MH rate
   bench_filters     §5.3   communication-filter traffic/quality trade
+  bench_consistency §5.2-3 staleness-vs-throughput-vs-perplexity frontier
+                           (BSP vs SSP(1,2,4) vs async parameter server)
   bench_failover    §5.4   client failure + recovery robustness
   bench_stale_sync  beyond-paper: PS pattern on LM gradient sync
   bench_roofline    §Roofline table from the dry-run artifacts
@@ -32,7 +34,7 @@ import traceback
 from benchmarks import common
 
 MODULES = ("lda", "pdp", "hdp", "projection", "scaling", "throughput",
-           "filters", "failover", "stale_sync", "roofline")
+           "filters", "consistency", "failover", "stale_sync", "roofline")
 
 
 def main(argv=None) -> int:

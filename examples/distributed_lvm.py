@@ -16,6 +16,9 @@ example drives the identical logic client-by-client so it runs anywhere,
 and exercises:
 
   - τ local sweeps against a frozen snapshot (bounded staleness, §5.2-5.3),
+  - the explicit parameter server with a pluggable consistency policy
+    (``--consistency bsp|ssp:2|async``) over vocabulary-sharded state
+    (``--server-shards``; DESIGN.md §9),
   - scan-oracle or token-sorted tile-skipping layout (``--layout``),
   - magnitude-priority + uniform-sampling delta filters (§5.3),
   - constraint projection on shared AND client-local polytopes (§5.5),
@@ -46,6 +49,11 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=12)
     ap.add_argument("--tau", type=int, default=2,
                     help="local sweeps per sync round (staleness)")
+    ap.add_argument("--consistency", default="bsp",
+                    help="server policy: bsp | ssp:<bound> | async")
+    ap.add_argument("--server-shards", type=int, default=1,
+                    help="vocabulary shards of the server's canonical "
+                         "statistics")
     ap.add_argument("--filter", choices=["dense", "topk"], default="dense")
     ap.add_argument("--fail-client", type=int, default=-1,
                     help="client id to fail mid-run (§5.4 failover demo)")
@@ -72,10 +80,13 @@ def main() -> None:
             if args.fail_client >= 0 else None)
 
     print(f"model={args.model} layout={args.layout} clients={args.clients} "
-          f"tau={args.tau} filter={args.filter} failover={drop}")
+          f"tau={args.tau} consistency={args.consistency} "
+          f"server_shards={args.server_shards} filter={args.filter} "
+          f"failover={drop}")
     t0 = time.time()
     trainer = Trainer(cfg, tokens, mask, config=TrainerConfig(
         layout=args.layout, n_clients=args.clients, tau=args.tau,
+        consistency=args.consistency, n_server_shards=args.server_shards,
         filter=fspec, drop_client=drop))
     res = trainer.run(args.rounds, eval_every=max(1, args.rounds // 6))
     for i, ppl in enumerate(res.perplexities):

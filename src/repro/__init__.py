@@ -1,0 +1,42 @@
+"""High Performance Latent Variable Models — the stable top-level API.
+
+The paper's system in three objects:
+
+* :func:`get_family` — the ModelFamily registry (LDA / PDP / HDP share one
+  inference stack; ``repro.core.family``),
+* :class:`ParameterServer` / :class:`Consistency` — vocabulary-sharded
+  shared statistics under a pluggable consistency policy (BSP / SSP /
+  async; ``repro.core.server``),
+* :class:`Trainer` — the multi-client driver running compiled sync rounds
+  against the server (``repro.engine``).
+
+>>> import repro
+>>> fam = repro.get_family("lda")
+>>> trainer = repro.Trainer(cfg, tokens, mask,
+...                         config=repro.TrainerConfig(consistency="ssp:2"))
+"""
+
+from repro.core import family
+from repro.core.family import get as get_family
+from repro.core.ps import FilterSpec
+from repro.core.server import (Async, BSP, Consistency, ParameterServer,
+                               ServerState, ShardSpec, SSP,
+                               make_consistency)
+from repro.engine import RunResult, Trainer, TrainerConfig
+
+__all__ = [
+    "Async",
+    "BSP",
+    "Consistency",
+    "FilterSpec",
+    "ParameterServer",
+    "RunResult",
+    "SSP",
+    "ServerState",
+    "ShardSpec",
+    "Trainer",
+    "TrainerConfig",
+    "family",
+    "get_family",
+    "make_consistency",
+]

@@ -1,9 +1,13 @@
 """Distributed collapsed Gibbs sampling on a device mesh (paper §5.2-§5.3).
 
 Clients = shards of the ``data`` mesh axis, each holding a document shard
-and a stale replica of the shared statistics.  A *round* is:
+and a stale replica of the shared statistics.  The canonical statistics
+live behind the explicit parameter server (``repro.core.server``):
+vocabulary-sharded :class:`~repro.core.server.ServerState` under a
+pluggable consistency policy (BSP / SSP / async).  A *round* is:
 
-  1. pull   — snapshot the shared statistics (frozen for the round),
+  1. pull   — the policy's snapshot of the shared statistics (BSP: frozen
+              fresh copy; SSP: the versioned stale cache; async: live),
   2. sample — ``tau`` local Gibbs sweeps against the snapshot, applying own
               deltas locally (bounded-staleness eventual consistency),
   3. filter — communication filter on the accumulated delta (paper §5.3),
@@ -39,6 +43,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import family as family_mod
 from repro.core import projection, ps
+from repro.core import server as server_mod
 
 Array = jax.Array
 
@@ -111,6 +116,13 @@ class DistConfig:
     alias_refresh_every: int = 1       # rounds between alias-table rebuilds
     filter: ps.FilterSpec = field(default_factory=ps.FilterSpec)
     project_every: int = 1             # rounds between projections (0 = never)
+    # Parameter-server policy + vocabulary sharding (core.server): "bsp" |
+    # "ssp:<bound>" | "async".  Under SPMD lock-step, async's immediate
+    # per-client application degenerates to the same psum barrier as BSP
+    # (the transport is a reduce); its distinguishing behavior here is the
+    # non-blocking pull (always the live state, never a versioned cache).
+    consistency: str = "bsp"
+    n_server_shards: int = 1
     # "scan" | "sorted" (mhw only).  Note: under shard_map the sorted
     # layouts are rebuilt inside each sweep (per-shard token streams only
     # exist inside the mesh program, so they cannot be hoisted from here);
@@ -142,38 +154,94 @@ def client_round(model_cfg, fam: family_mod.ModelFamily,
         sweep_keys, method=method, layout=dist_cfg.layout)
 
 
+def make_server(model_cfg, dist_cfg: DistConfig) -> server_mod.ParameterServer:
+    """The round's :class:`~repro.core.server.ParameterServer` — family,
+    vocabulary shard spec and consistency policy resolved from configs."""
+    return server_mod.make_server(
+        family_mod.get(dist_cfg.model), model_cfg.vocab_size,
+        n_shards=dist_cfg.n_server_shards,
+        consistency=dist_cfg.consistency)
+
+
 def make_round_fn(model_cfg, dist_cfg: DistConfig, mesh: Mesh,
                   method: str = "mhw", data_axis: str = "data",
-                  model_axis: str = "model"):
-    """Build the jitted distributed round.
+                  model_axis: str = "model",
+                  server: server_mod.ParameterServer | None = None):
+    """Build the jitted distributed round over an explicit parameter
+    server.
+
+    The round consumes a :class:`~repro.core.server.ParameterServer`
+    (built from ``dist_cfg`` when not given) instead of raw
+    ``shared``/``stale_dense`` pytrees: the returned function takes the
+    server's :class:`~repro.core.server.ServerState` — canonical
+    vocabulary-sharded statistics, versioned SSP cache, per-client
+    clocks, changed-row accounting, and the resident alias proposal
+    (host-refreshed via ``server.refresh_proposal``).
 
     Sharding contract (see module docstring):
       tokens/mask/local state — sharded over ``data`` on the document dim.
-      shared stats            — canonical copy sharded over ``model`` rows.
-    The round returns (local', shared', diagnostics).
+      shared stats            — canonical copy sharded over ``model`` rows
+                                (the server's vocabulary row-ranges laid
+                                over the physical row sharding).
+    The round returns (local', server_state').
+
+    Consistency: SSP's refresh predicate is evaluated in-trace from the
+    server clocks (``max(clocks) − cache_version > bound``; ``max`` so a
+    dead client cannot freeze the schedule — its protection is the zeroed
+    push, §5.4); the blocking pull degenerates to a forced synchronous
+    refresh under SPMD lock-step, as in the Trainer.
     """
     fam = family_mod.get(dist_cfg.model)
+    if server is None:
+        server = make_server(model_cfg, dist_cfg)
     n_clients = mesh.shape[data_axis]
 
     row_sharding = NamedSharding(mesh, P(model_axis, None))
     vec_sharding = NamedSharding(mesh, P())
     doc_sharding = NamedSharding(mesh, P(data_axis, None))
 
-    def round_fn(local, shared, tables, stale_dense, tokens, mask, key,
-                 alive):
+    def round_fn(local, state, tokens, mask, key, alive):
         """alive: (n_clients,) bool — failure-injection mask (paper §5.4)."""
-        # 1. pull: the snapshot is the shared state made available to every
-        #    client — expressed as a replication constraint (all-gather).
-        snapshot = jax.tree.map(
-            lambda x: jax.lax.with_sharding_constraint(x, vec_sharding), shared)
+        # 1. pull: the policy view made available to every client —
+        #    expressed as a replication constraint (all-gather).  BSP and
+        #    async pull the live canonical state; SSP the versioned cache.
+        #    The replication constraint is applied to the assembled view
+        #    *immediately*: letting the partitioner propagate the
+        #    model-axis row sharding into the shard-concatenation corrupts
+        #    values on multi-axis host meshes (observed on jax 0.4.37 —
+        #    the concat operands get strided over the data axis); pinning
+        #    the concat replicated sidesteps it, and every derived tensor
+        #    (including the row-constrained canonical store below) is then
+        #    partitioned correctly.
+        canonical = jax.tree.map(
+            lambda x: jax.lax.with_sharding_constraint(x, vec_sharding),
+            server.assemble(state))
+        if server.policy.caches:
+            clock_now = state.clocks.max()
+            do_refresh = clock_now - state.cache_version > server.policy.bound
+            cache = jax.tree.map(
+                lambda fresh, old: jnp.where(do_refresh, fresh, old),
+                canonical, state.cache)
+            version = jnp.where(do_refresh, clock_now, state.cache_version)
+            snapshot = cache
+            lag = server.reset_lag(state.client_lag, do_refresh)
+        else:
+            cache, version = state.cache, state.clocks.max()
+            snapshot = canonical
+            lag = None
 
         # 2-3. sample + filter, client-parallel over the data axis.
         from jax.experimental.shard_map import shard_map
 
         def one_client(local_shard, tokens_shard, mask_shard, key_shard,
-                       alive_shard, snapshot_rep, tables_rep, stale_rep):
+                       alive_shard, snapshot_rep, tables_rep, stale_rep,
+                       lag_shard):
+            # Read-my-writes SSP: each client samples the stale cache plus
+            # its own deltas since the cache version (its lag shard).
+            view = snapshot_rep if lag_shard is None else fam.apply_delta(
+                snapshot_rep, {n: v[0] for n, v in lag_shard.items()})
             local2, deltas = client_round(
-                model_cfg, fam, dist_cfg, local_shard, snapshot_rep,
+                model_cfg, fam, dist_cfg, local_shard, view,
                 tables_rep, stale_rep, tokens_shard, mask_shard,
                 key_shard[0], method)
             a = alive_shard[0].astype(jnp.float32)
@@ -183,25 +251,38 @@ def make_round_fn(model_cfg, dist_cfg: DistConfig, mesh: Mesh,
             # 4. push: eventual-consistency reduce across clients.
             out = {name: jax.lax.psum(sent[name] * a, data_axis)
                    for name in fam.delta_names}
-            return local2, out
+            lag2 = None if lag_shard is None else {
+                n: v + deltas[n][None] * a for n, v in lag_shard.items()}
+            return local2, out, lag2
 
         spec_local = jax.tree.map(lambda _: P(data_axis), local)
+        lag_spec = None if lag is None else {n: P(data_axis) for n in lag}
         fn = shard_map(
             one_client, mesh=mesh,
             in_specs=(spec_local, P(data_axis, None), P(data_axis, None),
-                      P(data_axis), P(data_axis), P(), P(), P()),
-            out_specs=(spec_local, P()),
+                      P(data_axis), P(data_axis), P(), P(), P(), lag_spec),
+            out_specs=(spec_local, P(), lag_spec),
             check_rep=False,
         )
         keys = jax.random.split(key, n_clients)
-        local2, summed = fn(local, tokens, mask, keys, alive, snapshot,
-                            tables, stale_dense)
+        local2, summed, lag = fn(local, tokens, mask, keys, alive, snapshot,
+                                 state.tables, state.stale, lag)
 
-        shared2 = fam.apply_delta(shared, summed)
+        # Pushes always land on the canonical statistics (SSP relaxes
+        # what clients *see*, never what the server *applies*).
+        shared2 = fam.apply_delta(canonical, summed)
 
         # 5. distributed projection (Algorithm 2) over the model axis rows.
+        #    The shard_mapped row-partitioned form is used for the
+        #    single-slice server state (the historical layout); for
+        #    multi-shard states the same rules+aggregates run replicated —
+        #    mathematically identical (Algorithm 2 *distributes* this very
+        #    computation), avoiding the partitioner defect noted at the
+        #    pull: resharding the concat-derived statistics onto model-axis
+        #    rows mid-program strides them over the wrong mesh axis
+        #    (jax 0.4.37).
         stats = fam.stats_dict(shared2)
-        if dist_cfg.project_every:
+        if dist_cfg.project_every and server.spec.n_shards == 1:
             row_specs = {n: P(model_axis, None)
                          for n in stats if stats[n].ndim == 2}
             for n in stats:
@@ -216,14 +297,31 @@ def make_round_fn(model_cfg, dist_cfg: DistConfig, mesh: Mesh,
                                or projectable.get(r.b) is not None)]
             stats = _project_alg2(projectable, elem_rules, fam.aggregates,
                                   mesh, model_axis, row_specs)
+        elif dist_cfg.project_every:
+            stats = projection.project(stats, fam.shared_rules,
+                                       fam.aggregates)
         shared3 = fam.shared_from_dict(stats)
 
         # Canonical storage: keep the server copy sharded over model rows.
-        shared3 = jax.tree.map(
-            lambda x: jax.lax.with_sharding_constraint(
-                x, row_sharding if x.ndim == 2 else vec_sharding),
-            shared3)
-        return local2, shared3
+        # Only safe as a constraint when the server state is one dense
+        # slice per stat (n_shards == 1): re-slicing a row-constrained
+        # tensor into the per-shard outputs mis-lowers on multi-axis host
+        # meshes (XLA strides the rows over the wrong axis — observed on
+        # jax 0.4.37; same partitioner defect worked around at the pull
+        # above), so multi-shard slices stay replicated and GSPMD places
+        # them.
+        if server.spec.n_shards == 1:
+            shared3 = jax.tree.map(
+                lambda x: jax.lax.with_sharding_constraint(
+                    x, row_sharding if x.ndim == 2 else vec_sharding),
+                shared3)
+        state2 = server.load_dense(state, shared3)
+        state2 = server.accumulate_mass(state2, summed)
+        state2 = state2._replace(
+            cache=cache, cache_version=version.astype(jnp.int32),
+            client_lag=lag,
+            clocks=state.clocks + alive.astype(jnp.int32))
+        return local2, state2
 
     return jax.jit(round_fn)
 

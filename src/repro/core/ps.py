@@ -123,9 +123,12 @@ def changed_rows(row_mass: Array, k_rows: int, threshold: float
     below-threshold rows inside the fixed-size selection are left untouched
     (shapes must be static under jit; masked rows cost a no-op scatter).
 
-    ``row_mass`` is the (V,) per-row L1 mass of the summed pushed delta —
+    ``row_mass`` is the (V,) per-row accumulated L1 push mass.  The
+    accounting that feeds it lives behind the parameter server's push path
+    (``repro.core.server.ParameterServer``: per-shard accumulators folded
+    on every tracked push, consumed + reset by ``consume_changed_rows``) —
     with a top-k communication filter at most ``k_rows + random_rows`` rows
-    are non-zero, so size the rebuild budget accordingly.
+    are non-zero per push, so size the rebuild budget accordingly.
     """
     k_rows = min(k_rows, row_mass.shape[0])
     mass, idx = jax.lax.top_k(row_mass, k_rows)

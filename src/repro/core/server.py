@@ -1,0 +1,460 @@
+"""The explicit parameter-server API (paper §4, §5.2-§5.3).
+
+The paper's server holds (key, value) sufficient statistics sharded over
+server nodes; clients *pull* stale copies, sample, and *push* batched
+deltas under a relaxed consistency model.  Until this module, "the server"
+was an implicit dense pytree threaded through every round signature and
+hard-wired to one consistency behavior (bulk-synchronous ``tau`` sweeps).
+This module makes both halves first-class:
+
+* :class:`ParameterServer` — ``pull / push / project / snapshot`` over
+  **vocabulary-sharded** shared statistics: every named shared stat whose
+  leading dimension is the vocabulary is split into ``n_shards``
+  contiguous row-ranges (:class:`ShardSpec` owns the row→shard map), so
+  pulls and pushes address shard-local slices instead of the full (V, K)
+  array.  Aggregates (n_k, m_k, θ0, …) stay unsharded ``aux`` state and
+  are re-derived from the assembled view, so the sharded store is
+  bit-exact with the historical dense pytree (assembly is pure
+  concatenation of exact slices; all arithmetic runs on the assembled
+  view in the same operation order as before).
+* :class:`Consistency` — the pluggable pull/push policy:
+
+  - :class:`BSP`: every pull returns the canonical state as of the end of
+    the previous round (today's behavior, bit-exact with the PR-3 round);
+  - :class:`SSP`: clients may run up to ``bound`` rounds ahead of a
+    *versioned stale cache*; the server tracks per-client clocks and the
+    compiled round's pull blocks — realized in the lock-step simulation
+    as a forced synchronous refresh — once ``clock − cache_version``
+    would exceed the bound (Yuan et al. 2014's bounded staleness).  SSP's
+    read-my-writes guarantee is kept: each client's pull is the cache
+    plus its *own* accumulated deltas since the cache version (the
+    per-client ``client_lag`` accumulator), so only *other* clients'
+    updates are stale;
+  - :class:`Async`: pushes apply to the canonical statistics immediately
+    (client c+1's pull in the same round already sees client c's push —
+    Gauss-Seidel across clients instead of BSP's Jacobi barrier), the
+    communication filter's error-feedback residuals carry withheld mass,
+    and pulls never block (they always return the freshest state).
+
+The server also owns the **per-shard changed-row accounting** that drives
+the PR-3 incremental alias rebuild: every tracked push accumulates per-row
+L1 delta mass into per-shard accumulators, and
+:meth:`ParameterServer.consume_changed_rows` runs the top-k
+magnitude-priority selection (``ps.changed_rows``) over the concatenated
+shard masses and resets them — so the rebuild budget reflects drift since
+the *last rebuild*, not just the last round, once policies stop
+rebuilding every round.
+
+Everything here is functional: the :class:`ParameterServer` object is a
+frozen (hashable) configuration — family, shard spec, policy — suitable
+as a ``jax.jit`` static argument, and all methods are pure functions over
+:class:`ServerState` pytrees, so a whole sync round (pull → sample →
+push → project) stays one compiled program (``repro.engine.round``).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ps
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Vocabulary sharding
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShardSpec:
+    """Row-range sharding of the vocabulary dimension.
+
+    ``n_rows`` vocabulary rows are split into ``n_shards`` contiguous,
+    balanced ranges — the paper's key-hashing over server nodes becomes
+    row-range sharding (DESIGN.md §2: row-hashing ≡ row-sharding).
+    """
+
+    n_rows: int
+    n_shards: int = 1
+
+    def __post_init__(self):
+        if not 1 <= self.n_shards <= self.n_rows:
+            raise ValueError(
+                f"n_shards={self.n_shards} must be in [1, {self.n_rows}]")
+
+    @property
+    def bounds(self) -> tuple[int, ...]:
+        """The ``n_shards + 1`` row boundaries (balanced contiguous ranges)."""
+        return tuple(i * self.n_rows // self.n_shards
+                     for i in range(self.n_shards + 1))
+
+    def rows_of(self, shard: int) -> tuple[int, int]:
+        """[start, stop) row range owned by ``shard``."""
+        b = self.bounds
+        return b[shard], b[shard + 1]
+
+    def shard_of(self, row: int) -> int:
+        """The row→shard map for a single row id."""
+        if not 0 <= row < self.n_rows:
+            raise IndexError(row)
+        return int(np.searchsorted(np.asarray(self.bounds), row, "right")) - 1
+
+    def row_to_shard(self) -> np.ndarray:
+        """(n_rows,) int32 row→shard map (the Chord finger table analogue)."""
+        out = np.zeros((self.n_rows,), np.int32)
+        for s in range(self.n_shards):
+            lo, hi = self.rows_of(s)
+            out[lo:hi] = s
+        return out
+
+    def split(self, x: Array) -> tuple[Array, ...]:
+        """Split a (n_rows, ...) array into its per-shard row slices."""
+        return tuple(x[lo:hi] for lo, hi in
+                     (self.rows_of(s) for s in range(self.n_shards)))
+
+
+# ---------------------------------------------------------------------------
+# Consistency policies
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Consistency:
+    """Base pull/push policy.  Frozen + hashable: policies ride along the
+    :class:`ParameterServer` as jit statics, so each policy gets its own
+    compiled round (one trace per (family, layout, policy))."""
+
+    kind = "bsp"
+
+    @property
+    def key(self) -> str:
+        """Stable identifier used for trace-count bookkeeping and parsing."""
+        return self.kind
+
+    # Does this policy maintain a versioned stale cache in ServerState?
+    caches = False
+    # Do pushes apply immediately (within-round, client-sequential)?
+    immediate = False
+    # Staleness bound: a client at clock r may sample a snapshot of
+    # version v only while r - v <= bound.
+    bound = 0
+
+    def needs_refresh(self, round_idx: int, version: int | None) -> bool:
+        """Host-side pull schedule: must the cached snapshot be refreshed
+        before round ``round_idx``?  Mirrors the traced predicate inside
+        the compiled round (lock-step clients ⇒ deterministic)."""
+        return True
+
+
+@dataclass(frozen=True)
+class BSP(Consistency):
+    """Bulk-synchronous: pull always returns the canonical state as of the
+    end of the previous round.  Bit-exact with the pre-server round."""
+
+
+@dataclass(frozen=True)
+class SSP(Consistency):
+    """Stale-synchronous parallel with staleness bound ``s``: clients run
+    up to ``s`` rounds ahead of the versioned cache; the pull blocks (in
+    the lock-step simulation: synchronously refreshes, after all pushes
+    through the previous round have been applied) once the bound would be
+    exceeded.  ``SSP(0)`` degenerates to BSP's refresh-every-round."""
+
+    bound: int = 1
+    kind = "ssp"
+    caches = True
+
+    def __post_init__(self):
+        if self.bound < 0:
+            raise ValueError(f"SSP bound must be >= 0, got {self.bound}")
+
+    @property
+    def key(self) -> str:
+        return f"ssp({self.bound})"
+
+    def needs_refresh(self, round_idx: int, version: int | None) -> bool:
+        return version is None or round_idx - version > self.bound
+
+
+@dataclass(frozen=True)
+class Async(Consistency):
+    """Fully asynchronous: pushes apply to the canonical statistics the
+    moment a client produces them (error-feedback residuals carry what the
+    communication filter withholds), and pulls never block — they return
+    whatever is freshest.  Unbounded staleness across clients; within the
+    lock-step simulation this surfaces as Gauss-Seidel client ordering."""
+
+    kind = "async"
+    immediate = True
+
+
+def make_consistency(spec: str | Consistency) -> Consistency:
+    """Parse a :class:`TrainerConfig.consistency` string: ``"bsp"``,
+    ``"async"``, or ``"ssp:<bound>"`` (also accepts ``ssp(<bound>)`` /
+    bare ``ssp`` for bound=1).  A negative bound reaches the
+    :class:`SSP` validator and raises."""
+    if isinstance(spec, Consistency):
+        return spec
+    s = spec.strip().lower()
+    if s == "bsp":
+        return BSP()
+    if s == "async":
+        return Async()
+    if s.startswith("ssp"):
+        rest = s[3:].strip("(): \t")
+        try:
+            return SSP(bound=int(rest)) if rest else SSP()
+        except ValueError as e:
+            if "bound" in str(e):     # invalid bound, not unparseable text
+                raise
+    raise ValueError(
+        f"unknown consistency {spec!r}; expected 'bsp', 'ssp:<bound>' "
+        "or 'async'")
+
+
+# ---------------------------------------------------------------------------
+# Server state
+# ---------------------------------------------------------------------------
+
+class ServerState(NamedTuple):
+    """The server's round state — one donated pytree per compiled round.
+
+    shards        per-shard dict of row-slices of every vocabulary-sharded
+                  statistic (the canonical store).
+    aux           unsharded statistics: aggregates re-derived on push
+                  (n_k, m_k, s_k) and replicated parameters (θ0).
+    cache         the versioned stale snapshot SSP clients pull (a dense
+                  shared pytree); ``None`` for policies that pull live
+                  state (BSP / async).
+    cache_version the round index at which ``cache`` was last refreshed.
+    client_lag    SSP's read-my-writes accumulator: per delta-stat, the
+                  (n_clients, …)-stacked deltas each client has applied
+                  locally since the cache version — a client's pull is
+                  ``cache + client_lag[c]``, so its own writes are never
+                  stale; reset on refresh.  ``None`` for BSP / async.
+    clocks        (n_clients,) int32 per-client round clocks; a client's
+                  clock advances when its push is applied (failed clients
+                  freeze, which is what SSP's bound guards against).
+    row_mass      per-shard accumulated L1 row mass of tracked pushes —
+                  the changed-row accounting behind the incremental alias
+                  rebuild; reset by :meth:`consume_changed_rows`.
+    tables/stale  the alias proposal resident next to the server (the
+                  pulled proposal cache): alias tables + the stale dense
+                  proposal matrix they encode.
+    """
+
+    shards: tuple[dict[str, Array], ...]
+    aux: dict[str, Array]
+    cache: Any
+    cache_version: Array
+    client_lag: Any
+    clocks: Array
+    row_mass: tuple[Array, ...]
+    tables: Any
+    stale: Any
+
+
+# ---------------------------------------------------------------------------
+# The server
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParameterServer:
+    """Vocabulary-sharded parameter server with a pluggable consistency
+    policy.  Pure-functional: hashable configuration here, all mutable
+    state in :class:`ServerState` (see module docstring)."""
+
+    family: Any                 # ModelFamily singleton (identity-hashed)
+    spec: ShardSpec
+    policy: Consistency = BSP()
+
+    # ------------------------------------------------------------ structure
+    def _is_sharded(self, name: str, x: Array) -> bool:
+        return x.ndim == 2 and x.shape[0] == self.spec.n_rows
+
+    def split(self, shared) -> tuple[tuple[dict[str, Array], ...],
+                                     dict[str, Array]]:
+        """Dense shared pytree → (per-shard slice dicts, aux dict)."""
+        stats = self.family.stats_dict(shared)
+        sharded = {n: v for n, v in stats.items() if self._is_sharded(n, v)}
+        aux = {n: v for n, v in stats.items() if n not in sharded}
+        shards = tuple(
+            {n: sharded[n][lo:hi] for n in sharded}
+            for lo, hi in (self.spec.rows_of(s)
+                           for s in range(self.spec.n_shards)))
+        return shards, aux
+
+    def assemble(self, state: ServerState):
+        """Canonical dense view: concatenate the shard slices (exact — no
+        arithmetic) and merge the aux stats back into the family pytree."""
+        stats = dict(state.aux)
+        for n in state.shards[0]:
+            stats[n] = jnp.concatenate([sh[n] for sh in state.shards], 0) \
+                if len(state.shards) > 1 else state.shards[0][n]
+        return self.family.shared_from_dict(stats)
+
+    def load_dense(self, state: ServerState, shared) -> ServerState:
+        """Store a dense shared pytree back into the sharded canonical
+        store (pure re-slicing — bit-exact round trip with assemble)."""
+        shards, aux = self.split(shared)
+        return state._replace(shards=shards, aux=aux)
+
+    # ------------------------------------------------------------ lifecycle
+    def init_state(self, shared, n_clients: int) -> ServerState:
+        shards, aux = self.split(shared)
+        cache, client_lag = None, None
+        if self.policy.caches:
+            # Materialized copy, not an alias: the cache and the canonical
+            # shards live in one donated ServerState, and donating the
+            # same buffer twice is a runtime error on donating backends.
+            cache = jax.tree.map(jnp.copy, shared)
+            stats = self.family.stats_dict(shared)
+            client_lag = {
+                n: jnp.zeros((n_clients,) + stats[n].shape, stats[n].dtype)
+                for n in self.family.delta_names}
+        return ServerState(
+            shards=shards, aux=aux, cache=cache, client_lag=client_lag,
+            cache_version=jnp.zeros((), jnp.int32),
+            clocks=jnp.zeros((n_clients,), jnp.int32),
+            row_mass=tuple(jnp.zeros((hi - lo,), jnp.float32)
+                           for lo, hi in (self.spec.rows_of(s)
+                                          for s in range(self.spec.n_shards))),
+            tables=None, stale=None)
+
+    # ------------------------------------------------------------- protocol
+    def snapshot(self, state: ServerState):
+        """The canonical current statistics (admin/eval view — always
+        fresh, regardless of the pull policy)."""
+        return self.assemble(state)
+
+    def pull(self, state: ServerState, keys: Sequence[tuple[str, int]]
+             | None = None):
+        """Client pull.
+
+        ``keys=None`` → the policy view: SSP clients get the versioned
+        stale cache, BSP/async clients the live canonical state.
+        ``keys=[(stat, shard), ...]`` → the addressed shard-local row
+        slices from the canonical store (what crosses the wire when a
+        client only holds part of the vocabulary)."""
+        if keys is None:
+            return state.cache if self.policy.caches else self.assemble(state)
+        return [state.shards[shard][name] for name, shard in keys]
+
+    def reset_lag(self, client_lag, do_refresh):
+        """Zero the read-my-writes accumulators when the pull refreshes
+        (the fresh cache already contains every applied push)."""
+        if client_lag is None:
+            return None
+        return {n: jnp.where(do_refresh, jnp.zeros_like(v), v)
+                for n, v in client_lag.items()}
+
+    def client_view(self, snapshot, client_lag, c: int):
+        """Client ``c``'s pull under read-my-writes SSP: the versioned
+        cache plus the client's own deltas since the cache version (its
+        writes are never stale — only other clients' are).  Identity for
+        policies without a cache."""
+        if client_lag is None:
+            return snapshot
+        return self.family.apply_delta(
+            snapshot, {n: v[c] for n, v in client_lag.items()})
+
+    def pull_round(self, state: ServerState, round_idx, do_refresh):
+        """The compiled round's pull: returns (snapshot, cache', version').
+
+        BSP/async: snapshot is the live canonical state; no cache.
+        SSP: the versioned cache, refreshed to the canonical state when
+        ``do_refresh`` (the traced staleness-bound predicate — the
+        simulation's realization of the blocking pull) is set.
+        """
+        canonical = self.assemble(state)
+        version = jnp.asarray(round_idx, jnp.int32)
+        if not self.policy.caches:
+            return canonical, None, version
+        cache = jax.tree.map(
+            lambda fresh, old: jnp.where(do_refresh, fresh, old),
+            canonical, state.cache)
+        version = jnp.where(do_refresh, version, state.cache_version)
+        return cache, cache, version
+
+    def push(self, state: ServerState, deltas: dict[str, Array],
+             clock_inc: Array | None = None, *, track_mass: bool = False
+             ) -> ServerState:
+        """Apply summed client deltas to the canonical statistics.
+
+        Runs the family's ``apply_delta`` on the assembled view (same
+        operation order as the historical dense push — aggregates like
+        n_k re-derived there), re-slices into the shard store, advances
+        the pushing clients' clocks, and — when ``track_mass`` — folds
+        the per-row L1 delta mass into the per-shard changed-row
+        accounting (consumed by :meth:`consume_changed_rows`)."""
+        dense = self.family.apply_delta(self.assemble(state), deltas)
+        state = self.load_dense(state, dense)
+        if track_mass:
+            state = self.accumulate_mass(state, deltas)
+        if clock_inc is not None:
+            state = state._replace(
+                clocks=state.clocks + clock_inc.astype(jnp.int32))
+        return state
+
+    def accumulate_mass(self, state: ServerState, deltas: dict[str, Array]
+                        ) -> ServerState:
+        """Fold a push's per-row L1 mass into the per-shard accounting.
+        Watches the family's ``alias_delta_stats`` (the statistics whose
+        drift stales the alias proposal rows)."""
+        mass = functools.reduce(
+            jnp.add, (jnp.abs(deltas[n]).sum(-1)
+                      for n in self.family.alias_delta_stats))
+        return state._replace(row_mass=tuple(
+            m + mass[lo:hi] for m, (lo, hi) in
+            zip(state.row_mass, (self.spec.rows_of(s)
+                                 for s in range(self.spec.n_shards)))))
+
+    def project(self, state: ServerState, do_project=True) -> ServerState:
+        """Constraint projection (Algorithm 1) on the shared polytope,
+        under ``lax.cond`` so the cadence flag stays traced."""
+        dense = self.assemble(state)
+        dense = jax.lax.cond(do_project, self.family.project,
+                             lambda s: s, dense)
+        return self.load_dense(state, dense)
+
+    # ----------------------------------------------- changed-row accounting
+    def shard_row_mass(self, state: ServerState) -> tuple[Array, ...]:
+        """Per-shard accumulated row mass (observability / tests)."""
+        return state.row_mass
+
+    def consume_changed_rows(self, state: ServerState, k_rows: int,
+                             threshold: float
+                             ) -> tuple[Array, Array, ServerState]:
+        """Select the rows an incremental alias rebuild should touch and
+        reset the accounting: the global top-``k_rows`` by accumulated L1
+        mass over the concatenated shard accumulators (``ps.changed_rows``
+        — the communication filter's magnitude-priority machinery), with
+        the validity mask dropping below-threshold rows.  Returned row ids
+        are global (the row→shard map recovers the owning shard)."""
+        mass = jnp.concatenate(state.row_mass) if len(state.row_mass) > 1 \
+            else state.row_mass[0]
+        rows, valid = ps.changed_rows(mass, k_rows, threshold)
+        state = state._replace(row_mass=tuple(
+            jnp.zeros_like(m) for m in state.row_mass))
+        return rows, valid, state
+
+    # ------------------------------------------------------- alias proposal
+    def refresh_proposal(self, model_cfg, state: ServerState) -> ServerState:
+        """Full alias rebuild against the canonical statistics — the
+        producer half of §5.1, run on the pull-refresh schedule."""
+        tables, stale = self.family.build_alias(model_cfg,
+                                                self.assemble(state))
+        return state._replace(tables=tables, stale=stale)
+
+
+def make_server(family, vocab_size: int, *, n_shards: int = 1,
+                consistency: str | Consistency = "bsp") -> ParameterServer:
+    """Convenience constructor used by the Trainer and the mesh round."""
+    return ParameterServer(family=family,
+                           spec=ShardSpec(vocab_size, n_shards),
+                           policy=make_consistency(consistency))

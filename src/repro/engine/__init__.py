@@ -1,6 +1,22 @@
 """Training engine: the unified multi-client driver over the ModelFamily
-protocol (``repro.engine.trainer``)."""
+protocol (``repro.engine.trainer``), backed by the explicit parameter
+server (``repro.core.server``)."""
 
+from repro.core.server import (Async, BSP, Consistency, ParameterServer,
+                               ServerState, ShardSpec, SSP,
+                               make_consistency)
 from repro.engine.trainer import RunResult, Trainer, TrainerConfig
 
-__all__ = ["RunResult", "Trainer", "TrainerConfig"]
+__all__ = [
+    "Async",
+    "BSP",
+    "Consistency",
+    "ParameterServer",
+    "RunResult",
+    "SSP",
+    "ServerState",
+    "ShardSpec",
+    "Trainer",
+    "TrainerConfig",
+    "make_consistency",
+]

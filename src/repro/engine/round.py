@@ -19,30 +19,54 @@ three ways:
 
 so the three drivers cannot drift apart.
 
+Since the ParameterServer redesign the round no longer threads raw
+``shared``/``stale_dense`` pytrees: it takes a static
+:class:`repro.core.server.ParameterServer` (family + shard spec +
+consistency policy) and its traced, donated
+:class:`repro.core.server.ServerState` — the vocabulary-sharded canonical
+statistics, the versioned SSP pull cache, per-client clocks, the
+per-shard changed-row accounting, and the resident alias proposal
+(tables + stale dense matrix).  The pull/push semantics are the policy's:
+
+* **BSP** — pull returns the canonical state as of the end of the
+  previous round; pushes are summed at the round barrier.  Bit-exact
+  with the PR-3 compiled round (assembly of the sharded store is pure
+  concatenation; all arithmetic keeps its historical operation order).
+* **SSP(s)** — pull returns the versioned stale cache; the traced
+  ``do_refresh`` flag (the staleness-bound predicate, computed by the
+  policy on the lock-step schedule) refreshes it from the canonical
+  state, which in the simulation realizes SSP's blocking pull.
+* **async** — each client's filtered push applies to the canonical view
+  immediately, so later clients in the same round sample against it
+  (Gauss-Seidel ordering); pulls never block.
+
 Compiled-round invariants:
 
-* **One trace per (family, layout).**  Everything that varies between
-  rounds — the round index, the failure-injection ``alive`` mask, the
-  projection cadence — enters as *traced* scalars; RNG keys are derived
-  inside the trace with ``fold_in`` on the traced round index, reproducing
-  the reference loop's keying bit-for-bit.  ``trace_count`` exposes a
-  trace-time counter per (family, layout) as the regression guard.
-* **Donated buffers.**  The Trainer donates local states, shared statistics,
-  residuals (and, in incremental-alias mode, the resident tables + stale
-  snapshot), so XLA updates the round state in place instead of allocating
-  a second copy of the model every round.  Donation is skipped on backends
-  that ignore it (CPU) to avoid spurious warnings.
+* **One trace per (family, layout, policy).**  Everything that varies
+  between rounds — the round index, the failure-injection ``alive`` mask,
+  the projection cadence, the SSP refresh flag — enters as *traced*
+  scalars; RNG keys are derived inside the trace with ``fold_in`` on the
+  traced round index, reproducing the reference loop's keying
+  bit-for-bit.  ``trace_count`` exposes a trace-time counter per
+  (family, layout, policy) as the regression guard.
+* **Donated buffers.**  The Trainer donates local states, the server
+  state (canonical shards, cache, alias proposal) and residuals, so XLA
+  updates the round state in place instead of allocating a second copy
+  of the model every round.  Donation is skipped on backends that ignore
+  it (CPU) to avoid spurious warnings.
 * **Async pipelining.**  The round function never blocks; the Trainer only
   synchronizes at evaluation points, so consecutive rounds overlap with
   host-side Python (the dispatch of round r+1 rides on round r's compute).
 
 Incremental alias maintenance (§3.3 l/n staleness, §5.1 producer/consumer):
-after the push, the rows of the proposal term that actually drifted are
-identified from the summed delta's per-row L1 mass (``ps.changed_rows`` —
-the same magnitude-priority machinery as the top-k communication filter),
-and only those rows are rebuilt via the family's gather → build → scatter
-path (``ModelFamily.rebuild_alias_rows``).  Column aggregates (n_k, m_k,
-θ0) still drift for untouched rows; that staleness is exactly what the MH
+after the push, the proposal rows that actually drifted are identified
+from the server's per-shard changed-row accounting
+(``ParameterServer.consume_changed_rows`` — the same magnitude-priority
+machinery as the top-k communication filter, now accumulated across
+pushes *since the last rebuild*), and only those rows are rebuilt via the
+family's gather → build → scatter path (``ModelFamily.rebuild_alias_rows``)
+into the server-resident tables.  Column aggregates (n_k, m_k, θ0) still
+drift for untouched rows; that staleness is exactly what the MH
 acceptance step corrects for, and a periodic full rebuild
 (``alias_full_rebuild_every``) bounds it.
 """
@@ -54,43 +78,52 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import ps
 # Re-exported here for drivers/benchmarks that address the round body
 # through the engine namespace.
 from repro.core.distributed import filter_push, tau_sweeps  # noqa: F401
 
-# Trace-time counters, keyed (family_name, layout): the compile-stability
-# regression guard.  Bumped from inside the round body, which only executes
-# at trace time — a steady-state Trainer must not grow these.
-_TRACE_COUNTS: dict[tuple[str, str], int] = {}
+# Trace-time counters, keyed (family_name, layout, policy): the
+# compile-stability regression guard.  Bumped from inside the round body,
+# which only executes at trace time — a steady-state Trainer must not grow
+# these for its (family, layout, policy) triple.
+_TRACE_COUNTS: dict[tuple[str, str, str], int] = {}
 
 
-def trace_count(family_name: str, layout: str) -> int:
+def trace_count(family_name: str, layout: str, policy: str = "bsp") -> int:
     """How many times the compiled round has been traced for this
-    (family, layout) — across all Trainer instances (the jit cache is
-    shared, so a second Trainer with the same signature costs no trace)."""
-    return _TRACE_COUNTS.get((family_name, layout), 0)
+    (family, layout, policy) — across all Trainer instances (the jit cache
+    is shared, so a second Trainer with the same signature costs no
+    trace)."""
+    return _TRACE_COUNTS.get((family_name, layout, policy), 0)
 
 
 # ---------------------------------------------------------------------------
 # The Trainer's whole-round compiled program
 # ---------------------------------------------------------------------------
 
-def _round_impl(fam, model_cfg, tcfg, incremental, locals_, shared,
-                residuals, tables, stale, shard_tokens, shard_masks,
-                layouts, key, r, alive, do_project):
+def _round_impl(server, model_cfg, tcfg, incremental, state, locals_,
+                residuals, shard_tokens, shard_masks, layouts, key, r,
+                alive, do_project, do_refresh):
     """One sync round as a single traced program.
 
-    Static: fam / model_cfg / tcfg / incremental (hashable configs — the
-    jit cache is shared across Trainer instances with equal signatures).
-    Traced: everything else, including the round index ``r``, the failure
-    mask ``alive`` and the projection flag ``do_project``, so per-round
-    cadence never retraces.
+    Static: server / model_cfg / tcfg / incremental (hashable configs —
+    the jit cache is shared across Trainer instances with equal
+    signatures).  Traced: everything else, including the server state,
+    the round index ``r``, the failure mask ``alive``, the projection
+    flag ``do_project`` and the SSP refresh flag ``do_refresh``, so
+    per-round cadence never retraces.
     """
-    key_ = (fam.name, tcfg.layout)
+    fam, pol = server.family, server.policy
+    key_ = (fam.name, tcfg.layout, pol.key)
     _TRACE_COUNTS[key_] = _TRACE_COUNTS.get(key_, 0) + 1
 
-    snapshot = shared                                       # pull (frozen)
+    # pull — policy view: BSP the canonical state, SSP the versioned stale
+    # cache (refreshed under the traced staleness-bound flag; each client
+    # then layers its own read-my-writes lag on top), async the live view
+    # that immediate pushes below keep updating.
+    snapshot, cache, version = server.pull_round(state, r, do_refresh)
+    lag = server.reset_lag(state.client_lag, do_refresh)
+    new_lag_rows = []
     zero = {n: jnp.zeros_like(fam.stats_dict(snapshot)[n])
             for n in fam.delta_names}
     total = zero
@@ -105,7 +138,8 @@ def _round_impl(fam, model_cfg, tcfg, incremental, locals_, shared,
             lambda s, c=c: jax.random.fold_in(key, r * 131 + c * 17 + s)
         )(jnp.arange(tcfg.tau))
         loc, acc = tau_sweeps(
-            model_cfg, fam, locals_[c], snapshot, tables, stale,
+            model_cfg, fam, locals_[c],
+            server.client_view(snapshot, lag, c), state.tables, state.stale,
             shard_tokens[c], shard_masks[c], sweep_keys, method=tcfg.method,
             layout=tcfg.layout,
             sorted_layouts=layouts[c] if layouts is not None else None)
@@ -114,6 +148,12 @@ def _round_impl(fam, model_cfg, tcfg, incremental, locals_, shared,
         # Failure injection (§5.4): a dead client's push is zeroed and its
         # state/residual frozen — identical to skipping it entirely.
         a = alive[c]
+        if lag is not None:
+            # Read-my-writes: the pre-filter delta the client applied
+            # locally rides in its lag row until the next refresh.
+            new_lag_rows.append({
+                n: jnp.where(a, lag[n][c] + acc[n], lag[n][c])
+                for n in lag})
         new_locals.append(jax.tree.map(
             lambda new, old: jnp.where(a, new, old), loc, locals_[c]))
         new_residuals.append(
@@ -121,46 +161,59 @@ def _round_impl(fam, model_cfg, tcfg, incremental, locals_, shared,
                 lambda new, old: jnp.where(a, new, old), res, residuals[c]))
         af = a.astype(jnp.float32)
         total = {n: total[n] + sent[n] * af for n in total}
+        if pol.immediate:
+            # async: the push lands now — the next client pulls it.
+            snapshot = fam.apply_delta(
+                snapshot, {n: sent[n] * af for n in sent})
 
-    shared = fam.apply_delta(snapshot, total)               # push
-    shared = jax.lax.cond(do_project, fam.project,          # project
-                          lambda s: s, shared)
-    new_locals, shared = fam.post_round(                    # auxiliaries
-        model_cfg, new_locals, shared, jax.random.fold_in(key, 9000 + r))
+    if pol.immediate:                                       # push (applied)
+        state = server.load_dense(state, snapshot)
+        if incremental:
+            state = server.accumulate_mass(state, total)
+        state = state._replace(clocks=state.clocks + alive.astype(jnp.int32))
+    else:                                                   # push (barrier)
+        state = server.push(state, total, alive, track_mass=incremental)
+    state = server.project(state, do_project)               # project
+    dense = server.assemble(state)
+    new_locals, dense = fam.post_round(                     # auxiliaries
+        model_cfg, new_locals, dense, jax.random.fold_in(key, 9000 + r))
+    state = server.load_dense(state, dense)
+    if lag is not None:
+        lag = {n: jnp.stack([row[n] for row in new_lag_rows])
+               for n in lag}
+    state = state._replace(cache=cache, cache_version=version,
+                           client_lag=lag)
 
-    if not incremental:
-        return tuple(new_locals), shared, tuple(new_residuals)
-
-    # Incremental alias producer: rebuild only the token-type rows whose
-    # pushed delta mass drifted past the threshold, against the end-of-round
-    # statistics (freshest possible proposal for round r+1).
-    mass = functools.reduce(
-        jnp.add, (jnp.abs(total[n]).sum(-1) for n in fam.alias_delta_stats))
-    rows, valid = ps.changed_rows(mass, tcfg.alias_rebuild_rows,
-                                  tcfg.alias_rebuild_threshold)
-    tables, stale = fam.rebuild_alias_rows(model_cfg, shared, tables, stale,
-                                           rows, valid)
-    return tuple(new_locals), shared, tuple(new_residuals), tables, stale
+    if incremental:
+        # Incremental alias producer: rebuild only the token-type rows
+        # whose accumulated push mass drifted past the threshold, against
+        # the end-of-round statistics (freshest possible proposal).
+        rows, valid, state = server.consume_changed_rows(
+            state, tcfg.alias_rebuild_rows, tcfg.alias_rebuild_threshold)
+        tables, stale = fam.rebuild_alias_rows(
+            model_cfg, server.assemble(state), state.tables, state.stale,
+            rows, valid)
+        state = state._replace(tables=tables, stale=stale)
+    return tuple(new_locals), state, tuple(new_residuals)
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_round(incremental: bool, donate: bool):
-    """jit wrapper cache: donation depends on whether the alias buffers are
-    round outputs (incremental mode) and on backend support."""
-    donate_argnums = ()
-    if donate:
-        # locals_, shared, residuals — always owned by the round.
-        donate_argnums = (4, 5, 6)
-        if incremental:
-            donate_argnums += (7, 8)     # tables, stale rebuilt in-round
+def _jitted_round(donate: bool):
+    """jit wrapper cache: donation covers the round-owned state (server
+    state incl. alias proposal, locals, residuals) where the backend
+    honors it."""
+    donate_argnums = (4, 5, 6) if donate else ()
     return jax.jit(_round_impl, static_argnums=(0, 1, 2, 3),
                    donate_argnums=donate_argnums)
 
 
-def trainer_round(fam, model_cfg, tcfg, incremental, *args):
+def trainer_round(server, model_cfg, tcfg, incremental, *args):
     """Dispatch one compiled sync round (see :func:`_round_impl` for the
-    argument contract).  Buffers are donated only where the backend honors
-    donation — CPU ignores it and would warn on every compile."""
+    argument contract).  ``server`` is the static
+    :class:`~repro.core.server.ParameterServer`; the first traced argument
+    is its donated :class:`~repro.core.server.ServerState`.  Buffers are
+    donated only where the backend honors donation — CPU ignores it and
+    would warn on every compile."""
     donate = jax.default_backend() != "cpu"
-    fn = _jitted_round(bool(incremental), donate)
-    return fn(fam, model_cfg, tcfg, bool(incremental), *args)
+    fn = _jitted_round(donate)
+    return fn(server, model_cfg, tcfg, bool(incremental), *args)

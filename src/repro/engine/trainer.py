@@ -7,39 +7,59 @@ Replaces the hand-rolled per-model driver loops that used to live in
 ``repro.core.family`` registry, so LDA / PDP / HDP — and any future family —
 run the identical lifecycle:
 
-    pull    — snapshot the shared statistics (frozen for the round),
+    pull    — ask the parameter server for a snapshot under the configured
+              consistency policy (BSP: fresh every round; SSP: a versioned
+              stale cache, refreshed when the staleness bound is hit;
+              async: the live, immediately-updated statistics),
     sample  — ``tau`` local Gibbs sweeps per client against the snapshot
               (scan oracle layout or the token-sorted tile-skipping fast
               path, selected by ``TrainerConfig.layout``), each client
               applying its own deltas locally (bounded staleness, §5.2),
     filter  — communication filter + error-feedback residuals on the
               accumulated delta (§5.3),
-    push    — sum of filtered deltas applied to the canonical statistics,
+    push    — filtered deltas applied to the server's vocabulary-sharded
+              canonical statistics (at the round barrier, or immediately
+              per client under async),
     project — constraint projection on the shared polytope (§5.5) plus the
               family's client-local rules (e.g. HDP's 1 ≤ m_dk ≤ n_dk),
     (post)  — family auxiliary resampling (HDP CRT tables + θ0).
 
+The shared statistics live behind an explicit
+:class:`repro.core.server.ParameterServer` (DESIGN.md §9): the Trainer
+holds the server's :class:`~repro.core.server.ServerState` — the
+vocabulary-sharded canonical store, the SSP versioned pull cache,
+per-client clocks, the per-shard changed-row accounting, and the resident
+alias proposal — and ``TrainerConfig.consistency`` /
+``TrainerConfig.n_server_shards`` select the policy and the sharding.
+``Trainer.shared`` remains the assembled dense view for evaluation and
+diagnostics.
+
 Since PR 3 the whole round is **one compiled program**
 (``repro.engine.round``, DESIGN.md §8): clients are unrolled inside the
-trace, the tau loop is a ``lax.scan``, round state (locals / shared /
-residuals / alias buffers) is donated so XLA updates it in place, and
-``step()`` never blocks — rounds pipeline asynchronously and the Trainer
-synchronizes only at evaluation points.  ``TrainerConfig.compiled=False``
-keeps the PR-2 Python reference loop (one dispatch per op, blocking per
-round) for parity tests and as the benchmark baseline.
+trace, the tau loop is a ``lax.scan``, round state (locals / server state /
+residuals) is donated so XLA updates it in place, and ``step()`` never
+blocks — rounds pipeline asynchronously and the Trainer synchronizes only
+at evaluation points.  ``TrainerConfig.compiled=False`` keeps the PR-2
+Python reference loop (one dispatch per op, blocking per round) for parity
+tests and as the benchmark baseline; it supports every consistency policy
+through the same server methods, so it stays the parity oracle for all of
+them.
 
 The Trainer also owns the alias-table maintenance (the l/n staleness rule
 of §3.3 — the producer half of the paper's §5.1 producer/consumer design),
-in two modes:
+in three schedules:
 
-* cadence (default): tables fully rebuilt every ``alias_refresh_every``
-  rounds and reused in between;
+* cadence (BSP/async default): tables fully rebuilt every
+  ``alias_refresh_every`` rounds and reused in between;
+* pull-coupled (SSP): the proposal is part of the pulled cache, so tables
+  rebuild exactly when the versioned snapshot refreshes — this skipped
+  work is the measured SSP throughput win (benchmarks/bench_consistency);
 * incremental (``alias_rebuild_threshold`` set): every compiled round ends
-  by rebuilding *only* the token-type rows whose pushed delta mass exceeds
-  the threshold (top-``alias_rebuild_rows`` by L1 row mass — the same
-  machinery as the top-k communication filter), with a full rebuild every
-  ``alias_full_rebuild_every`` rounds to bound the drift of the column
-  aggregates that partial rebuilds leave stale.
+  by rebuilding *only* the token-type rows whose accumulated push mass
+  exceeds the threshold (the server's per-shard changed-row accounting,
+  consumed by ``ParameterServer.consume_changed_rows``), with a full
+  rebuild every ``alias_full_rebuild_every`` rounds to bound the drift of
+  the column aggregates that partial rebuilds leave stale.
 
 The loop is semantically the single-device simulation of
 ``core.distributed.make_round_fn`` (clients iterated instead of
@@ -63,6 +83,7 @@ import numpy as np
 
 from repro.core import family as family_mod
 from repro.core import ps
+from repro.core import server as server_mod
 from repro.data.synthetic import shard_corpus
 from repro.engine import round as round_mod
 
@@ -77,16 +98,27 @@ class TrainerConfig:
     method: str = "mhw"           # "mhw" | "exact" (scan layout only)
     n_clients: int = 1
     tau: int = 1                  # local sweeps per sync round (staleness)
+    # --- parameter server (DESIGN.md §9) --------------------------------
+    # Consistency policy: "bsp" (bulk-synchronous, bit-exact with the
+    # pre-server round) | "ssp:<bound>" (stale-synchronous: clients run up
+    # to <bound> rounds ahead of a versioned cache) | "async" (immediate
+    # pushes, non-blocking pulls).
+    consistency: str = "bsp"
+    # Vocabulary shards of the server's canonical statistics (row-range
+    # sharding with a row→shard map; 1 = unsharded).
+    n_server_shards: int = 1
+    # --------------------------------------------------------------------
     # One compiled program per round (donated buffers, async dispatch);
     # False = the PR-2 Python reference loop (blocking, one jit per op).
     compiled: bool = True
     # --- alias maintenance (§3.3 l/n rule, §5.1 producer) ---------------
     # Rounds between full alias-table rebuilds; None → the model config's
-    # value.  Cadence mode only (ignored when incremental mode is on).
+    # value.  Cadence mode only (ignored when incremental mode is on, and
+    # under SSP, whose proposal rebuilds on the pull-refresh schedule).
     alias_refresh_every: int | None = None
     # Incremental mode (compiled rounds only): when set, each round ends by
-    # rebuilding the ≤ alias_rebuild_rows token-type rows whose pushed
-    # delta L1 mass exceeds this threshold (0.0 = any changed row), inside
+    # rebuilding the ≤ alias_rebuild_rows token-type rows whose accumulated
+    # push L1 mass exceeds this threshold (0.0 = any changed row), inside
     # the compiled round.  A full rebuild still runs every
     # alias_full_rebuild_every rounds to bound aggregate drift.
     alias_rebuild_threshold: float | None = None
@@ -111,8 +143,16 @@ class RunResult:
 
     @property
     def tokens_per_s(self) -> float:
+        """Training throughput over the recorded eval segments.
+
+        Returns ``float("nan")`` before any eval segment has been timed
+        (``iter_times`` empty — e.g. a fresh ``RunResult`` or a run that
+        has not reached its first evaluation point): a benchmark script
+        averaging or logging throughput must not silently record 0.0 as
+        if it were a measurement — NaN propagates loudly instead.
+        """
         if not self.iter_times:
-            return 0.0
+            return float("nan")
         t = float(np.mean(self.iter_times))
         return self.tokens / max(t, 1e-9)
 
@@ -122,15 +162,18 @@ class Trainer:
 
     >>> cfg = lda.LDAConfig(n_topics=8, vocab_size=400)
     >>> t = Trainer(cfg, tokens, mask,
-    ...             config=TrainerConfig(n_clients=4, layout="sorted"))
+    ...             config=TrainerConfig(n_clients=4, layout="sorted",
+    ...                                  consistency="ssp:2"))
     >>> result = t.run(n_rounds=20, eval_every=5)
 
     The family is resolved from the model config's type via the registry
     (``family.family_of``).  State lives on the instance: per-client local
-    states, the canonical shared statistics, prebuilt sorted layouts (the
+    states, the parameter server's :class:`~repro.core.server.ServerState`
+    (canonical vocabulary-sharded statistics, SSP pull cache, clocks,
+    changed-row accounting, alias proposal), prebuilt sorted layouts (the
     token stream never changes between sweeps, so the per-shard sorts are
-    hoisted out of the loop), alias tables + their staleness, and the
-    error-feedback residuals of the communication filter.
+    hoisted out of the loop), and the error-feedback residuals of the
+    communication filter.
     """
 
     def __init__(self, model_cfg, tokens: Array, mask: Array, *,
@@ -166,7 +209,19 @@ class Trainer:
                                              jax.random.fold_in(self.key, c))
             self.locals_.append(loc)
             shared = sh if shared is None else self._merge_shared(shared, sh)
-        self.shared = shared
+
+        # The parameter server: vocabulary-sharded canonical statistics
+        # under the configured consistency policy (DESIGN.md §9).
+        self.server = server_mod.make_server(
+            self.family, model_cfg.vocab_size,
+            n_shards=config.n_server_shards,
+            consistency=config.consistency)
+        self.pstate = self.server.init_state(shared, config.n_clients)
+        # Host mirror of the SSP cache version (the lock-step pull
+        # schedule is deterministic, so the host never needs to sync to
+        # decide a refresh) and a rebuild counter for tests/benchmarks.
+        self._host_version: int | None = None
+        self.alias_builds = 0
 
         # Hoisted sorted layouts: one tuple of per-chunk layouts per shard.
         self.layouts = None
@@ -179,8 +234,6 @@ class Trainer:
             config.alias_refresh_every
             if config.alias_refresh_every is not None
             else getattr(model_cfg, "alias_refresh_every", 1))
-        self.tables = None
-        self.stale = None
         # Error-feedback residuals (ps.residual_update): what a
         # communication filter withholds is carried to the next round,
         # never dropped — count mass must be conserved or the statistics
@@ -198,6 +251,29 @@ class Trainer:
 
     # ------------------------------------------------------------------
     @property
+    def shared(self):
+        """The assembled dense shared statistics (the server's canonical
+        snapshot — always fresh, regardless of the pull policy)."""
+        return self.server.snapshot(self.pstate)
+
+    @shared.setter
+    def shared(self, value):
+        self.pstate = self.server.load_dense(self.pstate, value)
+
+    @property
+    def tables(self):
+        return self.pstate.tables
+
+    @property
+    def stale(self):
+        return self.pstate.stale
+
+    @property
+    def clocks(self) -> np.ndarray:
+        """Per-client round clocks as tracked by the server."""
+        return np.asarray(self.pstate.clocks)
+
+    @property
     def _incremental(self) -> bool:
         return self.tcfg.alias_rebuild_threshold is not None
 
@@ -207,7 +283,8 @@ class Trainer:
         compile-stability guard (steady-state rounds must not grow it).
         The jit cache is shared, so another Trainer with an equal signature
         reuses the trace."""
-        return round_mod.trace_count(self.family.name, self.tcfg.layout)
+        return round_mod.trace_count(self.family.name, self.tcfg.layout,
+                                     self.server.policy.key)
 
     def _merge_shared(self, acc, sh):
         fam = self.family
@@ -217,32 +294,54 @@ class Trainer:
                   for n in a}
         return fam.shared_from_dict(merged)
 
-    def _refresh_alias(self) -> None:
+    def _pull_refresh(self, r: int) -> bool:
+        """The policy's pull schedule for round ``r`` (host mirror of the
+        traced predicate; lock-step clients make it deterministic).  Under
+        SSP a True here is the blocking pull: the bound r − version would
+        be exceeded, so the client waits for a fresh snapshot."""
+        pol = self.server.policy
+        if not pol.caches:
+            return True
+        need = pol.needs_refresh(r, self._host_version)
+        if need:
+            self._host_version = r
+        return need
+
+    def _refresh_alias(self, do_refresh: bool) -> None:
+        srv, r = self.server, self.round_idx
         if self._incremental:
             # Incremental mode: partial rebuilds happen inside the compiled
             # round; the periodic full rebuild re-anchors the rows whose
             # *aggregate* factors (n_k, m_k, θ0) drifted without row pushes.
-            if self.tables is None or (
+            if self.pstate.tables is not None and not (
                     self.tcfg.alias_full_rebuild_every
-                    and self.round_idx
-                    % self.tcfg.alias_full_rebuild_every == 0):
-                self.tables, self.stale = self.family.build_alias(
-                    self.cfg, self.shared)
-        elif self.tables is None or \
-                self.round_idx % self.alias_refresh_every == 0:
-            self.tables, self.stale = self.family.build_alias(self.cfg,
-                                                              self.shared)
+                    and r % self.tcfg.alias_full_rebuild_every == 0):
+                return
+        elif srv.policy.caches:
+            # SSP: the proposal is part of the pulled versioned cache —
+            # rebuilt exactly when the pull refreshes.  The skipped
+            # rebuilds on stale rounds are the measured throughput win.
+            if self.pstate.tables is not None and not do_refresh:
+                return
+        elif self.pstate.tables is not None and \
+                r % self.alias_refresh_every != 0:
+            return
+        self.pstate = srv.refresh_proposal(self.cfg, self.pstate)
+        self.alias_builds += 1
 
     def _client_failed(self, c: int) -> bool:
         drop = self.tcfg.drop_client
         return (drop is not None and c == drop[0]
                 and drop[1] <= self.round_idx < drop[2])
 
+    def _alive(self) -> np.ndarray:
+        return np.array([not self._client_failed(c)
+                         for c in range(self.tcfg.n_clients)])
+
     def _sync(self) -> None:
         """Block until every in-flight round has materialized (eval
         points; compiled rounds otherwise pipeline asynchronously)."""
-        jax.block_until_ready(
-            jax.tree.leaves(self.family.stats_dict(self.shared))[0])
+        jax.block_until_ready(jax.tree.leaves(self.pstate.shards[0])[0])
 
     # ------------------------------------------------------------------
     def step(self) -> None:
@@ -256,24 +355,19 @@ class Trainer:
             return
         tcfg = self.tcfg
         r = self.round_idx
-        self._refresh_alias()
+        do_refresh = self._pull_refresh(r)
+        self._refresh_alias(do_refresh)
 
-        alive = np.array([not self._client_failed(c)
-                          for c in range(tcfg.n_clients)])
+        alive = self._alive()
         do_project = bool(tcfg.project_every
                           and r % tcfg.project_every == 0)
-        out = round_mod.trainer_round(
-            self.family, self.cfg, tcfg, self._incremental,
-            tuple(self.locals_), self.shared, tuple(self.residuals),
-            self.tables, self.stale,
+        locals2, self.pstate, residuals2 = round_mod.trainer_round(
+            self.server, self.cfg, tcfg, self._incremental,
+            self.pstate, tuple(self.locals_), tuple(self.residuals),
             tuple(t for t, _ in self.shards),
             tuple(m for _, m in self.shards),
             self.layouts, self.key, np.int32(r), alive,
-            np.bool_(do_project))
-        if self._incremental:
-            locals2, self.shared, residuals2, self.tables, self.stale = out
-        else:
-            locals2, self.shared, residuals2 = out
+            np.bool_(do_project), np.bool_(do_refresh))
         self.locals_ = list(locals2)
         self.residuals = list(residuals2)
         self.round_idx += 1
@@ -281,27 +375,33 @@ class Trainer:
     def _step_python(self) -> None:
         """The PR-2 reference loop: one jitted dispatch per sweep/op and a
         device sync every round.  Semantically identical to the compiled
-        round (same RNG keying — integer count statistics match
-        bit-exactly); kept as the parity oracle and the dispatch-overhead
-        baseline measured in benchmarks/bench_throughput.py."""
+        round (same RNG keying and server methods — integer count
+        statistics match bit-exactly for every consistency policy); kept
+        as the parity oracle and the dispatch-overhead baseline measured
+        in benchmarks/bench_throughput.py."""
         fam, cfg, tcfg = self.family, self.cfg, self.tcfg
+        srv, pol = self.server, self.server.policy
         r = self.round_idx
-        self._refresh_alias()
+        do_refresh = self._pull_refresh(r)
+        self._refresh_alias(do_refresh)
+        state = self.pstate
+        alive = self._alive()
 
-        snapshot = self.shared                       # pull (frozen)
+        snapshot, cache, version = srv.pull_round(state, r, do_refresh)
+        lag = srv.reset_lag(state.client_lag, do_refresh)
         total_delta = None
         for c in range(tcfg.n_clients):
             if self._client_failed(c):
                 continue   # failed client: contributes nothing this round
             t, m = self.shards[c]
             lays = self.layouts[c] if self.layouts is not None else None
-            local_shared = snapshot
+            local_shared = srv.client_view(snapshot, lag, c)
             acc = None
             for s in range(tcfg.tau):                # sample (τ sweeps)
                 k = jax.random.fold_in(self.key, r * 131 + c * 17 + s)
                 self.locals_[c], d = fam.sweep(
-                    cfg, self.locals_[c], local_shared, self.tables,
-                    self.stale, t, m, k, method=tcfg.method,
+                    cfg, self.locals_[c], local_shared, state.tables,
+                    state.stale, t, m, k, method=tcfg.method,
                     layout=tcfg.layout, sorted_layouts=lays)
                 local_shared = fam.apply_delta(local_shared, d)
                 acc = d if acc is None else {n: acc[n] + d[n] for n in d}
@@ -309,19 +409,35 @@ class Trainer:
             # polytope 1 ≤ m_dk ≤ n_dk) — applied every round, exactly as
             # the distributed round does.
             self.locals_[c] = fam.local_project(self.locals_[c])
+            if lag is not None:
+                # Read-my-writes: the pre-filter delta the client applied
+                # locally rides in its lag row until the next refresh.
+                lag = {n: lag[n].at[c].add(acc[n]) for n in lag}
             kf = jax.random.fold_in(self.key, 7000 + r * 131 + c)
             acc, self.residuals[c] = round_mod.filter_push(   # filter (§5.3)
                 fam, acc, tcfg.filter, kf, self.residuals[c])
             total_delta = acc if total_delta is None else {
                 n: total_delta[n] + acc[n] for n in acc}
+            if pol.immediate:                        # async: push lands now
+                snapshot = fam.apply_delta(snapshot, acc)
 
-        if total_delta is not None:                  # push
-            self.shared = fam.apply_delta(self.shared, total_delta)
-        if tcfg.project_every and r % tcfg.project_every == 0:   # project
-            self.shared = fam.project(self.shared)
-        self.locals_, self.shared = fam.post_round(  # family auxiliaries
-            cfg, self.locals_, self.shared,
+        if pol.immediate:
+            state = srv.load_dense(state, snapshot)
+            state = state._replace(
+                clocks=state.clocks + jnp.asarray(alive, jnp.int32))
+        elif total_delta is not None:                # push (barrier)
+            state = srv.push(state, total_delta, jnp.asarray(alive))
+        do_project = bool(tcfg.project_every
+                          and r % tcfg.project_every == 0)
+        state = srv.project(state, do_project)       # project
+        dense = srv.assemble(state)
+        locals2, dense = fam.post_round(             # family auxiliaries
+            cfg, self.locals_, dense,
             jax.random.fold_in(self.key, 9000 + r))
+        self.locals_ = list(locals2)
+        state = srv.load_dense(state, dense)
+        self.pstate = state._replace(cache=cache, cache_version=version,
+                                     client_lag=lag)
         self._sync()
         self.round_idx += 1
 
@@ -371,9 +487,11 @@ class Trainer:
         """Max |counts-from-assignments − maintained| over the family's
         count-conserved shared statistics, summed across client shards.
 
-        With the dense filter this must be exactly 0.0 in either layout —
-        the sufficient-statistics parity contract between the sorted fast
-        path and the scan oracle (integer-valued fp32 counts are exact).
+        With the dense filter this must be exactly 0.0 in either layout
+        AND under every consistency policy — staleness delays what a
+        client *sees*, never what the server *applies*: every pushed
+        delta lands exactly once (error feedback carries filtered mass),
+        so the canonical counts always match the assignments.
         """
         fam, cfg = self.family, self.cfg
         totals: dict[str, Array] = {}

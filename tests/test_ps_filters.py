@@ -97,3 +97,48 @@ def test_small_leaf_passthrough():
     spec = ps.FilterSpec(kind="topk", k_rows=64, random_rows=16)
     out = ps.filter_delta(delta, spec, KEY)
     np.testing.assert_allclose(np.asarray(out), np.asarray(delta), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# changed_rows (the incremental-alias selection behind the server's push
+# path) — edge cases
+# ---------------------------------------------------------------------------
+
+def test_changed_rows_all_zero_delta_selects_nothing():
+    """threshold=0.0 with an all-zero delta: the fixed-size top-k still
+    returns k indices (shapes are static under jit), but the validity
+    mask must reject every one — ``mass > threshold`` is strict, so a
+    zero push never triggers arbitrary rebuilds."""
+    mass = jnp.zeros((16,))
+    idx, valid = ps.changed_rows(mass, k_rows=4, threshold=0.0)
+    assert idx.shape == (4,)
+    assert not bool(np.asarray(valid).any())
+
+
+def test_changed_rows_k_larger_than_v():
+    """k_rows > V clamps to V: every row selectable, none out of range,
+    and only rows with mass above threshold valid."""
+    mass = jnp.asarray([0.0, 2.0, 0.0, 1.0])
+    idx, valid = ps.changed_rows(mass, k_rows=100, threshold=0.0)
+    assert idx.shape == (4,)
+    idx_np, valid_np = np.asarray(idx), np.asarray(valid)
+    assert set(idx_np.tolist()) == {0, 1, 2, 3}
+    assert set(idx_np[valid_np].tolist()) == {1, 3}
+
+
+def test_changed_rows_tie_break_deterministic_under_jit():
+    """All-equal masses: the selection is a pure function of the input —
+    jitted and eager agree, and repeated jitted calls agree (top_k's
+    tie-breaking is deterministic, so the rebuild schedule is
+    reproducible)."""
+    mass = jnp.ones((12,))
+    jitted = jax.jit(ps.changed_rows, static_argnums=(1, 2))
+    e_idx, e_valid = ps.changed_rows(mass, 5, 0.5)
+    j_idx, j_valid = jitted(mass, 5, 0.5)
+    j_idx2, _ = jitted(mass + 0.0, 5, 0.5)
+    np.testing.assert_array_equal(np.asarray(e_idx), np.asarray(j_idx))
+    np.testing.assert_array_equal(np.asarray(j_idx), np.asarray(j_idx2))
+    np.testing.assert_array_equal(np.asarray(e_valid), np.asarray(j_valid))
+    # ties broken toward the lower index (jax.lax.top_k contract) — pin
+    # it so a silent backend change shows up here, not as alias drift
+    np.testing.assert_array_equal(np.asarray(e_idx), [0, 1, 2, 3, 4])

@@ -14,7 +14,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "=== tier-1 tests ==="
 python -m pytest -x -q
 
-echo "=== quick benchmarks: throughput + Trainer smoke (interpret/CPU) ==="
+echo "=== quick benchmarks: throughput + families + consistency ==="
 # One invocation so bench_results.csv keeps every module's rows.  The
 # lda/pdp/hdp modules drive all three model families through
 # engine.Trainer and both layouts (writing BENCH_{pdp,hdp}.json), so API
@@ -22,7 +22,24 @@ echo "=== quick benchmarks: throughput + Trainer smoke (interpret/CPU) ==="
 # The throughput module's round_engine / alias_partial_rebuild sections
 # track the compiled-round dispatch-overhead win and the incremental
 # alias rebuild cost as BENCH_throughput.json artifacts (DESIGN.md §8).
-python -m benchmarks.run --only throughput,lda,pdp,hdp --quick
+# The consistency module is the parameter-server policy bench
+# (DESIGN.md §9): BENCH_consistency.json must carry rounds/s +
+# perplexity for every policy with SSP(>=2) strictly faster than BSP,
+# and it asserts in-process that the compiled round still traces once
+# per (family, layout, policy) — it fails if a policy's per-round
+# cadence (refresh flag, projection, failure mask) started retracing.
+python -m benchmarks.run --only throughput,lda,pdp,hdp,consistency --quick
+python - <<'EOF'
+import json
+art = json.load(open("BENCH_consistency.json"))
+pols = art["policies"]
+missing = {"bsp", "ssp1", "ssp2", "ssp4", "async"} - set(pols)
+assert not missing, f"BENCH_consistency.json missing policies: {missing}"
+for name, res in pols.items():
+    assert res["rounds_per_s"] > 0, (name, res)
+print("consistency artifact OK:", ", ".join(
+    f"{n}={pols[n]['rounds_per_s']:.2f} r/s" for n in sorted(pols)))
+EOF
 
 echo "=== artifacts ==="
 ls -l BENCH_*.json bench_results.csv
