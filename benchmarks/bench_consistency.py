@@ -114,6 +114,11 @@ def run(quick: bool = True) -> None:
         res["ppl_rel_vs_bsp"] = (abs(res["perplexity_final"]
                                      - bsp["perplexity_final"])
                                  / bsp["perplexity_final"])
+        # SSP(4) is the deep-staleness frontier point: recorded, but not
+        # gated on perplexity (module docstring).  The artifact carries
+        # the flag explicitly so downstream checks can assert the gate
+        # coverage instead of inferring it from the bound.
+        res["unguarded"] = name == "ssp4"
         artifact["policies"][name] = res
     common.emit("consistency_summary",
                 ssp2_speedup_vs_bsp=results["ssp2"]["speedup_vs_bsp"],

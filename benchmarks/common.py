@@ -126,19 +126,26 @@ def run_multiclient(model_cfg, tokens, mask, *, n_clients: int,
                     filter_spec: ps.FilterSpec | None = None,
                     eval_every: int = 5, eval_docs: int = 32,
                     drop_client: tuple[int, int, int] | None = None,
+                    fault_plan=None, snapshot_every: int = 0,
+                    snapshot_dir: str | None = None,
                     key=None, project_every: int = 1,
                     consistency: str = "bsp",
                     n_server_shards: int = 1) -> RunResult:
     """The paper's distributed round, simulated client-by-client — see
     ``repro.engine.Trainer`` for the lifecycle.  The model family is
-    resolved from ``model_cfg``'s type via the registry."""
+    resolved from ``model_cfg``'s type via the registry.
+
+    Fault injection goes through ``fault_plan`` (a ``core.fault.FaultPlan``);
+    ``drop_client`` remains as the deprecated single-crash shim and is
+    forwarded so callers still see the DeprecationWarning."""
     tcfg = TrainerConfig(
         layout=layout, method=method, n_clients=n_clients, tau=tau,
         alias_refresh_every=alias_refresh_every,
         project_every=project_every,
         consistency=consistency, n_server_shards=n_server_shards,
         filter=filter_spec if filter_spec is not None else ps.FilterSpec(),
-        drop_client=drop_client)
+        drop_client=drop_client, fault_plan=fault_plan,
+        snapshot_every=snapshot_every, snapshot_dir=snapshot_dir)
     trainer = Trainer(model_cfg, tokens, mask, config=tcfg, key=key)
     return trainer.run(n_rounds, eval_every=eval_every, eval_docs=eval_docs)
 

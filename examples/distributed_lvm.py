@@ -22,7 +22,11 @@ and exercises:
   - scan-oracle or token-sorted tile-skipping layout (``--layout``),
   - magnitude-priority + uniform-sampling delta filters (§5.3),
   - constraint projection on shared AND client-local polytopes (§5.5),
-  - per-client snapshot / failover simulation (§5.4).
+  - fault injection with kill-and-rejoin recovery from periodic
+    snapshots (``--fail-client`` builds a ``core.fault.FaultPlan`` crash
+    window and enables ``snapshot_every``, so the crashed client rejoins
+    mid-run by restoring its locals and taking a forced-fresh pull —
+    §5.4; add ``--chaos-seed`` for a seeded-random multi-fault plan).
 """
 
 from __future__ import annotations
@@ -37,6 +41,7 @@ import numpy as np
 
 from repro.checkpoint import ckpt
 from repro.core import hdp, lda, pdp, ps
+from repro.core.fault import FaultPlan
 from repro.data.synthetic import CorpusConfig, make_topic_corpus
 from repro.engine import Trainer, TrainerConfig
 
@@ -56,7 +61,11 @@ def main() -> None:
                          "statistics")
     ap.add_argument("--filter", choices=["dense", "topk"], default="dense")
     ap.add_argument("--fail-client", type=int, default=-1,
-                    help="client id to fail mid-run (§5.4 failover demo)")
+                    help="client id to crash mid-run and rejoin from its "
+                         "snapshot (§5.4 kill-and-rejoin demo)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="seeded-random multi-fault plan (crashes, "
+                         "stragglers, lost pushes, failed pulls)")
     ap.add_argument("--snapshot-dir", default=None)
     args = ap.parse_args()
 
@@ -76,27 +85,38 @@ def main() -> None:
 
     fspec = (ps.FilterSpec(kind="topk", k_rows=50, random_rows=12)
              if args.filter == "topk" else ps.FilterSpec())
-    drop = ((args.fail_client, args.rounds // 3, 2 * args.rounds // 3)
-            if args.fail_client >= 0 else None)
+    plan = None
+    if args.chaos_seed is not None:
+        plan = FaultPlan.random(args.chaos_seed, args.clients, args.rounds,
+                                p_crash=0.05, p_straggle=0.05,
+                                p_lost_push=0.05, p_failed_pull=0.03)
+    elif args.fail_client >= 0:
+        plan = FaultPlan.crash(args.fail_client, args.rounds // 3,
+                               2 * args.rounds // 3)
+    # Periodic snapshots back the rejoin protocol (and Trainer.restore).
+    snap_dir = args.snapshot_dir or tempfile.mkdtemp(prefix="lvm_snap_")
 
     print(f"model={args.model} layout={args.layout} clients={args.clients} "
           f"tau={args.tau} consistency={args.consistency} "
           f"server_shards={args.server_shards} filter={args.filter} "
-          f"failover={drop}")
+          f"faults={len(plan.events) if plan else 0} snapshots={snap_dir}")
     t0 = time.time()
     trainer = Trainer(cfg, tokens, mask, config=TrainerConfig(
         layout=args.layout, n_clients=args.clients, tau=args.tau,
         consistency=args.consistency, n_server_shards=args.server_shards,
-        filter=fspec, drop_client=drop))
+        filter=fspec, fault_plan=plan,
+        snapshot_every=max(2, args.rounds // 4), snapshot_dir=snap_dir))
     res = trainer.run(args.rounds, eval_every=max(1, args.rounds // 6))
     for i, ppl in enumerate(res.perplexities):
         print(f"eval {i}: perplexity={ppl:9.2f}"
               f"  violations={res.violations[i]:.0f}")
+    if plan:
+        print(f"rejoins={trainer.rejoins} pull_failures="
+              f"{trainer.pull_failures}")
     print(f"total {time.time() - t0:.1f}s, "
           f"~{res.tokens_per_s / 1e3:.1f}k tokens/s/round")
 
-    # Snapshot the final shared state (async-snapshot analogue, §5.4).
-    snap_dir = args.snapshot_dir or tempfile.mkdtemp(prefix="lvm_snap_")
+    # Record the run's summary curves next to the Trainer's snapshots.
     path = ckpt.save(snap_dir, f"{args.model}_run", args.rounds, {
         "perplexities": np.asarray(res.perplexities),
         "iter_times": np.asarray(res.iter_times),

@@ -18,6 +18,7 @@ The paper's system in three objects:
 
 from repro.core import family
 from repro.core.family import get as get_family
+from repro.core.fault import FaultEvent, FaultPlan
 from repro.core.ps import FilterSpec
 from repro.core.server import (Async, BSP, Consistency, ParameterServer,
                                ServerState, ShardSpec, SSP,
@@ -28,6 +29,8 @@ __all__ = [
     "Async",
     "BSP",
     "Consistency",
+    "FaultEvent",
+    "FaultPlan",
     "FilterSpec",
     "ParameterServer",
     "RunResult",

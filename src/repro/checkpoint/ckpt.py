@@ -6,9 +6,17 @@ snapshot and re-pulls fresh parameters.  On the JAX side a snapshot is a
 flattened pytree written with numpy (no orbax in the environment); restore
 re-places leaves onto their shardings.
 
-Layout: <dir>/<name>-<step>.npz + a MANIFEST file recording the latest
-complete snapshot (write-then-rename, so a preempted writer never corrupts
-the recovery point — the asynchronous-snapshot property of §5.4).
+Layout: ``<dir>/<name>-<step>.npz`` + a ``<name>.MANIFEST`` file recording
+the latest complete snapshot (write-then-rename, so a preempted writer
+never corrupts the recovery point — the asynchronous-snapshot property of
+§5.4).  The manifest stores snapshot **basenames**, never joined paths, so
+a snapshot directory can be relocated (moved between machines, remounted
+under a different root) and still recovers — paths are re-joined against
+the manifest's own directory at read time.  It also keeps the history of
+written steps, so :func:`restore_latest` can fall back to an earlier
+snapshot when the newest file turns out truncated or corrupt
+(:class:`CorruptSnapshotError`) — a half-written ``.npz`` must never lose
+the run when an older complete one exists.
 """
 
 from __future__ import annotations
@@ -16,12 +24,37 @@ from __future__ import annotations
 import json
 import os
 import tempfile
+import zipfile
+import zlib
 from typing import Any
 
 import jax
 import numpy as np
 
 SEP = "/"
+
+# Errors that a truncated / bit-rotted npz raises anywhere between open
+# and member decompression.
+_NPZ_READ_ERRORS = (OSError, EOFError, ValueError, KeyError,
+                    zipfile.BadZipFile, zlib.error)
+
+
+def _dtype_kind(dt) -> str:
+    """numpy's dtype kind, with extension float dtypes (bfloat16 and
+    friends register as kind 'V') normalized to 'f' — bf16 is saved
+    widened to f32, so the narrowing back must count as same-kind."""
+    dt = np.dtype(dt)
+    if dt.kind == "V" and jax.numpy.issubdtype(dt, np.floating):
+        return "f"
+    return dt.kind
+
+
+class CorruptSnapshotError(RuntimeError):
+    """The snapshot file exists but cannot be read back (truncated write,
+    bit rot, missing npz member).  Distinct from a template mismatch
+    (``ValueError``): a corrupt snapshot is recoverable by falling back to
+    an earlier manifest entry (:func:`restore_latest`); a template
+    mismatch means the caller is restoring into the wrong structure."""
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -36,50 +69,143 @@ def _flatten(tree: Any) -> dict[str, np.ndarray]:
     return flat
 
 
+def _read_manifest(directory: str, name: str) -> dict | None:
+    manifest = os.path.join(directory, f"{name}.MANIFEST")
+    if not os.path.exists(manifest):
+        return None
+    with open(manifest) as f:
+        return json.load(f)
+
+
 def save(directory: str, name: str, step: int, tree: Any) -> str:
     os.makedirs(directory, exist_ok=True)
     flat = _flatten(tree)
-    path = os.path.join(directory, f"{name}-{step}.npz")
+    fname = f"{name}-{step}.npz"
+    path = os.path.join(directory, fname)
     fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
     with os.fdopen(fd, "wb") as f:
         np.savez(f, **flat)
     os.replace(tmp, path)
+    prev = _read_manifest(directory, name) or {}
+    # History of completed steps (newest last); legacy manifests carried
+    # only "step".
+    steps = list(prev.get("steps", []))
+    if not steps and "step" in prev:
+        steps = [prev["step"]]
+    if step not in steps:
+        steps.append(step)
     manifest = os.path.join(directory, f"{name}.MANIFEST")
     fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
     with os.fdopen(fd, "w") as f:
-        json.dump({"latest": path, "step": step}, f)
+        # Basename only: a relocated snapshot directory must stay
+        # recoverable, so the path is re-joined against the manifest's
+        # directory at read time.
+        json.dump({"latest": fname, "step": step,
+                   "steps": sorted(set(steps))}, f)
     os.replace(tmp, manifest)
     return path
 
 
 def latest_step(directory: str, name: str) -> int | None:
-    manifest = os.path.join(directory, f"{name}.MANIFEST")
-    if not os.path.exists(manifest):
-        return None
-    with open(manifest) as f:
-        return json.load(f)["step"]
+    m = _read_manifest(directory, name)
+    return None if m is None else m["step"]
+
+
+def _snapshot_path(directory: str, name: str, step: int,
+                   manifest: dict | None) -> str:
+    if manifest is not None and manifest.get("step") == step \
+            and "latest" in manifest:
+        # os.path.basename tolerates legacy manifests that recorded the
+        # full joined path.
+        return os.path.join(directory, os.path.basename(manifest["latest"]))
+    return os.path.join(directory, f"{name}-{step}.npz")
 
 
 def restore(directory: str, name: str, template: Any,
             shardings: Any | None = None, step: int | None = None) -> Any:
     """Restore into the structure of ``template``; leaves are device_put to
-    ``shardings`` when given (recovered clients re-shard transparently)."""
+    ``shardings`` when given (recovered clients re-shard transparently).
+
+    Raises :class:`CorruptSnapshotError` when the file is unreadable
+    (truncated/partial write) and ``ValueError`` with the offending leaf
+    path when the snapshot does not match the template's structure,
+    shapes, or dtype families — instead of an opaque numpy broadcast
+    failure at first use."""
+    manifest = _read_manifest(directory, name)
     if step is None:
-        step = latest_step(directory, name)
-        if step is None:
+        if manifest is None:
             raise FileNotFoundError(f"no snapshot for {name} in {directory}")
-    path = os.path.join(directory, f"{name}-{step}.npz")
-    data = np.load(path)
+        step = manifest["step"]
+    path = _snapshot_path(directory, name, step, manifest)
+    try:
+        data = np.load(path)
+        available = set(data.files)
+    except _NPZ_READ_ERRORS as e:
+        raise CorruptSnapshotError(
+            f"snapshot {path} is unreadable ({type(e).__name__}: {e}); "
+            "it was likely truncated by a preempted writer") from e
     flat_template = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for p, leaf in flat_template[0]:
         key = SEP.join(str(getattr(q, "key", getattr(q, "idx", getattr(q, "name", q))))
                        for q in p)
-        arr = data[key]
+        if key not in available:
+            raise ValueError(
+                f"snapshot {path} has no leaf {key!r} required by the "
+                f"restore template — the template's pytree structure does "
+                f"not match the snapshot (saved leaves: "
+                f"{sorted(available)[:8]}…)")
+        try:
+            arr = data[key]
+        except _NPZ_READ_ERRORS as e:
+            raise CorruptSnapshotError(
+                f"snapshot {path} leaf {key!r} is unreadable "
+                f"({type(e).__name__}: {e})") from e
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"snapshot {path} leaf {key!r} has shape {arr.shape} but "
+                f"the restore template expects {tuple(leaf.shape)} — "
+                "restoring a snapshot into a differently-configured state "
+                "(vocab/topics/clients/shards changed?)")
         if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+            # Intentional narrowing cast (bf16 is saved widened to f32);
+            # crossing dtype kinds means the wrong template.
+            if _dtype_kind(arr.dtype) != _dtype_kind(leaf.dtype):
+                raise ValueError(
+                    f"snapshot {path} leaf {key!r} has dtype {arr.dtype} "
+                    f"but the restore template expects {leaf.dtype}")
             arr = np.asarray(jax.numpy.asarray(arr).astype(leaf.dtype))
         leaves.append(arr)
     tree = jax.tree_util.tree_unflatten(flat_template[1], leaves)
     if shardings is not None:
         tree = jax.tree.map(jax.device_put, tree, shardings)
     return tree
+
+
+def restore_latest(directory: str, name: str, template: Any,
+                   shardings: Any | None = None,
+                   step: int | None = None) -> Any:
+    """Restore the newest *readable* snapshot.
+
+    Tries the manifest's latest entry first and walks the recorded step
+    history newest→oldest past any :class:`CorruptSnapshotError` — the
+    §5.4 recovery property: a truncated newest snapshot is rejected in
+    favor of the previous manifest entry instead of losing the run.  An
+    explicit ``step`` disables the fallback (that file or nothing).
+    Template mismatches (``ValueError``) are never skipped — every
+    snapshot in the history would mismatch the same way."""
+    if step is not None:
+        return restore(directory, name, template, shardings, step=step)
+    manifest = _read_manifest(directory, name)
+    if manifest is None:
+        raise FileNotFoundError(f"no snapshot for {name} in {directory}")
+    steps = list(manifest.get("steps", [])) or [manifest["step"]]
+    errors: list[str] = []
+    for s in sorted(set(steps), reverse=True):
+        try:
+            return restore(directory, name, template, shardings, step=s)
+        except CorruptSnapshotError as e:
+            errors.append(str(e))
+    raise CorruptSnapshotError(
+        f"no readable snapshot for {name} in {directory}; tried steps "
+        f"{sorted(set(steps), reverse=True)}: {errors}")

@@ -1,0 +1,278 @@
+"""Fault-plan injection (paper §5.4): scripted and seeded-random failures.
+
+The paper's production claim rests on failure being *routine*: on a shared
+cluster of tens of thousands of cores, clients are pre-empted, pushes are
+dropped by the transport, pulls time out, and stragglers stall barriers —
+and the system's answer is bounded staleness, asynchronous snapshots and
+re-pulling fresh parameters, not global restart.  Until this module the
+only injectable failure was a single static ``drop_client=(id, from, to)``
+tuple with no recovery path.
+
+A :class:`FaultPlan` is a scripted (or seeded-random, see
+:meth:`FaultPlan.random`) schedule of :class:`FaultEvent`\\ s over clients
+and rounds.  The plan is resolved **host-side**, once per round, into a
+:class:`RoundFaults` record — plain boolean masks and flags that enter the
+compiled round as *traced* scalars, so fault injection never retraces the
+round program.  Four event kinds:
+
+``crash``
+    The client is gone for ``[start, stop)``: it neither samples nor
+    pushes, its local state / residuals / read-my-writes lag are frozen,
+    and its server clock stops (exactly the protection SSP's staleness
+    bound watches for).  At round ``stop`` the client **rejoins**: the
+    Trainer restores its locals from the latest snapshot when snapshots
+    are enabled (``TrainerConfig.snapshot_dir``), clears its
+    read-my-writes lag, and forces a fresh pull — under SSP a rejoining
+    client is just a maximally-stale client taking its blocking refresh,
+    which is what makes recovery cheap (Yuan et al. 2014; Zheng et al.).
+    Restoring from a snapshot older than the crash loses the client's
+    un-snapshotted assignment movement: the server keeps the pushes the
+    restored local state no longer accounts for, so
+    ``Trainer.consistency_error()`` is expected to be nonzero after a
+    lossy rejoin — the sampler re-absorbs the drift (the counts are an
+    MH proposal's statistics, not an invariant the chain needs exactly).
+
+``straggle``
+    A slow client: within ``[start, stop)`` it completes a round of work
+    only every ``period``-th round (its round spans ``period`` lock-step
+    rounds).  On the skipped rounds it is masked exactly like a dead
+    client — frozen state, no push, frozen clock — but no recovery is
+    needed on exit because its state was never lost, and no count mass is
+    lost (``consistency_error`` stays 0 under the dense filter).
+
+``lost_push``
+    The client samples and updates its local replica, but its filtered
+    delta never reaches the server (a dropped message, not a dead
+    client).  The mass is *lost*, not residual-carried — the maintained
+    statistics drift from the assignments by exactly the dropped delta,
+    which is the fault being modeled.  The client's server clock does not
+    advance (clocks tick when a push is applied).
+
+``failed_pull``
+    The shared cache refresh fails for rounds in ``[start, stop)``.  Only
+    meaningful under a caching policy (SSP): the clients degrade
+    gracefully — they continue sampling the stale cache past the
+    staleness bound while the Trainer retries the refresh each round,
+    and after ``TrainerConfig.pull_retry_limit`` consecutive failed
+    attempts the refresh forces through anyway (modeling failover to a
+    healthy server replica).  Under BSP/async there is no refreshable
+    cache — the pull *is* the barrier read — so the event is a no-op.
+
+Determinism: a plan is a frozen value.  :meth:`FaultPlan.random`
+materializes its events eagerly from ``numpy.random.default_rng(seed)``
+at construction, so resolution is a pure function of (plan, round) and a
+seeded chaos run is exactly reproducible.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+KINDS = ("crash", "straggle", "lost_push", "failed_pull")
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault: ``kind`` applied to ``client`` for rounds in
+    ``[start, stop)``.  ``client`` is ignored for ``failed_pull`` (the
+    cache refresh is shared).  ``period`` applies to ``straggle`` only:
+    the client completes work every ``period``-th round of the window."""
+
+    kind: str
+    client: int = 0
+    start: int = 0
+    stop: int = 0
+    period: int = 2
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {KINDS}")
+        if self.stop < self.start:
+            raise ValueError(f"fault window [{self.start}, {self.stop}) "
+                             "is reversed")
+        if self.kind != "failed_pull" and self.client < 0:
+            raise ValueError(f"client must be >= 0, got {self.client}")
+        if self.kind == "straggle" and self.period < 2:
+            raise ValueError("straggle period must be >= 2 (period 1 is "
+                             "a healthy client)")
+
+    def active(self, round_idx: int) -> bool:
+        return self.start <= round_idx < self.stop
+
+
+@dataclass(frozen=True)
+class RoundFaults:
+    """Host-side resolution of a :class:`FaultPlan` for one round — the
+    flags the Trainer feeds the compiled round as traced scalars.
+
+    alive        per-client: samples and updates its local state this
+                 round (False while crashed or mid-straggle).
+    push_ok      per-client: its produced delta lands on the server
+                 (False additionally under ``lost_push``).  A client's
+                 server clock advances iff ``alive & push_ok``.
+    pull_failed  the shared cache refresh fails this round (SSP only).
+    rejoining    clients whose crash window ends at exactly this round —
+                 the Trainer runs the rejoin protocol for them before
+                 dispatching the round.
+    """
+
+    alive: tuple[bool, ...]
+    push_ok: tuple[bool, ...]
+    pull_failed: bool = False
+    rejoining: tuple[int, ...] = ()
+
+    @property
+    def alive_mask(self) -> np.ndarray:
+        return np.asarray(self.alive, bool)
+
+    @property
+    def push_mask(self) -> np.ndarray:
+        return np.asarray(self.push_ok, bool)
+
+
+_HEALTHY_CACHE: dict[int, RoundFaults] = {}
+
+
+def healthy(n_clients: int) -> RoundFaults:
+    """The no-fault resolution (cached — it is the steady-state value)."""
+    rf = _HEALTHY_CACHE.get(n_clients)
+    if rf is None:
+        rf = _HEALTHY_CACHE[n_clients] = RoundFaults(
+            alive=(True,) * n_clients, push_ok=(True,) * n_clients)
+    return rf
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """A schedule of :class:`FaultEvent`\\ s, resolved per round.
+
+    Frozen and hashable (it rides on ``TrainerConfig``); the empty plan
+    is the healthy run.  Construct scripted plans directly or via the
+    :meth:`crash` / :meth:`scripted` helpers, random chaos plans via
+    :meth:`random`, and the legacy ``drop_client`` tuple via
+    :meth:`from_drop_client`.
+    """
+
+    events: tuple[FaultEvent, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "events", tuple(self.events))
+        for e in self.events:
+            if not isinstance(e, FaultEvent):
+                raise TypeError(f"FaultPlan events must be FaultEvent, "
+                                f"got {type(e).__name__}")
+
+    # ------------------------------------------------------------ builders
+    @classmethod
+    def none(cls) -> "FaultPlan":
+        return cls()
+
+    @classmethod
+    def scripted(cls, *events: FaultEvent) -> "FaultPlan":
+        return cls(events=tuple(events))
+
+    @classmethod
+    def crash(cls, client: int, start: int, stop: int) -> "FaultPlan":
+        """One client crashed for ``[start, stop)``, rejoining at
+        ``stop`` — the kill-and-rejoin scenario."""
+        return cls(events=(FaultEvent("crash", client, start, stop),))
+
+    @classmethod
+    def from_drop_client(cls, drop: tuple[int, int, int]) -> "FaultPlan":
+        """The legacy ``TrainerConfig.drop_client=(id, from, to)`` tuple
+        as a one-event plan (same semantics: crash for ``[from, to)``)."""
+        client, start, stop = drop
+        return cls.crash(int(client), int(start), int(stop))
+
+    @classmethod
+    def random(cls, seed: int, n_clients: int, n_rounds: int, *,
+               p_crash: float = 0.02, p_straggle: float = 0.02,
+               p_lost_push: float = 0.02, p_failed_pull: float = 0.01,
+               mean_window: float = 3.0) -> "FaultPlan":
+        """A seeded-random chaos schedule, deterministic under ``seed``.
+
+        Per client and round, each per-client hazard fires independently
+        with its probability and opens a window of geometric mean length
+        ``mean_window`` (at most one concurrent event per client — a
+        crashed client cannot also straggle).  ``p_failed_pull`` is the
+        per-round hazard of a shared refresh outage.  Events are
+        materialized eagerly here, so two plans with equal arguments are
+        equal values.
+        """
+        rng = np.random.default_rng(seed)
+        p_stop = 1.0 / max(mean_window, 1.0)
+        events: list[FaultEvent] = []
+        hazards = (("crash", p_crash), ("straggle", p_straggle),
+                   ("lost_push", p_lost_push))
+        for c in range(n_clients):
+            busy_until = 0
+            for r in range(n_rounds):
+                if r < busy_until:
+                    continue
+                for kind, p in hazards:
+                    if rng.random() < p:
+                        length = 1 + int(rng.geometric(p_stop))
+                        stop = min(r + length, n_rounds)
+                        events.append(FaultEvent(kind, c, r, stop))
+                        busy_until = stop
+                        break
+        outage_until = 0
+        for r in range(n_rounds):
+            if r >= outage_until and rng.random() < p_failed_pull:
+                length = 1 + int(rng.geometric(p_stop))
+                stop = min(r + length, n_rounds)
+                events.append(FaultEvent("failed_pull", 0, r, stop))
+                outage_until = stop
+        return cls(events=tuple(events))
+
+    # ----------------------------------------------------------- resolution
+    @property
+    def max_client(self) -> int:
+        """Largest client id any per-client event names (-1 if none) —
+        validated against ``n_clients`` by the Trainer."""
+        ids = [e.client for e in self.events if e.kind != "failed_pull"]
+        return max(ids) if ids else -1
+
+    @property
+    def last_round(self) -> int:
+        """First round from which the plan is permanently healthy."""
+        return max((e.stop for e in self.events), default=0)
+
+    def resolve(self, round_idx: int, n_clients: int) -> RoundFaults:
+        """The per-round fault flags — a pure host-side function of
+        (plan, round): see :class:`RoundFaults` for field semantics."""
+        if not self.events or round_idx > self.last_round:
+            return healthy(n_clients)
+        alive = [True] * n_clients
+        push_ok = [True] * n_clients
+        pull_failed = False
+        rejoining: set[int] = set()
+        for e in self.events:
+            if e.kind == "failed_pull":
+                pull_failed = pull_failed or e.active(round_idx)
+                continue
+            c = e.client
+            if c >= n_clients:
+                raise ValueError(
+                    f"fault event {e} names client {c} but the run has "
+                    f"only {n_clients} clients")
+            if e.kind == "crash":
+                if e.active(round_idx):
+                    alive[c] = False
+                    push_ok[c] = False
+                elif e.stop == round_idx and e.start < e.stop:
+                    rejoining.add(c)
+            elif e.kind == "straggle":
+                if e.active(round_idx) and (round_idx - e.start) % e.period:
+                    alive[c] = False
+                    push_ok[c] = False
+            elif e.kind == "lost_push":
+                if e.active(round_idx):
+                    push_ok[c] = False
+        # A client crashed by an overlapping event does not rejoin yet.
+        rejoin = tuple(sorted(c for c in rejoining if alive[c]))
+        return RoundFaults(alive=tuple(alive), push_ok=tuple(push_ok),
+                           pull_failed=pull_failed, rejoining=rejoin)

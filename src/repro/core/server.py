@@ -353,6 +353,26 @@ class ParameterServer:
         return {n: jnp.where(do_refresh, jnp.zeros_like(v), v)
                 for n, v in client_lag.items()}
 
+    def rejoin_client(self, state: ServerState, c: int) -> ServerState:
+        """Elastic rejoin (paper §5.4): reset client ``c``'s
+        read-my-writes lag row before it re-enters the round.
+
+        A rejoining client restored its locals from a snapshot that
+        predates its crash, so none of the in-flight writes its lag row
+        accumulated survive in its local replica — serving them back
+        through ``client_view`` would hand it phantom deltas.  The caller
+        (``Trainer``) additionally forces a fresh pull on the rejoin
+        round, so the rejoining client is simply a maximally stale client
+        taking its blocking refresh — the SSP machinery makes recovery a
+        cache refresh, not a new code path.  Its clock stays frozen until
+        its first post-rejoin push is applied.  No-op for policies
+        without a lag accumulator (BSP / async)."""
+        if state.client_lag is None:
+            return state
+        return state._replace(client_lag={
+            n: v.at[c].set(jnp.zeros_like(v[c]))
+            for n, v in state.client_lag.items()})
+
     def client_view(self, snapshot, client_lag, c: int):
         """Client ``c``'s pull under read-my-writes SSP: the versioned
         cache plus the client's own deltas since the cache version (its

@@ -2,6 +2,7 @@
 protocol (``repro.engine.trainer``), backed by the explicit parameter
 server (``repro.core.server``)."""
 
+from repro.core.fault import FaultEvent, FaultPlan, RoundFaults
 from repro.core.server import (Async, BSP, Consistency, ParameterServer,
                                ServerState, ShardSpec, SSP,
                                make_consistency)
@@ -11,7 +12,10 @@ __all__ = [
     "Async",
     "BSP",
     "Consistency",
+    "FaultEvent",
+    "FaultPlan",
     "ParameterServer",
+    "RoundFaults",
     "RunResult",
     "SSP",
     "ServerState",

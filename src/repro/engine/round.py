@@ -43,9 +43,13 @@ per-shard changed-row accounting, and the resident alias proposal
 Compiled-round invariants:
 
 * **One trace per (family, layout, policy).**  Everything that varies
-  between rounds — the round index, the failure-injection ``alive`` mask,
+  between rounds — the round index, the fault-injection ``alive`` /
+  ``push_ok`` masks (resolved host-side from a ``core.fault.FaultPlan``),
   the projection cadence, the SSP refresh flag — enters as *traced*
-  scalars; RNG keys are derived inside the trace with ``fold_in`` on the
+  scalars; and only the trace-relevant slice of the Trainer's config
+  (:class:`RoundConfig`) keys the jit cache, so host-only knobs (fault
+  plans, snapshot cadence/dirs) cannot force retraces either.  RNG keys
+  are derived inside the trace with ``fold_in`` on the
   traced round index, reproducing the reference loop's keying
   bit-for-bit.  ``trace_count`` exposes a trace-time counter per
   (family, layout, policy) as the regression guard.
@@ -74,13 +78,47 @@ acceptance step corrects for, and a periodic full rebuild
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import ps
+
 # Re-exported here for drivers/benchmarks that address the round body
 # through the engine namespace.
 from repro.core.distributed import filter_push, tau_sweeps  # noqa: F401
+
+
+@dataclass(frozen=True)
+class RoundConfig:
+    """The trace-relevant slice of ``TrainerConfig`` — the jit static the
+    compiled round is keyed on.
+
+    The Trainer's config also carries host-only knobs (snapshot cadence
+    and directory, the fault plan, pull-retry budget, alias schedules,
+    ``project_every``, …) that never enter the trace; keying the jit
+    cache on the full ``TrainerConfig`` would retrace the identical round
+    program whenever one of them changes (e.g. a baseline run vs. the
+    same run with fault injection + snapshots — exactly the pairs
+    ``bench_failover`` compares).  This reduced static makes those pairs
+    share one trace by construction."""
+
+    layout: str
+    method: str
+    n_clients: int
+    tau: int
+    filter: ps.FilterSpec
+    alias_rebuild_rows: int
+    alias_rebuild_threshold: float | None
+
+    @classmethod
+    def from_trainer(cls, tcfg) -> "RoundConfig":
+        return cls(layout=tcfg.layout, method=tcfg.method,
+                   n_clients=tcfg.n_clients, tau=tcfg.tau,
+                   filter=tcfg.filter,
+                   alias_rebuild_rows=tcfg.alias_rebuild_rows,
+                   alias_rebuild_threshold=tcfg.alias_rebuild_threshold)
 
 # Trace-time counters, keyed (family_name, layout, policy): the
 # compile-stability regression guard.  Bumped from inside the round body,
@@ -101,20 +139,23 @@ def trace_count(family_name: str, layout: str, policy: str = "bsp") -> int:
 # The Trainer's whole-round compiled program
 # ---------------------------------------------------------------------------
 
-def _round_impl(server, model_cfg, tcfg, incremental, state, locals_,
+def _round_impl(server, model_cfg, rcfg, incremental, state, locals_,
                 residuals, shard_tokens, shard_masks, layouts, key, r,
-                alive, do_project, do_refresh):
+                alive, push_ok, do_project, do_refresh):
     """One sync round as a single traced program.
 
-    Static: server / model_cfg / tcfg / incremental (hashable configs —
-    the jit cache is shared across Trainer instances with equal
-    signatures).  Traced: everything else, including the server state,
-    the round index ``r``, the failure mask ``alive``, the projection
+    Static: server / model_cfg / rcfg (:class:`RoundConfig`) /
+    incremental (hashable configs — the jit cache is shared across
+    Trainer instances with equal signatures).  Traced: everything else,
+    including the server state, the round index ``r``, the fault masks
+    ``alive`` (client samples + keeps its state) and ``push_ok`` (its
+    delta lands on the server — ``alive`` minus lost pushes; the two
+    coincide except under a ``lost_push`` fault event), the projection
     flag ``do_project`` and the SSP refresh flag ``do_refresh``, so
-    per-round cadence never retraces.
+    per-round cadence and fault injection never retrace.
     """
     fam, pol = server.family, server.policy
-    key_ = (fam.name, tcfg.layout, pol.key)
+    key_ = (fam.name, rcfg.layout, pol.key)
     _TRACE_COUNTS[key_] = _TRACE_COUNTS.get(key_, 0) + 1
 
     # pull — policy view: BSP the canonical state, SSP the versioned stale
@@ -133,24 +174,31 @@ def _round_impl(server, model_cfg, tcfg, incremental, state, locals_,
     # rounds are bit-identical.  Note the flat offsets can collide across
     # phases once r*131 grows past 7000 (r ≳ 53) — a correlation quirk
     # inherited from PR 2, kept until a coordinated re-keying of both paths.
-    for c in range(tcfg.n_clients):                         # clients unrolled
+    for c in range(rcfg.n_clients):                         # clients unrolled
         sweep_keys = jax.vmap(
             lambda s, c=c: jax.random.fold_in(key, r * 131 + c * 17 + s)
-        )(jnp.arange(tcfg.tau))
+        )(jnp.arange(rcfg.tau))
         loc, acc = tau_sweeps(
             model_cfg, fam, locals_[c],
             server.client_view(snapshot, lag, c), state.tables, state.stale,
-            shard_tokens[c], shard_masks[c], sweep_keys, method=tcfg.method,
-            layout=tcfg.layout,
+            shard_tokens[c], shard_masks[c], sweep_keys, method=rcfg.method,
+            layout=rcfg.layout,
             sorted_layouts=layouts[c] if layouts is not None else None)
         kf = jax.random.fold_in(key, 7000 + r * 131 + c)
-        sent, res = filter_push(fam, acc, tcfg.filter, kf, residuals[c])
-        # Failure injection (§5.4): a dead client's push is zeroed and its
-        # state/residual frozen — identical to skipping it entirely.
+        sent, res = filter_push(fam, acc, rcfg.filter, kf, residuals[c])
+        # Fault injection (§5.4, core.fault): a dead client (alive=False)
+        # is frozen — no state update, no push, identical to skipping it
+        # entirely.  A lost push (alive but push_ok=False) keeps the
+        # client's local update and residual but drops its delta on the
+        # server floor: the mass is lost, not residual-carried — that is
+        # the fault being modeled.
         a = alive[c]
         if lag is not None:
             # Read-my-writes: the pre-filter delta the client applied
-            # locally rides in its lag row until the next refresh.
+            # locally rides in its lag row until the next refresh — it
+            # reflects what the client *applied locally*, so it follows
+            # `alive`, not `push_ok` (a lost push is still in the
+            # client's own replica).
             new_lag_rows.append({
                 n: jnp.where(a, lag[n][c] + acc[n], lag[n][c])
                 for n in lag})
@@ -159,20 +207,22 @@ def _round_impl(server, model_cfg, tcfg, incremental, state, locals_,
         new_residuals.append(
             res if res is None else jax.tree.map(
                 lambda new, old: jnp.where(a, new, old), res, residuals[c]))
-        af = a.astype(jnp.float32)
-        total = {n: total[n] + sent[n] * af for n in total}
+        pf = (a & push_ok[c]).astype(jnp.float32)
+        total = {n: total[n] + sent[n] * pf for n in total}
         if pol.immediate:
             # async: the push lands now — the next client pulls it.
             snapshot = fam.apply_delta(
-                snapshot, {n: sent[n] * af for n in sent})
+                snapshot, {n: sent[n] * pf for n in sent})
 
+    # A client's server clock advances iff its push was applied.
+    pushed = alive & push_ok
     if pol.immediate:                                       # push (applied)
         state = server.load_dense(state, snapshot)
         if incremental:
             state = server.accumulate_mass(state, total)
-        state = state._replace(clocks=state.clocks + alive.astype(jnp.int32))
+        state = state._replace(clocks=state.clocks + pushed.astype(jnp.int32))
     else:                                                   # push (barrier)
-        state = server.push(state, total, alive, track_mass=incremental)
+        state = server.push(state, total, pushed, track_mass=incremental)
     state = server.project(state, do_project)               # project
     dense = server.assemble(state)
     new_locals, dense = fam.post_round(                     # auxiliaries
@@ -189,7 +239,7 @@ def _round_impl(server, model_cfg, tcfg, incremental, state, locals_,
         # whose accumulated push mass drifted past the threshold, against
         # the end-of-round statistics (freshest possible proposal).
         rows, valid, state = server.consume_changed_rows(
-            state, tcfg.alias_rebuild_rows, tcfg.alias_rebuild_threshold)
+            state, rcfg.alias_rebuild_rows, rcfg.alias_rebuild_threshold)
         tables, stale = fam.rebuild_alias_rows(
             model_cfg, server.assemble(state), state.tables, state.stale,
             rows, valid)
@@ -207,13 +257,18 @@ def _jitted_round(donate: bool):
                    donate_argnums=donate_argnums)
 
 
-def trainer_round(server, model_cfg, tcfg, incremental, *args):
+def trainer_round(server, model_cfg, rcfg, incremental, *args):
     """Dispatch one compiled sync round (see :func:`_round_impl` for the
     argument contract).  ``server`` is the static
-    :class:`~repro.core.server.ParameterServer`; the first traced argument
-    is its donated :class:`~repro.core.server.ServerState`.  Buffers are
-    donated only where the backend honors donation — CPU ignores it and
-    would warn on every compile."""
+    :class:`~repro.core.server.ParameterServer` and ``rcfg`` the static
+    :class:`RoundConfig` (a full ``TrainerConfig`` is also accepted and
+    reduced, so external callers keying on the old signature keep
+    working); the first traced argument is the server's donated
+    :class:`~repro.core.server.ServerState`.  Buffers are donated only
+    where the backend honors donation — CPU ignores it and would warn on
+    every compile."""
+    if not isinstance(rcfg, RoundConfig):
+        rcfg = RoundConfig.from_trainer(rcfg)
     donate = jax.default_backend() != "cpu"
     fn = _jitted_round(donate)
-    return fn(server, model_cfg, tcfg, bool(incremental), *args)
+    return fn(server, model_cfg, rcfg, bool(incremental), *args)

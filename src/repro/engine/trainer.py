@@ -61,6 +61,18 @@ in three schedules:
   rebuild every ``alias_full_rebuild_every`` rounds to bound the drift of
   the column aggregates that partial rebuilds leave stale.
 
+Fault tolerance (§5.4, DESIGN.md §10): ``TrainerConfig.fault_plan``
+injects scripted or seeded-random fault schedules
+(``repro.core.fault.FaultPlan`` — crashes, stragglers, lost pushes,
+failed pull refreshes), resolved host-side per round into traced masks so
+chaos runs never retrace; ``snapshot_every``/``snapshot_dir`` write
+periodic barrier-free snapshots of the full training pytree through
+``repro.checkpoint.ckpt``, ``Trainer.restore()`` resumes from the latest
+manifest (bit-exact under BSP), and a crashed client rejoins mid-run by
+restoring its locals from the last snapshot and taking a forced-fresh
+pull with its read-my-writes lag reset — under SSP a rejoining client is
+just a maximally stale client taking its blocking refresh.
+
 The loop is semantically the single-device simulation of
 ``core.distributed.make_round_fn`` (clients iterated instead of
 shard_mapped) — both drive the same round body in ``engine.round``; RNG
@@ -74,14 +86,18 @@ to disable.
 
 from __future__ import annotations
 
+import functools
 import time
+import warnings
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import ckpt
 from repro.core import family as family_mod
+from repro.core import fault as fault_mod
 from repro.core import ps
 from repro.core import server as server_mod
 from repro.data.synthetic import shard_corpus
@@ -127,10 +143,29 @@ class TrainerConfig:
     # --------------------------------------------------------------------
     project_every: int = 1        # rounds between projections (0 = never)
     filter: ps.FilterSpec = field(default_factory=ps.FilterSpec)
-    # Failure injection (§5.4): (client_id, from_round, to_round) — that
-    # client's pushes are lost for those rounds; on recovery it continues
-    # from its snapshot against the freshly-pulled shared state.
+    # --- fault tolerance (§5.4, core.fault / checkpoint.ckpt) -----------
+    # Scripted or seeded-random schedule of fault events (crashes with
+    # kill-and-rejoin recovery, stragglers, lost pushes, failed pull
+    # refreshes), resolved host-side per round — see core.fault.FaultPlan.
+    fault_plan: fault_mod.FaultPlan | None = None
+    # DEPRECATED shim: (client_id, from_round, to_round) compiles to the
+    # one-event FaultPlan.crash(...) with a DeprecationWarning.  Mutually
+    # exclusive with fault_plan.
     drop_client: tuple[int, int, int] | None = None
+    # Periodic barrier-free snapshots of the full training pytree (server
+    # state, per-client locals, residuals, clocks, RNG key, round index)
+    # through checkpoint.ckpt: every `snapshot_every` rounds into
+    # `snapshot_dir` (both must be set to enable).  Trainer.restore()
+    # resumes from the latest manifest — bit-exact under BSP; crashed
+    # clients also restore their locals from here when they rejoin.
+    snapshot_every: int = 0
+    snapshot_dir: str | None = None
+    snapshot_name: str = "trainer"
+    # Bounded retry for failed pull refreshes (the `failed_pull` fault):
+    # the clients continue on the stale cache while the refresh is
+    # retried each round; after this many consecutive failures the
+    # refresh forces through (failover to a healthy replica).
+    pull_retry_limit: int = 3
 
 
 @dataclass
@@ -190,6 +225,7 @@ class Trainer:
                              "alias_refresh_every cadence")
         self.cfg = model_cfg
         self.tcfg = config
+        self.fault_plan = self._resolve_fault_plan(config)
         self.family = family_mod.family_of(model_cfg)
         self.key = key if key is not None else jax.random.PRNGKey(0)
         self.tokens = jnp.asarray(tokens)
@@ -248,6 +284,39 @@ class Trainer:
         else:
             self.residuals = [None] * config.n_clients
         self.round_idx = 0
+        # Fault-tolerance host state: the reduced jit static (host-only
+        # knobs like the fault plan and snapshot cadence must not key the
+        # trace cache), the failed-pull retry budget, and observability
+        # counters for tests/benchmarks.
+        self._rcfg = round_mod.RoundConfig.from_trainer(config)
+        self._pull_retries = 0
+        self.pull_failures = 0
+        self.rejoins = 0
+
+    @staticmethod
+    def _resolve_fault_plan(config: TrainerConfig) -> fault_mod.FaultPlan:
+        """The run's fault plan: ``config.fault_plan``, or the deprecated
+        ``drop_client`` tuple compiled to a one-event crash plan."""
+        if config.drop_client is not None:
+            if config.fault_plan is not None:
+                raise ValueError(
+                    "TrainerConfig.drop_client and TrainerConfig.fault_plan "
+                    "are mutually exclusive — drop_client is the deprecated "
+                    "shim; express the crash as FaultPlan.crash(...) inside "
+                    "the plan instead")
+            warnings.warn(
+                "TrainerConfig.drop_client is deprecated; use "
+                "fault_plan=FaultPlan.crash(client, start, stop) "
+                "(repro.core.fault) — drop_client compiles to exactly that "
+                "one-event plan", DeprecationWarning, stacklevel=3)
+            return fault_mod.FaultPlan.from_drop_client(config.drop_client)
+        if config.fault_plan is None:
+            return fault_mod.FaultPlan.none()
+        if config.fault_plan.max_client >= config.n_clients:
+            raise ValueError(
+                f"fault plan names client {config.fault_plan.max_client} "
+                f"but the run has only {config.n_clients} clients")
+        return config.fault_plan
 
     # ------------------------------------------------------------------
     @property
@@ -294,18 +363,33 @@ class Trainer:
                   for n in a}
         return fam.shared_from_dict(merged)
 
-    def _pull_refresh(self, r: int) -> bool:
+    def _pull_refresh(self, r: int, *, force: bool = False,
+                      failed: bool = False) -> bool:
         """The policy's pull schedule for round ``r`` (host mirror of the
         traced predicate; lock-step clients make it deterministic).  Under
         SSP a True here is the blocking pull: the bound r − version would
-        be exceeded, so the client waits for a fresh snapshot."""
+        be exceeded, so the client waits for a fresh snapshot.
+
+        ``force`` is the rejoin protocol's forced-fresh pull (retried
+        until it succeeds, so it overrides a concurrent ``failed``).
+        ``failed`` is the ``failed_pull`` fault: a due refresh degrades
+        gracefully — the clients continue on the stale cache (past the
+        staleness bound; that is the degradation) and the refresh is
+        retried next round, bounded by ``TrainerConfig.pull_retry_limit``
+        consecutive failures before it forces through anyway."""
         pol = self.server.policy
         if not pol.caches:
             return True
-        need = pol.needs_refresh(r, self._host_version)
-        if need:
-            self._host_version = r
-        return need
+        if not (force or pol.needs_refresh(r, self._host_version)):
+            return False
+        if failed and not force \
+                and self._pull_retries < self.tcfg.pull_retry_limit:
+            self._pull_retries += 1
+            self.pull_failures += 1
+            return False
+        self._pull_retries = 0
+        self._host_version = r
+        return True
 
     def _refresh_alias(self, do_refresh: bool) -> None:
         srv, r = self.server, self.round_idx
@@ -329,14 +413,46 @@ class Trainer:
         self.pstate = srv.refresh_proposal(self.cfg, self.pstate)
         self.alias_builds += 1
 
-    def _client_failed(self, c: int) -> bool:
-        drop = self.tcfg.drop_client
-        return (drop is not None and c == drop[0]
-                and drop[1] <= self.round_idx < drop[2])
+    def _round_faults(self) -> fault_mod.RoundFaults:
+        """This round's host-side fault resolution, with the rejoin
+        protocol already executed for any client whose crash window ends
+        now: restore its locals (and residuals) from the latest snapshot
+        when snapshots are enabled — otherwise its frozen in-memory state
+        doubles as the implicit snapshot — and clear its read-my-writes
+        lag; the caller then forces a fresh pull for the round."""
+        rf = self.fault_plan.resolve(self.round_idx, self.tcfg.n_clients)
+        if rf.rejoining:
+            self._rejoin(rf.rejoining)
+        return rf
 
-    def _alive(self) -> np.ndarray:
-        return np.array([not self._client_failed(c)
-                         for c in range(self.tcfg.n_clients)])
+    def _rejoin(self, clients: tuple[int, ...]) -> None:
+        snap = self._load_latest_snapshot()
+        for c in clients:
+            if snap is not None:
+                self.locals_[c] = snap["locals"][c]
+                if self.residuals[c] is not None:
+                    self.residuals[c] = snap["residuals"][c]
+            self.pstate = self.server.rejoin_client(self.pstate, c)
+        self.rejoins += len(clients)
+
+    def _load_latest_snapshot(self) -> dict | None:
+        """The newest readable snapshot, or None when snapshotting is off
+        or nothing has been written yet (a client crashing before the
+        first snapshot recovers from its frozen init-equivalent state)."""
+        if not self.tcfg.snapshot_dir:
+            return None
+        try:
+            return ckpt.restore_latest(self.tcfg.snapshot_dir,
+                                       self.tcfg.snapshot_name,
+                                       self.snapshot_state())
+        except FileNotFoundError:
+            return None
+        except ckpt.CorruptSnapshotError as e:
+            # Every written snapshot is unreadable: degrade to the frozen
+            # in-memory state rather than aborting the run (§5.4), loudly.
+            warnings.warn(f"rejoin falling back to in-memory state: {e}",
+                          RuntimeWarning, stacklevel=2)
+            return None
 
     def _sync(self) -> None:
         """Block until every in-flight round has materialized (eval
@@ -345,29 +461,42 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def step(self) -> None:
-        """One sync round: pull → sample → filter → push → project.
+        """One sync round: (faults) → pull → sample → filter → push →
+        project → (snapshot).
 
         Compiled mode (default): one jitted program, donated buffers, no
         host sync — the call returns as soon as the round is dispatched.
+        Fault events (``TrainerConfig.fault_plan``) resolve host-side
+        into traced masks, and the periodic snapshot
+        (``snapshot_every``/``snapshot_dir``) is barrier-free: the host
+        blocks only to serialize the buffers it writes while further
+        rounds keep dispatching.
         """
         if not self.tcfg.compiled:
             self._step_python()
-            return
+        else:
+            self._step_compiled()
+        if self.tcfg.snapshot_every and self.tcfg.snapshot_dir \
+                and self.round_idx % self.tcfg.snapshot_every == 0:
+            self.save_snapshot()
+
+    def _step_compiled(self) -> None:
         tcfg = self.tcfg
         r = self.round_idx
-        do_refresh = self._pull_refresh(r)
+        rf = self._round_faults()
+        do_refresh = self._pull_refresh(r, force=bool(rf.rejoining),
+                                        failed=rf.pull_failed)
         self._refresh_alias(do_refresh)
 
-        alive = self._alive()
         do_project = bool(tcfg.project_every
                           and r % tcfg.project_every == 0)
         locals2, self.pstate, residuals2 = round_mod.trainer_round(
-            self.server, self.cfg, tcfg, self._incremental,
+            self.server, self.cfg, self._rcfg, self._incremental,
             self.pstate, tuple(self.locals_), tuple(self.residuals),
             tuple(t for t, _ in self.shards),
             tuple(m for _, m in self.shards),
-            self.layouts, self.key, np.int32(r), alive,
-            np.bool_(do_project), np.bool_(do_refresh))
+            self.layouts, self.key, np.int32(r), rf.alive_mask,
+            rf.push_mask, np.bool_(do_project), np.bool_(do_refresh))
         self.locals_ = list(locals2)
         self.residuals = list(residuals2)
         self.round_idx += 1
@@ -382,17 +511,19 @@ class Trainer:
         fam, cfg, tcfg = self.family, self.cfg, self.tcfg
         srv, pol = self.server, self.server.policy
         r = self.round_idx
-        do_refresh = self._pull_refresh(r)
+        rf = self._round_faults()
+        do_refresh = self._pull_refresh(r, force=bool(rf.rejoining),
+                                        failed=rf.pull_failed)
         self._refresh_alias(do_refresh)
         state = self.pstate
-        alive = self._alive()
+        pushed = rf.alive_mask & rf.push_mask
 
         snapshot, cache, version = srv.pull_round(state, r, do_refresh)
         lag = srv.reset_lag(state.client_lag, do_refresh)
         total_delta = None
         for c in range(tcfg.n_clients):
-            if self._client_failed(c):
-                continue   # failed client: contributes nothing this round
+            if not rf.alive[c]:
+                continue   # dead client: frozen, contributes nothing
             t, m = self.shards[c]
             lays = self.layouts[c] if self.layouts is not None else None
             local_shared = srv.client_view(snapshot, lag, c)
@@ -411,11 +542,16 @@ class Trainer:
             self.locals_[c] = fam.local_project(self.locals_[c])
             if lag is not None:
                 # Read-my-writes: the pre-filter delta the client applied
-                # locally rides in its lag row until the next refresh.
+                # locally rides in its lag row until the next refresh —
+                # including when its push below is lost (the delta is in
+                # the client's replica regardless).
                 lag = {n: lag[n].at[c].add(acc[n]) for n in lag}
             kf = jax.random.fold_in(self.key, 7000 + r * 131 + c)
             acc, self.residuals[c] = round_mod.filter_push(   # filter (§5.3)
                 fam, acc, tcfg.filter, kf, self.residuals[c])
+            if not rf.push_ok[c]:
+                continue   # lost push (§5.4): the filtered delta is
+                           # dropped on the floor, not residual-carried
             total_delta = acc if total_delta is None else {
                 n: total_delta[n] + acc[n] for n in acc}
             if pol.immediate:                        # async: push lands now
@@ -424,9 +560,9 @@ class Trainer:
         if pol.immediate:
             state = srv.load_dense(state, snapshot)
             state = state._replace(
-                clocks=state.clocks + jnp.asarray(alive, jnp.int32))
+                clocks=state.clocks + jnp.asarray(pushed, jnp.int32))
         elif total_delta is not None:                # push (barrier)
-            state = srv.push(state, total_delta, jnp.asarray(alive))
+            state = srv.push(state, total_delta, jnp.asarray(pushed))
         do_project = bool(tcfg.project_every
                           and r % tcfg.project_every == 0)
         state = srv.project(state, do_project)       # project
@@ -440,6 +576,90 @@ class Trainer:
                                      client_lag=lag)
         self._sync()
         self.round_idx += 1
+
+    # ---------------------------------------------------- snapshot/restore
+    def snapshot_state(self) -> dict:
+        """The full training pytree a snapshot carries (§5.4): the
+        server's :class:`~repro.core.server.ServerState` (canonical
+        shards, SSP cache + per-client clocks, changed-row accounting,
+        resident alias proposal), per-client locals and residuals, the
+        run RNG key, and the host-side schedule scalars (round index,
+        cache-version mirror, retry/build counters) as int32 leaves —
+        everything a bit-exact BSP resume needs."""
+        hv = -1 if self._host_version is None else self._host_version
+        return {
+            "locals": tuple(self.locals_),
+            "server": self.pstate,
+            "residuals": tuple(self.residuals),
+            "key": self.key,
+            "round_idx": np.int32(self.round_idx),
+            "host_version": np.int32(hv),
+            "alias_builds": np.int32(self.alias_builds),
+            "pull_retries": np.int32(self._pull_retries),
+        }
+
+    def save_snapshot(self) -> str:
+        """Write a snapshot of :meth:`snapshot_state` at the current
+        round through ``checkpoint.ckpt`` (write-then-rename manifest).
+        Barrier-free in the §5.4 sense: no ``_sync()`` — the host blocks
+        only to serialize the buffers it writes, while already-dispatched
+        rounds keep running."""
+        if not self.tcfg.snapshot_dir:
+            raise ValueError("TrainerConfig.snapshot_dir is not set")
+        return ckpt.save(self.tcfg.snapshot_dir, self.tcfg.snapshot_name,
+                         self.round_idx, self.snapshot_state())
+
+    @classmethod
+    def restore(cls, model_cfg, tokens: Array, mask: Array, *,
+                config: TrainerConfig = TrainerConfig(),
+                snapshot_dir: str | None = None,
+                step: int | None = None,
+                key: Array | None = None) -> "Trainer":
+        """Resume a run from its latest snapshot manifest.
+
+        Builds a Trainer exactly as ``__init__`` would (same config, same
+        corpus — sharding and sorted layouts are re-derived
+        deterministically), then overwrites its round state from the
+        newest *readable* snapshot in ``snapshot_dir`` (defaulting to
+        ``config.snapshot_dir``): a truncated newest file falls back to
+        the previous manifest entry (``ckpt.restore_latest``).
+
+        The restored run continues **bit-exactly** under BSP — the
+        snapshot carries every round input (state, residuals, clocks,
+        RNG key, round index, alias proposal), so rounds ``k, k+1, …``
+        replay identically to the uninterrupted run (the oracle property;
+        asserted in tests).  Under SSP/async the continuation is
+        within-tolerance: the schedule state (cache version, retry
+        budget) is restored, but a crash by definition lost whatever
+        staleness window was in flight."""
+        tcfg = config
+        sdir = snapshot_dir if snapshot_dir is not None else tcfg.snapshot_dir
+        if not sdir:
+            raise ValueError("no snapshot_dir: pass snapshot_dir= or set "
+                             "TrainerConfig.snapshot_dir")
+        trainer = cls(model_cfg, tokens, mask, config=tcfg, key=key)
+        # Materialize the alias proposal so the restore template has the
+        # snapshot's pytree structure (snapshots are written after at
+        # least one round, whose pull built the tables — a fresh
+        # Trainer's `tables=None` placeholder would not unflatten).
+        trainer.pstate = trainer.server.refresh_proposal(model_cfg,
+                                                         trainer.pstate)
+        snap = ckpt.restore_latest(sdir, tcfg.snapshot_name,
+                                   trainer.snapshot_state(), step=step)
+        trainer._install_snapshot(snap)
+        return trainer
+
+    def _install_snapshot(self, snap: dict) -> None:
+        as_device = functools.partial(jax.tree.map, jnp.asarray)
+        self.locals_ = list(as_device(snap["locals"]))
+        self.pstate = as_device(snap["server"])
+        self.residuals = list(as_device(snap["residuals"]))
+        self.key = jnp.asarray(snap["key"])
+        self.round_idx = int(snap["round_idx"])
+        hv = int(snap["host_version"])
+        self._host_version = None if hv < 0 else hv
+        self.alias_builds = int(snap["alias_builds"])
+        self._pull_retries = int(snap["pull_retries"])
 
     def run(self, n_rounds: int, *, eval_every: int = 5,
             eval_docs: int = 32) -> RunResult:

@@ -2,6 +2,7 @@
 
 from __future__ import annotations
 
+import json
 import os
 
 import jax
@@ -62,3 +63,82 @@ def test_atomic_manifest_survives_partial_writer(tmp_path):
     assert ckpt.latest_step(str(tmp_path), "state") == 1
     restored = ckpt.restore(str(tmp_path), "state", t)
     assert int(restored["step"]) == 7
+
+
+def test_relocated_snapshot_dir_restores(tmp_path):
+    """The manifest stores basenames, so a moved/remounted snapshot
+    directory stays recoverable — paths re-join against the manifest's
+    own directory at read time."""
+    t = tree()
+    src = tmp_path / "orig"
+    ckpt.save(str(src), "state", 3, t)
+    dst = tmp_path / "relocated"
+    os.rename(str(src), str(dst))
+    restored = ckpt.restore(str(dst), "state", t)
+    assert int(restored["step"]) == 7
+    manifest = json.load(open(dst / "state.MANIFEST"))
+    assert manifest["latest"] == os.path.basename(manifest["latest"])
+
+
+def test_legacy_manifest_with_joined_path_restores(tmp_path):
+    """Manifests written before the basename convention recorded the full
+    joined path; restore must tolerate them (and relocation too)."""
+    t = tree()
+    src = tmp_path / "orig"
+    ckpt.save(str(src), "state", 3, t)
+    mpath = src / "state.MANIFEST"
+    m = json.load(open(mpath))
+    m["latest"] = os.path.join(str(src), m["latest"])   # legacy format
+    del m["steps"]                                      # legacy: no history
+    json.dump(m, open(mpath, "w"))
+    dst = tmp_path / "relocated"
+    os.rename(str(src), str(dst))
+    restored = ckpt.restore_latest(str(dst), "state", t)
+    assert int(restored["step"]) == 7
+
+
+def test_template_shape_mismatch_clear_error(tmp_path):
+    t = tree()
+    ckpt.save(str(tmp_path), "state", 1, t)
+    bad = jax.tree.map(lambda x: x, t)
+    bad["params"]["w"] = jnp.zeros((3, 2))
+    with pytest.raises(ValueError, match=r"params/w.*shape"):
+        ckpt.restore(str(tmp_path), "state", bad)
+
+
+def test_template_missing_leaf_clear_error(tmp_path):
+    t = tree()
+    ckpt.save(str(tmp_path), "state", 1, t)
+    bad = dict(t)
+    bad["extra"] = jnp.zeros((2,))
+    with pytest.raises(ValueError, match="extra"):
+        ckpt.restore(str(tmp_path), "state", bad)
+
+
+def test_template_dtype_kind_mismatch_clear_error(tmp_path):
+    t = {"x": jnp.asarray([1.5, 2.5], jnp.float32)}
+    ckpt.save(str(tmp_path), "s", 1, t)
+    with pytest.raises(ValueError, match="dtype"):
+        ckpt.restore(str(tmp_path), "s", {"x": jnp.asarray([1, 2], jnp.int32)})
+
+
+def test_corrupt_latest_falls_back_to_previous(tmp_path):
+    """§5.4 recovery: a truncated newest snapshot is rejected in favor of
+    the previous manifest entry instead of losing the run."""
+    t = tree()
+    ckpt.save(str(tmp_path), "state", 1, t)
+    t2 = jax.tree.map(lambda x: x + 1, t)
+    path2 = ckpt.save(str(tmp_path), "state", 2, t2)
+    with open(path2, "r+b") as f:       # truncate mid-archive
+        f.truncate(30)
+    restored = ckpt.restore_latest(str(tmp_path), "state", t)
+    assert int(restored["step"]) == 7   # step-1 content, not step-2's 8
+    # an explicit step disables the fallback: that file or nothing
+    with pytest.raises(ckpt.CorruptSnapshotError):
+        ckpt.restore_latest(str(tmp_path), "state", t, step=2)
+    # all entries corrupt -> CorruptSnapshotError listing the attempts
+    path1 = os.path.join(str(tmp_path), "state-1.npz")
+    with open(path1, "r+b") as f:
+        f.truncate(10)
+    with pytest.raises(ckpt.CorruptSnapshotError, match="tried steps"):
+        ckpt.restore_latest(str(tmp_path), "state", t)

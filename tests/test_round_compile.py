@@ -25,6 +25,7 @@ import pytest
 
 from repro.core import family as family_mod
 from repro.core import ps
+from repro.core.fault import FaultPlan
 from repro.engine import Trainer, TrainerConfig
 from tests.conftest import make_family_cfg, make_synthetic_corpus
 
@@ -50,7 +51,7 @@ def test_compiled_round_traces_once(name, layout, corpus):
     tokens, mask, _ = corpus
     trainer = Trainer(_cfg(name), tokens, mask, config=TrainerConfig(
         layout=layout, n_clients=2, tau=2, project_every=2,
-        drop_client=(1, 2, 3)))
+        fault_plan=FaultPlan.crash(1, 2, 3)))
     trainer.step()
     assert trainer.round_traces >= 1
     traced_once = trainer.round_traces
@@ -70,7 +71,7 @@ def test_compiled_round_matches_python_loop(name, corpus):
     trainers = {
         compiled: Trainer(_cfg(name), tokens, mask, config=TrainerConfig(
             n_clients=2, tau=2, compiled=compiled,
-            drop_client=(0, 1, 2)))
+            fault_plan=FaultPlan.crash(0, 1, 2)))
         for compiled in (True, False)}
     for _ in range(3):
         for t in trainers.values():

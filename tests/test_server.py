@@ -28,6 +28,7 @@ import pytest
 
 from repro.core import family as family_mod
 from repro.core import server as server_mod
+from repro.core.fault import FaultPlan
 from repro.core.server import (Async, BSP, ShardSpec, SSP, make_consistency)
 from repro.engine import Trainer, TrainerConfig
 from repro.engine import round as round_mod
@@ -305,7 +306,7 @@ def test_policy_rounds_trace_once(consistency, corpus):
     tokens, mask, _ = corpus
     t = Trainer(_cfg("hdp"), tokens, mask, config=TrainerConfig(
         layout="sorted", n_clients=2, consistency=consistency,
-        project_every=2, drop_client=(1, 2, 3)))
+        project_every=2, fault_plan=FaultPlan.crash(1, 2, 3)))
     t.step()
     traced_once = t.round_traces
     assert traced_once >= 1
@@ -321,7 +322,7 @@ def test_policy_failure_injection_freezes_clock(corpus):
     SSP's bound watches on a real deployment."""
     tokens, mask, _ = corpus
     t = Trainer(_cfg("lda"), tokens, mask, config=TrainerConfig(
-        n_clients=3, consistency="ssp:1", drop_client=(1, 0, 2)))
+        n_clients=3, consistency="ssp:1", fault_plan=FaultPlan.crash(1, 0, 2)))
     for _ in range(4):
         t.step()
     t._sync()

@@ -18,6 +18,7 @@ import numpy as np
 import pytest
 
 from repro.core import ps
+from repro.core.fault import FaultPlan
 from repro.engine import Trainer, TrainerConfig
 from tests.conftest import make_family_cfg, make_synthetic_corpus
 
@@ -110,7 +111,7 @@ def test_trainer_failure_injection(corpus):
     run: perplexity stays finite and the system keeps converging."""
     tokens, mask, _ = corpus
     trainer = Trainer(_cfg("hdp"), tokens, mask, config=TrainerConfig(
-        n_clients=4, drop_client=(1, 1, 3)))
+        n_clients=4, fault_plan=FaultPlan.crash(1, 1, 3)))
     res = trainer.run(5, eval_every=4, eval_docs=24)
     assert all(np.isfinite(res.perplexities))
     assert res.perplexities[-1] < res.perplexities[0]

@@ -14,7 +14,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "=== tier-1 tests ==="
 python -m pytest -x -q
 
-echo "=== quick benchmarks: throughput + families + consistency ==="
+echo "=== quick benchmarks: throughput + families + consistency + failover ==="
 # One invocation so bench_results.csv keeps every module's rows.  The
 # lda/pdp/hdp modules drive all three model families through
 # engine.Trainer and both layouts (writing BENCH_{pdp,hdp}.json), so API
@@ -28,7 +28,12 @@ echo "=== quick benchmarks: throughput + families + consistency ==="
 # and it asserts in-process that the compiled round still traces once
 # per (family, layout, policy) — it fails if a policy's per-round
 # cadence (refresh flag, projection, failure mask) started retracing.
-python -m benchmarks.run --only throughput,lda,pdp,hdp,consistency --quick
+# The failover module is the kill-and-rejoin robustness bench
+# (DESIGN.md §10): one client crashes mid-run and rejoins from its
+# periodic snapshot under each consistency policy; BENCH_failover.json
+# must carry the recovery-rounds and final-perplexity-degradation
+# numbers with degradation <= 5%.
+python -m benchmarks.run --only throughput,lda,pdp,hdp,consistency,failover --quick
 python - <<'EOF'
 import json
 art = json.load(open("BENCH_consistency.json"))
@@ -37,8 +42,31 @@ missing = {"bsp", "ssp1", "ssp2", "ssp4", "async"} - set(pols)
 assert not missing, f"BENCH_consistency.json missing policies: {missing}"
 for name, res in pols.items():
     assert res["rounds_per_s"] > 0, (name, res)
+# Every policy must declare its perplexity-gate coverage, and exactly
+# SSP(4) — the deep-staleness frontier point — may ride ungated.
+for name, res in pols.items():
+    assert res.get("unguarded") is (name == "ssp4"), (name, res)
+assert pols["ssp4"].get("unguarded") is True, pols["ssp4"]
 print("consistency artifact OK:", ", ".join(
     f"{n}={pols[n]['rounds_per_s']:.2f} r/s" for n in sorted(pols)))
+EOF
+python - <<'EOF'
+import json
+art = json.load(open("BENCH_failover.json"))
+pols = art["policies"]
+missing = {"bsp", "ssp2", "async"} - set(pols)
+assert not missing, f"BENCH_failover.json missing policies: {missing}"
+for name, res in pols.items():
+    for variant in ("baseline", "kill_rejoin"):
+        assert variant in res, (name, sorted(res))
+        assert res[variant]["perplexity_final"] > 0, (name, variant, res)
+    kr = res["kill_rejoin"]
+    assert "recovery_rounds" in kr and "degradation" in kr, (name, kr)
+    assert kr["degradation"] <= 0.05, (name, kr)
+print("failover artifact OK:", ", ".join(
+    f"{n}: +{pols[n]['kill_rejoin']['degradation']*100:.1f}% ppl, "
+    f"{pols[n]['kill_rejoin']['recovery_rounds']} rounds to recover"
+    for n in sorted(pols)))
 EOF
 
 echo "=== artifacts ==="
