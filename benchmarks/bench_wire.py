@@ -1,0 +1,119 @@
+"""Wire-transport benchmark (DESIGN.md §11): in-process vs loopback TCP.
+
+For each consistency policy, runs the same Trainer configuration over the
+in-process ParameterServer and over ``transport="tcp"`` against threaded
+:class:`repro.net.server.ShardServer` shards on loopback, and reports:
+
+* rounds/s for both transports (the cost of crossing the socket),
+* bytes moved per round (both directions, summed over shard servers),
+* RPC latency percentiles (p50/p99) from the client-side counters,
+* a BSP bit-exactness parity bit (checksum equality with in-process —
+  the §11 acceptance criterion, re-verified on every bench run).
+
+Artifact: ``BENCH_wire.json`` — gated for completeness by tools/ci.sh.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import family as fam_mod
+from repro.core.lda import LDAConfig
+from repro.engine import Trainer, TrainerConfig
+from repro.net.client import _checksum
+from repro.net.server import serve_shards
+
+from benchmarks import common
+
+POLICIES = {"bsp": "bsp", "ssp2": "ssp:2"}
+
+
+def _stats_checksums(trainer) -> dict[str, str]:
+    fam = fam_mod.get("lda")
+    return {n: _checksum(np.asarray(v))
+            for n, v in fam.stats_dict(trainer.shared).items()}
+
+
+def _time_rounds(trainer, rounds: int) -> float:
+    trainer.step()          # warm-up: compile + first alias build
+    trainer._sync()
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        trainer.step()
+    trainer._sync()
+    return rounds / (time.perf_counter() - t0)
+
+
+def run(quick: bool = True) -> None:
+    vocab, n_topics = (64, 4) if quick else (2048, 64)
+    n_docs, doc_len = (16, 12) if quick else (256, 64)
+    rounds = 4 if quick else 16
+    n_clients, n_shards = 2, 2
+
+    from repro.data.synthetic import CorpusConfig, make_topic_corpus
+    tokens, mask, _ = make_topic_corpus(CorpusConfig(
+        n_topics=n_topics, vocab_size=vocab, n_docs=n_docs,
+        doc_len=doc_len, seed=3))
+    cfg = LDAConfig(n_topics=n_topics, vocab_size=vocab)
+    key = jax.random.PRNGKey(0)
+
+    artifact: dict = {"quick": quick, "vocab": vocab, "n_topics": n_topics,
+                      "n_clients": n_clients, "n_shards": n_shards,
+                      "rounds": rounds, "policies": {}, "parity": {}}
+
+    for label, policy in POLICIES.items():
+        inproc = Trainer(cfg, tokens, mask, key=key,
+                         config=TrainerConfig(n_clients=n_clients, tau=1,
+                                              consistency=policy))
+        rps_inproc = _time_rounds(inproc, rounds)
+        inproc_sums = _stats_checksums(inproc)
+
+        servers = serve_shards("lda", vocab_size=vocab,
+                               n_clients=n_clients, n_shards=n_shards,
+                               consistency=policy, barrier_timeout=120.0)
+        addrs = tuple("%s:%d" % s.address for s in servers)
+        try:
+            tcp = Trainer(cfg, tokens, mask, key=key,
+                          config=TrainerConfig(n_clients=n_clients, tau=1,
+                                               consistency=policy,
+                                               transport="tcp",
+                                               server_addrs=addrs))
+            rps_tcp = _time_rounds(tcp, rounds)
+            tcp_sums = _stats_checksums(tcp)
+            counters = tcp.remote.counters()
+            tcp.close()
+        finally:
+            for s in servers:
+                s.close()
+
+        total_rounds = rounds + 1  # incl. warm-up
+        bytes_per_round = ((counters["bytes_in"] + counters["bytes_out"])
+                           / total_rounds)
+        entry = {
+            "rounds_per_s": {"inproc": rps_inproc, "tcp": rps_tcp},
+            "bytes_per_round": bytes_per_round,
+            "rpc_latency_ms": {"p50": counters["rpc_p50_ms"],
+                               "p99": counters["rpc_p99_ms"]},
+            "rpc_count": counters["rpc_count"],
+        }
+        artifact["policies"][label] = entry
+        if label == "bsp":
+            artifact["parity"]["bsp_bitexact"] = inproc_sums == tcp_sums
+        common.emit("wire", policy=label,
+                    rounds_per_s_inproc=rps_inproc,
+                    rounds_per_s_tcp=rps_tcp,
+                    bytes_per_round=bytes_per_round,
+                    rpc_p50_ms=counters["rpc_p50_ms"],
+                    rpc_p99_ms=counters["rpc_p99_ms"])
+
+    if not artifact["parity"]["bsp_bitexact"]:
+        raise AssertionError(
+            "BSP over loopback TCP diverged from the in-process result")
+    common.write_artifact("wire", artifact)
+
+
+if __name__ == "__main__":
+    run(quick=True)

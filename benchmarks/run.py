@@ -17,6 +17,8 @@ Mapping to the paper:
   bench_failover    §5.4   client failure + recovery robustness
   bench_stale_sync  beyond-paper: PS pattern on LM gradient sync
   bench_roofline    §Roofline table from the dry-run artifacts
+  bench_wire        §11     in-process vs loopback-TCP transport (rounds/s,
+                           bytes/round, RPC latency, BSP parity bit)
 
 Besides the CSV, benchmark modules write machine-readable
 ``BENCH_<name>.json`` artifacts (``common.write_artifact``) so the perf
@@ -34,7 +36,8 @@ import traceback
 from benchmarks import common
 
 MODULES = ("lda", "pdp", "hdp", "projection", "scaling", "throughput",
-           "filters", "consistency", "failover", "stale_sync", "roofline")
+           "filters", "consistency", "failover", "stale_sync", "roofline",
+           "wire")
 
 
 def main(argv=None) -> int:

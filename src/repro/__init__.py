@@ -24,6 +24,8 @@ from repro.core.server import (Async, BSP, Consistency, ParameterServer,
                                ServerState, ShardSpec, SSP,
                                make_consistency)
 from repro.engine import RunResult, Trainer, TrainerConfig
+from repro.net import RemoteParameterServer, serve_shards
+from repro.net.protocol import ProtocolError
 
 __all__ = [
     "Async",
@@ -33,6 +35,8 @@ __all__ = [
     "FaultPlan",
     "FilterSpec",
     "ParameterServer",
+    "ProtocolError",
+    "RemoteParameterServer",
     "RunResult",
     "SSP",
     "ServerState",
@@ -42,4 +46,5 @@ __all__ = [
     "family",
     "get_family",
     "make_consistency",
+    "serve_shards",
 ]

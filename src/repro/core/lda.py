@@ -73,6 +73,14 @@ class LDAConfig:
     # within-document Gauss-Seidel effect of the scan layout is mostly
     # retained (1 = fully parallel Jacobi sweep).
     sorted_chunks: int = 4
+    # Full-table build path.  The fused kernel (dense term computed
+    # in-register, kernels/alias_build.py) measures ~2× slower than
+    # materialize-then-build at current (V, K) — BENCH_throughput.json
+    # shows 39.7ms fused vs 20.0ms unfused per build — so unfused stays
+    # the default until the roofline item validates fused at production
+    # sizes.  (The *partial* gather-fused rebuild is unaffected: it wins
+    # by scaling with changed rows, not V.)
+    fused_alias_build: bool = False
 
 
 class SharedStats(NamedTuple):
@@ -125,6 +133,12 @@ def dense_probs(cfg: LDAConfig, shared: SharedStats) -> Array:
 
 def build_alias(cfg: LDAConfig, shared: SharedStats) -> tuple[alias_mod.AliasTable, Array]:
     """Build per-token-type alias tables over the (stale) dense term."""
+    if cfg.fused_alias_build:
+        from repro.kernels import ops
+        tile_r = max(t for t in (8, 4, 2, 1) if cfg.vocab_size % t == 0)
+        return ops.build_tables_fused_lda(
+            shared.n_wk, shared.n_k, alpha=cfg.alpha, beta=cfg.beta,
+            vocab_size=cfg.vocab_size, tile_r=tile_r)
     dp = dense_probs(cfg, shared)
     return alias_mod.build(dp), dp
 

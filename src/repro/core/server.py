@@ -36,6 +36,15 @@ This module makes both halves first-class:
     communication filter's error-feedback residuals carry withheld mass,
     and pulls never block (they always return the freshest state).
 
+This module is the *in-process* backend; ``repro.net`` (DESIGN.md §11)
+maps the same surface onto a framed TCP protocol — ``ShardServer``
+processes host the vocabulary row-ranges and ``RemoteParameterServer``
+presents this class's pull/push/project/snapshot API to the Trainer, with
+pull as a versioned cache refresh (``Consistency.needs_refresh`` answered
+as NOT_MODIFIED on the wire) and push as a delta frame at the round
+barrier.  The sharding predicate, row-range math (:class:`ShardSpec`) and
+policy objects here are shared verbatim by both transports.
+
 The server also owns the **per-shard changed-row accounting** that drives
 the PR-3 incremental alias rebuild: every tracked push accumulates per-row
 L1 delta mass into per-shard accumulators, and

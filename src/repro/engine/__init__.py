@@ -7,6 +7,8 @@ from repro.core.server import (Async, BSP, Consistency, ParameterServer,
                                ServerState, ShardSpec, SSP,
                                make_consistency)
 from repro.engine.trainer import RunResult, Trainer, TrainerConfig
+from repro.net import RemoteParameterServer, serve_shards
+from repro.net.protocol import ProtocolError
 
 __all__ = [
     "Async",
@@ -15,6 +17,8 @@ __all__ = [
     "FaultEvent",
     "FaultPlan",
     "ParameterServer",
+    "ProtocolError",
+    "RemoteParameterServer",
     "RoundFaults",
     "RunResult",
     "SSP",
@@ -23,4 +27,5 @@ __all__ = [
     "Trainer",
     "TrainerConfig",
     "make_consistency",
+    "serve_shards",
 ]

@@ -17,7 +17,11 @@ three ways:
 * by the Python reference loop ``Trainer._step_python`` — kept un-compiled
   as the dispatch-per-op baseline the benchmarks compare against,
 
-so the three drivers cannot drift apart.
+so the three drivers cannot drift apart.  (A fourth consumer,
+``Trainer._step_remote`` — the ``transport="tcp"`` loop against
+``repro.net`` shard servers — reuses :func:`filter_push` and the same
+per-client key schedule, which is what keeps the wire path bit-exact
+with the in-process round; see DESIGN.md §11.)
 
 Since the ParameterServer redesign the round no longer threads raw
 ``shared``/``stale_dense`` pytrees: it takes a static

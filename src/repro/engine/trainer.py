@@ -90,6 +90,7 @@ import functools
 import time
 import warnings
 from dataclasses import dataclass, field
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -166,6 +167,23 @@ class TrainerConfig:
     # retried each round; after this many consecutive failures the
     # refresh forces through (failover to a healthy replica).
     pull_retry_limit: int = 3
+    # --- transport (DESIGN.md §11, repro.net) ---------------------------
+    # "inproc" (default): the zero-copy in-process ParameterServer path.
+    # "tcp": the shared statistics live in out-of-process shard servers
+    # (repro.net.server) and every pull/push crosses the framed binary
+    # wire protocol through a RemoteParameterServer.  BSP over tcp is
+    # bit-exact with inproc BSP; HDP (cross-client post_round) is not
+    # servable over the wire and raises.
+    transport: str = "inproc"
+    # "host:port" shard-server addresses (tcp only); together the servers
+    # must tile the vocabulary rows [0, V).
+    server_addrs: tuple[str, ...] = ()
+    # Which global client ids THIS process runs (tcp only; None = all of
+    # them — the single-process loopback case).  Other clients run in
+    # other processes against the same servers; RNG streams key on the
+    # global client id, so the union of processes reproduces the
+    # in-process run exactly under BSP.
+    local_clients: tuple[int, ...] | None = None
 
 
 @dataclass
@@ -223,14 +241,31 @@ class Trainer:
                              "(alias_rebuild_threshold) require compiled "
                              "rounds; the reference loop only supports the "
                              "alias_refresh_every cadence")
+        if config.transport not in ("inproc", "tcp"):
+            raise ValueError(f"unknown transport {config.transport!r}; "
+                             "expected 'inproc' or 'tcp'")
+        if config.transport == "inproc" and (
+                config.server_addrs or config.local_clients is not None):
+            raise ValueError("server_addrs / local_clients are tcp-only "
+                             "knobs; set transport='tcp'")
         self.cfg = model_cfg
         self.tcfg = config
         self.fault_plan = self._resolve_fault_plan(config)
         self.family = family_mod.family_of(model_cfg)
+        if config.transport == "tcp":
+            self._validate_tcp(config)
         self.key = key if key is not None else jax.random.PRNGKey(0)
         self.tokens = jnp.asarray(tokens)
         self.mask = jnp.asarray(mask)
         self.n_tokens = int(np.asarray(mask).sum())
+        # Which global client ids this process runs: all of them inproc
+        # (and for single-process tcp); a subset when this Trainer is one
+        # of several worker processes sharing the wire servers.
+        self.local_clients = (tuple(range(config.n_clients))
+                              if config.local_clients is None
+                              else tuple(sorted(config.local_clients)))
+        remote_mode = config.transport == "tcp"
+        local_set = set(self.local_clients)
 
         shards = shard_corpus(np.asarray(tokens), np.asarray(mask),
                               config.n_clients)
@@ -238,33 +273,74 @@ class Trainer:
 
         # init() builds per-shard stats; the canonical shared state is
         # their sum (replicated stats — e.g. θ0 — taken from shard 0).
-        self.locals_: list = []
+        # Over the wire, each process computes only its local clients'
+        # contributions and INIT-pushes them — the servers perform the
+        # same ascending-client-id merge at the INIT barrier.
+        self.locals_: list = [None] * config.n_clients
         shared = None
+        init_stats: dict[int, Any] = {}
         for c, (t, m) in enumerate(self.shards):
+            if remote_mode and c not in local_set:
+                continue
             loc, sh = self.family.init_state(model_cfg, t, m,
                                              jax.random.fold_in(self.key, c))
-            self.locals_.append(loc)
-            shared = sh if shared is None else self._merge_shared(shared, sh)
+            self.locals_[c] = loc
+            if remote_mode:
+                init_stats[c] = sh
+            else:
+                shared = sh if shared is None else self._merge_shared(shared, sh)
 
         # The parameter server: vocabulary-sharded canonical statistics
-        # under the configured consistency policy (DESIGN.md §9).
-        self.server = server_mod.make_server(
-            self.family, model_cfg.vocab_size,
-            n_shards=config.n_server_shards,
-            consistency=config.consistency)
-        self.pstate = self.server.init_state(shared, config.n_clients)
+        # under the configured consistency policy (DESIGN.md §9) — held
+        # in-process, or behind the framed wire protocol (DESIGN.md §11).
+        self.remote = None
+        if remote_mode:
+            from repro.net import client as net_client
+            self.server = None
+            self.pstate = None
+            self.remote = net_client.RemoteParameterServer(
+                config.server_addrs, family=self.family,
+                n_clients=config.n_clients,
+                vocab_size=model_cfg.vocab_size,
+                consistency=config.consistency)
+            for c in sorted(init_stats):
+                self.remote.init_push(c, init_stats[c])
+            stats_template = self.family.stats_dict(
+                init_stats[self.local_clients[0]])
+        else:
+            self.server = server_mod.make_server(
+                self.family, model_cfg.vocab_size,
+                n_shards=config.n_server_shards,
+                consistency=config.consistency)
+            self.pstate = self.server.init_state(shared, config.n_clients)
+            stats_template = None
         # Host mirror of the SSP cache version (the lock-step pull
         # schedule is deterministic, so the host never needs to sync to
         # decide a refresh) and a rebuild counter for tests/benchmarks.
         self._host_version: int | None = None
         self.alias_builds = 0
+        # Wire-transport client state: the pulled versioned snapshot (the
+        # SSP cache at the client edge), the alias proposal built from it,
+        # and each local client's own read-my-writes lag row.
+        self._tcp_snapshot = None
+        self._tcp_version: int | None = None
+        self._tcp_tables = None
+        self._tcp_stale = None
+        self._lag: dict[int, dict[str, Array]] | None = None
+        if remote_mode and self.remote.policy.caches:
+            self._lag = {
+                c: {n: jnp.zeros_like(stats_template[n])
+                    for n in self.family.delta_names}
+                for c in self.local_clients}
 
-        # Hoisted sorted layouts: one tuple of per-chunk layouts per shard.
+        # Hoisted sorted layouts: one tuple of per-chunk layouts per shard
+        # (local clients only — a worker never sweeps remote shards).
         self.layouts = None
         if config.layout == "sorted":
             self.layouts = tuple(
                 self.family.build_sorted_layouts(model_cfg, t, m)
-                for t, m in self.shards)
+                if c in local_set else None
+                for c, (t, m) in enumerate(self.shards))
 
         self.alias_refresh_every = (
             config.alias_refresh_every
@@ -277,10 +353,12 @@ class Trainer:
         # Zero-initialized (not None) so the compiled round's pytree
         # structure is stable from the first call.
         if config.filter.kind != "dense":
-            stats = self.family.stats_dict(self.shared)
+            stats = (stats_template if remote_mode
+                     else self.family.stats_dict(self.shared))
             self.residuals: list = [
                 {n: jnp.zeros_like(stats[n]) for n in self.family.delta_names}
-                for _ in range(config.n_clients)]
+                if (not remote_mode or c in local_set) else None
+                for c in range(config.n_clients)]
         else:
             self.residuals = [None] * config.n_clients
         self.round_idx = 0
@@ -292,6 +370,37 @@ class Trainer:
         self._pull_retries = 0
         self.pull_failures = 0
         self.rejoins = 0
+
+    def _validate_tcp(self, config: TrainerConfig) -> None:
+        """Reject TrainerConfig combinations the wire transport cannot
+        honor (each names its inproc-only machinery)."""
+        if not config.server_addrs:
+            raise ValueError("transport='tcp' requires server_addrs "
+                             "(host:port shard servers)")
+        if config.fault_plan is not None or config.drop_client is not None:
+            raise ValueError(
+                "fault injection (fault_plan / drop_client) is an inproc "
+                "simulation knob; over tcp, kill the worker process "
+                "instead (repro.launch.loopback)")
+        if config.snapshot_every:
+            raise ValueError("snapshot_every is inproc-only: over tcp the "
+                             "shard servers own the canonical state")
+        if config.alias_rebuild_threshold is not None:
+            raise ValueError("incremental alias rebuilds are inproc "
+                             "compiled-round machinery; tcp rebuilds from "
+                             "the pulled snapshot on the refresh schedule")
+        if type(self.family).post_round is not family_mod.ModelFamily.post_round:
+            raise NotImplementedError(
+                f"family {self.family.name!r} overrides post_round "
+                "(cross-client auxiliary resampling at the barrier) — not "
+                "servable over the wire; use transport='inproc'")
+        if config.local_clients is not None:
+            lc = tuple(config.local_clients)
+            if not lc or len(set(lc)) != len(lc) or \
+                    not all(0 <= c < config.n_clients for c in lc):
+                raise ValueError(
+                    f"local_clients {lc} must be distinct ids in "
+                    f"[0, {config.n_clients})")
 
     @staticmethod
     def _resolve_fault_plan(config: TrainerConfig) -> fault_mod.FaultPlan:
@@ -322,24 +431,35 @@ class Trainer:
     @property
     def shared(self):
         """The assembled dense shared statistics (the server's canonical
-        snapshot — always fresh, regardless of the pull policy)."""
+        snapshot — always fresh, regardless of the pull policy).  Over
+        tcp this is a SNAPSHOT round-trip that first waits for every
+        stepped round to finalize at the servers."""
+        if self.remote is not None:
+            return self.remote.snapshot(min_round=self.round_idx)
         return self.server.snapshot(self.pstate)
 
     @shared.setter
     def shared(self, value):
+        if self.remote is not None:
+            raise ValueError("Trainer.shared is read-only over tcp — the "
+                             "shard servers own the canonical state")
         self.pstate = self.server.load_dense(self.pstate, value)
 
     @property
     def tables(self):
-        return self.pstate.tables
+        return self._tcp_tables if self.remote is not None \
+            else self.pstate.tables
 
     @property
     def stale(self):
-        return self.pstate.stale
+        return self._tcp_stale if self.remote is not None \
+            else self.pstate.stale
 
     @property
     def clocks(self) -> np.ndarray:
         """Per-client round clocks as tracked by the server."""
+        if self.remote is not None:
+            return self.remote.clock()[1]
         return np.asarray(self.pstate.clocks)
 
     @property
@@ -352,8 +472,10 @@ class Trainer:
         compile-stability guard (steady-state rounds must not grow it).
         The jit cache is shared, so another Trainer with an equal signature
         reuses the trace."""
+        policy = (self.remote.policy if self.remote is not None
+                  else self.server.policy)
         return round_mod.trace_count(self.family.name, self.tcfg.layout,
-                                     self.server.policy.key)
+                                     policy.key)
 
     def _merge_shared(self, acc, sh):
         fam = self.family
@@ -456,7 +578,12 @@ class Trainer:
 
     def _sync(self) -> None:
         """Block until every in-flight round has materialized (eval
-        points; compiled rounds otherwise pipeline asynchronously)."""
+        points; compiled rounds otherwise pipeline asynchronously).  Over
+        tcp: wait for the servers' barrier to finalize every stepped
+        round (the CLOCK message with min_round)."""
+        if self.remote is not None:
+            self.remote.clock(min_round=self.round_idx)
+            return
         jax.block_until_ready(jax.tree.leaves(self.pstate.shards[0])[0])
 
     # ------------------------------------------------------------------
@@ -472,7 +599,9 @@ class Trainer:
         blocks only to serialize the buffers it writes while further
         rounds keep dispatching.
         """
-        if not self.tcfg.compiled:
+        if self.remote is not None:
+            self._step_remote()
+        elif not self.tcfg.compiled:
             self._step_python()
         else:
             self._step_compiled()
@@ -500,6 +629,84 @@ class Trainer:
         self.locals_ = list(locals2)
         self.residuals = list(residuals2)
         self.round_idx += 1
+
+    def _refresh_alias_tcp(self, refreshed: bool) -> None:
+        """Alias maintenance at the client edge of the wire: the proposal
+        is built from the pulled versioned snapshot — under SSP exactly
+        when the pull refreshed (the proposal rides the cache, as
+        inproc); under BSP/async on the ``alias_refresh_every`` cadence.
+        Bit-exact with the inproc schedule: the pulled snapshot at
+        version r carries the same statistics ``refresh_proposal`` reads
+        from the canonical store at round r."""
+        r = self.round_idx
+        if self._tcp_tables is not None:
+            if self.remote.policy.caches:
+                if not refreshed:
+                    return
+            elif r % self.alias_refresh_every != 0:
+                return
+        self._tcp_tables, self._tcp_stale = self.family.build_alias(
+            self.cfg, self._tcp_snapshot)
+        self.alias_builds += 1
+
+    def _step_remote(self) -> None:
+        """One sync round over the wire (DESIGN.md §11): the
+        ``_step_python`` loop with the server side of each phase replaced
+        by protocol messages — pull is a versioned cache refresh (the
+        server answers NOT_MODIFIED within the staleness bound), push is
+        a delta frame finalized at the server's round barrier (summed
+        there in ascending client id — the reference loop's op order),
+        projection runs server-side on the same cadence, and the
+        read-my-writes lag is this process's own rows.  RNG streams key
+        on the *global* client id, so M worker processes jointly
+        reproduce the single-process run — bit-exactly under BSP."""
+        fam, cfg, tcfg = self.family, self.cfg, self.tcfg
+        r = self.round_idx
+        pol = self.remote.policy
+        snapshot_new, version, refreshed = self.remote.pull(
+            r, self._tcp_version if pol.caches else None)
+        if refreshed:
+            self._tcp_snapshot = snapshot_new
+            self._tcp_version = version
+            self._host_version = version
+            if self._lag is not None:
+                # Fresh cache already contains every applied push: zero
+                # the read-my-writes accumulators (srv.reset_lag).
+                self._lag = {
+                    c: {n: jnp.zeros_like(v) for n, v in row.items()}
+                    for c, row in self._lag.items()}
+        snapshot = self._tcp_snapshot
+        self._refresh_alias_tcp(refreshed)
+
+        for c in self.local_clients:
+            t, m = self.shards[c]
+            lays = self.layouts[c] if self.layouts is not None else None
+            local_shared = (fam.apply_delta(snapshot, self._lag[c])
+                            if self._lag is not None else snapshot)
+            acc = None
+            for s in range(tcfg.tau):                # sample (τ sweeps)
+                k = jax.random.fold_in(self.key, r * 131 + c * 17 + s)
+                self.locals_[c], d = fam.sweep(
+                    cfg, self.locals_[c], local_shared, self._tcp_tables,
+                    self._tcp_stale, t, m, k, method=tcfg.method,
+                    layout=tcfg.layout, sorted_layouts=lays)
+                local_shared = fam.apply_delta(local_shared, d)
+                acc = d if acc is None else {n: acc[n] + d[n] for n in d}
+            self.locals_[c] = fam.local_project(self.locals_[c])
+            if self._lag is not None:
+                # Pre-filter delta rides in the client's own lag row until
+                # the next refresh (read-my-writes).
+                self._lag[c] = {n: self._lag[c][n] + acc[n] for n in acc}
+            kf = jax.random.fold_in(self.key, 7000 + r * 131 + c)
+            acc, self.residuals[c] = round_mod.filter_push(   # filter
+                fam, acc, tcfg.filter, kf, self.residuals[c])
+            self.remote.push(r, c, acc)              # push (delta frame)
+        self.round_idx += 1
+
+    def close(self) -> None:
+        """Release the wire connections (tcp transport); no-op inproc."""
+        if getattr(self, "remote", None) is not None:
+            self.remote.close()
 
     def _step_python(self) -> None:
         """The PR-2 reference loop: one jitted dispatch per sweep/op and a
@@ -586,6 +793,10 @@ class Trainer:
         run RNG key, and the host-side schedule scalars (round index,
         cache-version mirror, retry/build counters) as int32 leaves —
         everything a bit-exact BSP resume needs."""
+        if self.remote is not None:
+            raise NotImplementedError(
+                "trainer snapshots are inproc-only: over tcp the shard "
+                "servers own the canonical state")
         hv = -1 if self._host_version is None else self._host_version
         return {
             "locals": tuple(self.locals_),
@@ -714,6 +925,12 @@ class Trainer:
         so the canonical counts always match the assignments.
         """
         fam, cfg = self.family, self.cfg
+        if self.remote is not None and \
+                len(self.local_clients) != self.tcfg.n_clients:
+            raise RuntimeError(
+                "consistency_error needs every client's locals; this "
+                "worker only runs clients "
+                f"{self.local_clients} of {self.tcfg.n_clients}")
         totals: dict[str, Array] = {}
         for (t, m), loc in zip(self.shards, self.locals_):
             for n, v in fam.count_stats(cfg, t, m, loc).items():

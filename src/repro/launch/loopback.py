@@ -1,0 +1,317 @@
+"""Multi-process loopback launcher for the out-of-process parameter
+server (DESIGN.md §11).
+
+Spawns N shard-server processes (``python -m repro.net.server``) and M
+client processes (``python -m repro.net.client``) on 127.0.0.1, waits
+for the servers to publish their addresses, timeout-guards the whole
+run, and collects exit codes, logs, and per-client result JSONs.  This
+is the paper's deployment shape in miniature: parameter-server
+*processes* serving sampler *processes* over a real network stack (the
+loopback interface), with the same frames a cross-machine deployment
+would use.
+
+``--smoke`` runs the CI end-to-end check: 1 shard server + 2 train
+client processes (one global client each), then an in-process reference
+``Trainer`` on the identical corpus/key, and asserts the BSP result is
+bit-exact (checksum equality across the socket).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+
+@dataclass
+class ProcResult:
+    """Exit status + captured output of one launched process."""
+    name: str
+    args: list[str]
+    returncode: int
+    stdout: str
+    stderr: str
+    result: dict[str, Any] | None = None  # parsed --out JSON, clients only
+
+
+@dataclass
+class LaunchResult:
+    addresses: list[str]
+    servers: list[ProcResult] = field(default_factory=list)
+    clients: list[ProcResult] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return all(p.returncode == 0 for p in self.servers + self.clients)
+
+    def failures(self) -> list[ProcResult]:
+        return [p for p in self.servers + self.clients if p.returncode != 0]
+
+
+def _python() -> list[str]:
+    return [sys.executable]
+
+
+def _env() -> dict[str, str]:
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def _wait_address_file(path: str, proc: subprocess.Popen,
+                       timeout: float) -> list[str]:
+    """Poll for the server's address file; fail fast if the server died."""
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if proc.poll() is not None:
+            raise RuntimeError(
+                f"server process exited early (code {proc.returncode}) "
+                f"before publishing addresses")
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    data = json.load(f)
+                return list(data["addresses"])
+            except (json.JSONDecodeError, KeyError):
+                pass  # torn read before os.replace — retry
+        time.sleep(0.05)
+    raise TimeoutError(f"server did not publish {path} "
+                       f"within {timeout:.0f}s")
+
+
+def _send_shutdown(addresses: list[str], timeout: float = 10.0) -> None:
+    """Tell each shard server to stop.  Client processes can't do this —
+    none of them knows it is the last one out — so the launcher owns
+    server lifetime."""
+    import socket
+
+    from repro.net import protocol
+
+    for addr in addresses:
+        host, port = addr.rsplit(":", 1)
+        try:
+            sock = socket.create_connection((host, int(port)),
+                                            timeout=timeout)
+        except OSError:
+            continue  # already down
+        conn = protocol.FramedConnection(sock)
+        try:
+            conn.request(protocol.MsgType.SHUTDOWN, {},
+                         expect=(protocol.MsgType.OK,))
+        except (protocol.ProtocolError, OSError):
+            pass
+        finally:
+            conn.close()
+
+
+def _finish(proc: subprocess.Popen, name: str, args: list[str],
+            timeout: float) -> ProcResult:
+    try:
+        out, err = proc.communicate(timeout=timeout)
+    except subprocess.TimeoutExpired:
+        proc.kill()
+        out, err = proc.communicate()
+        return ProcResult(name, args, returncode=-9,
+                          stdout=out or "", stderr=(err or "")
+                          + f"\n[launcher] killed after {timeout:.0f}s "
+                            "timeout")
+    return ProcResult(name, args, proc.returncode, out or "", err or "")
+
+
+def launch_loopback(*,
+                    family: str = "lda",
+                    vocab_size: int = 64,
+                    n_topics: int = 4,
+                    n_shards: int = 1,
+                    client_sets: tuple[tuple[int, ...], ...] = ((0,), (1,)),
+                    mode: str = "train",
+                    n_rounds: int = 3,
+                    tau: int = 1,
+                    consistency: str = "bsp",
+                    n_docs: int = 16,
+                    doc_len: int = 12,
+                    corpus_seed: int = 3,
+                    seed: int = 0,
+                    timeout: float = 300.0,
+                    workdir: str | None = None,
+                    extra_client_args: tuple[str, ...] = (),
+                    ) -> LaunchResult:
+    """Spawn 1 server process hosting ``n_shards`` shards plus one client
+    process per entry of ``client_sets`` and wait for everything.
+
+    Returns a :class:`LaunchResult`; raises nothing on nonzero client
+    exits (inspect ``.ok`` / ``.failures()``) but does raise if the
+    server never comes up."""
+    n_clients = sum(len(cs) for cs in client_sets)
+    own_tmp = workdir is None
+    tmp = tempfile.mkdtemp(prefix="loopback_") if own_tmp else workdir
+    addr_file = os.path.join(tmp, "addresses.json")
+
+    server_args = _python() + [
+        "-m", "repro.net.server",
+        "--family", family,
+        "--vocab-size", str(vocab_size),
+        "--n-clients", str(n_clients),
+        "--n-shards", str(n_shards),
+        "--consistency", consistency,
+        "--barrier-timeout", str(timeout),
+        "--address-file", addr_file,
+    ]
+    env = _env()
+    server = subprocess.Popen(server_args, stdout=subprocess.PIPE,
+                              stderr=subprocess.PIPE, text=True, env=env)
+    try:
+        addresses = _wait_address_file(addr_file, server, timeout)
+    except Exception:
+        server.kill()
+        out, err = server.communicate()
+        sys.stderr.write(f"[launcher] server stdout:\n{out}\n"
+                         f"[launcher] server stderr:\n{err}\n")
+        raise
+
+    result = LaunchResult(addresses=addresses)
+    client_procs: list[tuple[subprocess.Popen, str, list[str], str]] = []
+    for i, cs in enumerate(client_sets):
+        out_json = os.path.join(tmp, f"client{i}.json")
+        cargs = _python() + [
+            "-m", "repro.net.client",
+            "--mode", mode,
+            "--addrs", ",".join(addresses),
+            "--clients", ",".join(str(c) for c in cs),
+            "--family", family,
+            "--vocab-size", str(vocab_size),
+            "--n-topics", str(n_topics),
+            "--n-clients", str(n_clients),
+            "--n-rounds", str(n_rounds),
+            "--tau", str(tau),
+            "--consistency", consistency,
+            "--n-docs", str(n_docs),
+            "--doc-len", str(doc_len),
+            "--corpus-seed", str(corpus_seed),
+            "--seed", str(seed),
+            "--timeout", str(timeout),
+            "--out", out_json,
+        ] + list(extra_client_args)
+        proc = subprocess.Popen(cargs, stdout=subprocess.PIPE,
+                                stderr=subprocess.PIPE, text=True, env=env)
+        client_procs.append((proc, f"client{i}", cargs, out_json))
+
+    deadline = time.monotonic() + timeout
+    for proc, name, cargs, out_json in client_procs:
+        left = max(1.0, deadline - time.monotonic())
+        pr = _finish(proc, name, cargs, left)
+        if pr.returncode == 0 and os.path.exists(out_json):
+            with open(out_json) as f:
+                pr.result = json.load(f)
+        result.clients.append(pr)
+
+    _send_shutdown(addresses)
+    # A hung server must not hang the launcher: bounded wait, then kill.
+    try:
+        out, err = server.communicate(timeout=30.0)
+        rc = server.returncode
+    except subprocess.TimeoutExpired:
+        server.kill()
+        out, err = server.communicate()
+        rc = -9
+    result.servers.append(ProcResult("server", server_args, rc,
+                                     out or "", err or ""))
+    return result
+
+
+def _smoke() -> int:
+    """CI smoke: loopback BSP must be bit-exact with in-process BSP."""
+    import numpy as np
+
+    t0 = time.perf_counter()
+    res = launch_loopback(client_sets=((0,), (1,)), n_rounds=3,
+                          timeout=240.0)
+    if not res.ok:
+        for p in res.failures():
+            sys.stderr.write(f"[smoke] {p.name} exit {p.returncode}\n"
+                             f"--- stdout ---\n{p.stdout}\n"
+                             f"--- stderr ---\n{p.stderr}\n")
+        return 1
+
+    # Both client processes must agree on the final state...
+    sums = [p.result["checksums"] for p in res.clients]
+    if sums[0] != sums[1]:
+        sys.stderr.write(f"[smoke] client checksums disagree: {sums}\n")
+        return 1
+
+    # ...and match an in-process reference run exactly.
+    import jax
+    from repro.core import family as fam_mod
+    from repro.core.lda import LDAConfig
+    from repro.data.synthetic import CorpusConfig, make_topic_corpus
+    from repro.engine.trainer import Trainer, TrainerConfig
+    from repro.net.client import _checksum
+
+    tokens, mask, _ = make_topic_corpus(CorpusConfig(
+        n_topics=4, vocab_size=64, n_docs=16, doc_len=12, seed=3))
+    ref = Trainer(LDAConfig(n_topics=4, vocab_size=64), tokens, mask,
+                  config=TrainerConfig(n_clients=2, tau=1),
+                  key=jax.random.PRNGKey(0))
+    for _ in range(3):
+        ref.step()
+    ref_sums = {n: _checksum(np.asarray(v)) for n, v in
+                fam_mod.get("lda").stats_dict(ref.shared).items()}
+    if ref_sums != sums[0]:
+        sys.stderr.write(f"[smoke] loopback != in-process: "
+                         f"{sums[0]} vs {ref_sums}\n")
+        return 1
+    dt = time.perf_counter() - t0
+    print(f"loopback smoke OK: 1 server + 2 client procs, BSP bit-exact "
+          f"with in-process ({dt:.1f}s)")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="loopback multi-process launcher (repro.net)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the CI end-to-end parity smoke and exit")
+    ap.add_argument("--family", default="lda")
+    ap.add_argument("--vocab-size", type=int, default=64)
+    ap.add_argument("--n-topics", type=int, default=4)
+    ap.add_argument("--n-shards", type=int, default=1)
+    ap.add_argument("--n-client-procs", type=int, default=2)
+    ap.add_argument("--clients-per-proc", type=int, default=1)
+    ap.add_argument("--mode", choices=("train", "stress"), default="train")
+    ap.add_argument("--n-rounds", type=int, default=3)
+    ap.add_argument("--tau", type=int, default=1)
+    ap.add_argument("--consistency", default="bsp")
+    ap.add_argument("--timeout", type=float, default=300.0)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        return _smoke()
+
+    sets = tuple(
+        tuple(range(i * args.clients_per_proc,
+                    (i + 1) * args.clients_per_proc))
+        for i in range(args.n_client_procs))
+    res = launch_loopback(
+        family=args.family, vocab_size=args.vocab_size,
+        n_topics=args.n_topics, n_shards=args.n_shards, client_sets=sets,
+        mode=args.mode, n_rounds=args.n_rounds, tau=args.tau,
+        consistency=args.consistency, timeout=args.timeout)
+    for p in res.servers + res.clients:
+        status = "ok" if p.returncode == 0 else f"EXIT {p.returncode}"
+        print(f"{p.name}: {status}")
+        if p.returncode != 0:
+            sys.stderr.write(f"--- {p.name} stdout ---\n{p.stdout}\n"
+                             f"--- {p.name} stderr ---\n{p.stderr}\n")
+    return 0 if res.ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

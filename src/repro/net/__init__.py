@@ -1,0 +1,43 @@
+"""Out-of-process parameter server: the wire layer (DESIGN.md §11).
+
+The paper's system is parameter-server *processes* serving sampler
+*machines* over a network.  This package is that split as code:
+
+* :mod:`repro.net.protocol` — the framed binary wire protocol: magic
+  cookie + protocol version + message type + length-prefixed payload,
+  exact-read ``recv_all``, npz-style array payloads, and the
+  :class:`~repro.net.protocol.ProtocolError` contract (malformed frames
+  fail loudly and close the connection — they never hang a peer or
+  corrupt shard state).
+* :mod:`repro.net.server` — :class:`~repro.net.server.ShardServer` /
+  :func:`~repro.net.server.serve_shards`: a process hosting one or more
+  vocabulary shards of the canonical ``ServerState`` over TCP, applying
+  pushes at deterministic round barriers (bit-exact with the in-process
+  BSP path) and answering SSP pulls with ``NOT_MODIFIED`` when the
+  client's cached version is within the staleness bound.
+* :mod:`repro.net.client` — :class:`~repro.net.client.RemoteParameterServer`:
+  the client half, implementing the pull/push/project/snapshot surface of
+  :class:`repro.core.server.ParameterServer` over one or more shard
+  servers, so ``engine.Trainer`` runs unchanged over either backend via
+  ``TrainerConfig(transport="inproc" | "tcp")``.
+
+The in-process path survives as the zero-copy fast path behind the same
+interface; the multi-process loopback launcher lives in
+``repro.launch.loopback``.
+"""
+
+from repro.net.client import RemoteParameterServer, RemoteError
+from repro.net.protocol import (ConnectionClosed, MsgType, ProtocolError,
+                                PROTOCOL_VERSION)
+from repro.net.server import ShardServer, serve_shards
+
+__all__ = [
+    "ConnectionClosed",
+    "MsgType",
+    "PROTOCOL_VERSION",
+    "ProtocolError",
+    "RemoteError",
+    "RemoteParameterServer",
+    "ShardServer",
+    "serve_shards",
+]

@@ -1,0 +1,453 @@
+"""The sampler-machine side of the wire: :class:`RemoteParameterServer`.
+
+Implements the pull/push/project/snapshot surface of
+:class:`repro.core.server.ParameterServer` over one or more
+:class:`repro.net.server.ShardServer` processes, so ``engine.Trainer``
+drives either backend through ``TrainerConfig(transport="inproc"|"tcp")``
+without touching the round semantics.
+
+Assembly is the client's half of the bit-exactness argument: sharded
+statistics arrive as exact row slices and are concatenated in row order
+(pure concat, no arithmetic — the same argument as
+``ParameterServer.assemble``); the aggregate statistics (n_k, m_k, s_k)
+are then re-derived from the assembled rows with the family's
+``Aggregate`` tuples via ``jnp.sum`` — the identical op the in-process
+``apply_delta`` / ``projection.project`` use — so a pulled snapshot is
+bit-for-bit the dense pytree the in-process server would have handed
+over.  Remaining unsharded stats (replicated parameters) come from the
+row-0 server's merged aux.
+
+The SSP read-my-writes lag rides here, not on the server: each local
+client holds its *own* lag row (the pre-filter deltas it applied since
+the last refresh — the server only ever sees post-filter pushes, so the
+pre-filter lag cannot be reconstructed server-side), reset on every
+refreshing pull.  The server keeps the clocks and answers NOT_MODIFIED.
+
+The module is also the client *process* entrypoint
+(``python -m repro.net.client``) used by ``repro.launch.loopback``:
+
+* ``--mode train``  — regenerate the deterministic synthetic corpus,
+  run a ``Trainer(transport="tcp")`` over the given servers for the
+  given subset of global client ids, and write a result JSON (checksums
+  of the final shared statistics, throughput, wire counters);
+* ``--mode stress`` — no trainer: hammer the servers with deterministic
+  integer delta pushes and versioned pulls for N rounds (the
+  concurrency stress harness; the launcher verifies the final state is
+  exactly init + Σ deltas).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import socket
+import time
+from typing import Any, Sequence
+
+import numpy as np
+
+from repro.core import family as family_mod
+from repro.core import server as server_mod
+from repro.net import protocol
+from repro.net import server as net_server
+from repro.net.protocol import MsgType, ProtocolError
+
+
+class RemoteError(ProtocolError):
+    """The server answered ERROR (application-level failure)."""
+
+
+def _connect(addr: str, timeout: float) -> protocol.FramedConnection:
+    host, _, port = addr.rpartition(":")
+    sock = socket.create_connection((host, int(port)), timeout=timeout)
+    sock.settimeout(timeout)
+    return protocol.FramedConnection(sock)
+
+
+class RemoteParameterServer:
+    """Client-side handle on a set of shard servers (one TCP connection
+    per server), presenting the in-process server's API surface."""
+
+    def __init__(self, addrs: Sequence[str], *, family, n_clients: int,
+                 vocab_size: int, consistency: str = "bsp",
+                 timeout: float = 60.0):
+        self.family = (family_mod.get(family) if isinstance(family, str)
+                       else family)
+        self.n_clients = n_clients
+        self.vocab_size = vocab_size
+        self.policy = server_mod.make_consistency(consistency)
+        self.timeout = timeout
+        self._conns: list[protocol.FramedConnection] = []
+        self._rows: list[tuple[int, int]] = []
+        self.project_every: int | None = None
+        hello = {"family": self.family.name, "vocab_size": vocab_size,
+                 "n_clients": n_clients, "consistency": self.policy.key}
+        pairs = []
+        for addr in addrs:
+            conn = _connect(addr, timeout)
+            try:
+                _, meta, _ = conn.request(MsgType.HELLO, hello,
+                                          expect=(MsgType.WELCOME,))
+            except ProtocolError as e:
+                conn.close()
+                for c, _r in pairs:
+                    c.close()
+                raise RemoteError(f"handshake with {addr} failed: {e}") \
+                    from e
+            pairs.append((conn, tuple(meta["rows"])))
+            self.project_every = meta.get("project_every",
+                                          self.project_every)
+        # Servers sorted by row range; together they must tile [0, V).
+        pairs.sort(key=lambda p: p[1][0])
+        cursor = 0
+        for conn, (lo, hi) in pairs:
+            if lo != cursor:
+                for c, _r in pairs:
+                    c.close()
+                raise RemoteError(
+                    f"server row ranges do not tile the vocabulary: "
+                    f"gap/overlap at row {cursor} (next range [{lo}, {hi}))")
+            cursor = hi
+            self._conns.append(conn)
+            self._rows.append((lo, hi))
+        if cursor != vocab_size:
+            self.close()
+            raise RemoteError(f"server row ranges cover [0, {cursor}) "
+                              f"but vocab_size={vocab_size}")
+        self._sharded: tuple[str, ...] = ()
+
+    @property
+    def n_servers(self) -> int:
+        return len(self._conns)
+
+    # ----------------------------------------------------------- plumbing
+    def _split_rows(self, stats: dict[str, np.ndarray],
+                    names: Sequence[str]) -> list[dict[str, np.ndarray]]:
+        return [{n: np.asarray(stats[n])[lo:hi] for n in names}
+                for lo, hi in self._rows]
+
+    def _assemble(self, metas: list[dict], parts: list[dict]):
+        """Concat row slices per sharded stat (exact), take unsharded aux
+        from the row-0 server, re-derive the aggregates with the family's
+        C2 tuples — the in-process op order."""
+        import jax.numpy as jnp  # deferred: the stress path never needs jax
+
+        sharded = tuple(metas[0]["sharded"])
+        stats: dict[str, Any] = {}
+        for n in sharded:
+            vs = [p[n] for p in parts]
+            stats[n] = np.concatenate(vs, 0) if len(vs) > 1 else vs[0]
+        for n, v in parts[0].items():
+            if n not in sharded:
+                stats[n] = v
+        agg_outs = set()
+        for agg in self.family.aggregates:
+            stats[agg.out] = jnp.asarray(stats[agg.src]).sum(agg.axis)
+            agg_outs.add(agg.out)
+        stats = {n: (jnp.asarray(v) if n not in agg_outs else v)
+                 for n, v in stats.items()}
+        return self.family.shared_from_dict(stats)
+
+    def _request_all(self, msg_type: MsgType, metas: list[dict],
+                     arrays_list: list[dict] | None = None, *,
+                     expect: tuple[MsgType, ...]):
+        out = []
+        for i, conn in enumerate(self._conns):
+            arrays = None if arrays_list is None else arrays_list[i]
+            out.append(conn.request(msg_type, metas[i], arrays,
+                                    expect=expect))
+        return out
+
+    # ------------------------------------------------------------- protocol
+    def init_push(self, client_id: int, shared) -> None:
+        """Send one client's initial statistics (the server merges all
+        ``n_clients`` in ascending client id before serving any pull)."""
+        stats = {n: np.asarray(v)
+                 for n, v in self.family.stats_dict(shared).items()}
+        sharded = net_server.sharded_stat_names(self.family, stats,
+                                                self.vocab_size)
+        self._sharded = sharded
+        aux = {n: stats[n] for n in stats if n not in sharded}
+        arrays_list = []
+        for part in self._split_rows(stats, sharded):
+            part = dict(part)
+            part.update(aux)
+            arrays_list.append(part)
+        meta = {"client": int(client_id), "sharded": list(sharded)}
+        self._request_all(MsgType.INIT, [meta] * self.n_servers,
+                          arrays_list, expect=(MsgType.OK,))
+
+    def pull(self, round_idx: int, cached_version: int | None = None
+             ) -> tuple[Any, int, bool]:
+        """Versioned cache refresh for ``round_idx``.
+
+        Returns ``(shared, version, refreshed)``; ``shared`` is None when
+        every server answered NOT_MODIFIED (keep sampling the cache).  A
+        split decision (some servers refresh, some not) is a protocol
+        violation — the policy predicate is deterministic."""
+        meta = {"round": int(round_idx)}
+        if cached_version is not None:
+            meta["cached_version"] = int(cached_version)
+        replies = self._request_all(
+            MsgType.PULL, [meta] * self.n_servers,
+            expect=(MsgType.STATE, MsgType.NOT_MODIFIED))
+        kinds = {mt for mt, _, _ in replies}
+        if kinds == {MsgType.NOT_MODIFIED}:
+            return None, int(cached_version), False
+        if len(kinds) != 1:
+            raise RemoteError("servers split on NOT_MODIFIED — "
+                              "inconsistent staleness policies")
+        metas = [m for _, m, _ in replies]
+        parts = [a for _, _, a in replies]
+        return self._assemble(metas, parts), int(metas[0]["version"]), True
+
+    def pull_keys(self, names: Sequence[str] | None = None,
+                  lo: int = 0, hi: int | None = None
+                  ) -> dict[str, np.ndarray]:
+        """Addressed row-range pull from the canonical store (what crosses
+        the wire when a client only holds part of the vocabulary)."""
+        hi = self.vocab_size if hi is None else hi
+        meta = {"lo": int(lo), "hi": int(hi)}
+        if names is not None:
+            meta["names"] = list(names)
+        replies = self._request_all(MsgType.PULL_KEYS,
+                                    [meta] * self.n_servers,
+                                    expect=(MsgType.STATE,))
+        out: dict[str, list[np.ndarray]] = {}
+        for _, m, arrays in replies:
+            if m["rows"][0] >= m["rows"][1]:
+                continue
+            for n, v in arrays.items():
+                out.setdefault(n, []).append(v)
+        return {n: (np.concatenate(vs, 0) if len(vs) > 1 else vs[0])
+                for n, vs in out.items()}
+
+    def push(self, round_idx: int, client_id: int,
+             deltas: dict[str, Any]) -> None:
+        """One client's delta frame for ``round_idx`` (row-sliced per
+        server; the server finalizes the round at the barrier)."""
+        nps = {n: np.asarray(v) for n, v in deltas.items()}
+        names = tuple(nps)
+        meta = {"round": int(round_idx), "client": int(client_id)}
+        self._request_all(MsgType.PUSH, [meta] * self.n_servers,
+                          self._split_rows(nps, names),
+                          expect=(MsgType.OK,))
+
+    def project(self) -> None:
+        self._request_all(MsgType.PROJECT, [{}] * self.n_servers,
+                          expect=(MsgType.OK,))
+
+    def snapshot(self, min_round: int = 0):
+        """The canonical assembled statistics once every round below
+        ``min_round`` has been finalized (admin/eval view)."""
+        meta = {"min_round": int(min_round)}
+        replies = self._request_all(MsgType.SNAPSHOT,
+                                    [meta] * self.n_servers,
+                                    expect=(MsgType.STATE,))
+        return self._assemble([m for _, m, _ in replies],
+                              [a for _, _, a in replies])
+
+    def clock(self, min_round: int | None = None
+              ) -> tuple[int, np.ndarray]:
+        """(min server round across shards, per-client clocks).  With
+        ``min_round``, blocks until every shard has finalized it."""
+        meta = {} if min_round is None else {"min_round": int(min_round)}
+        replies = self._request_all(MsgType.CLOCK, [meta] * self.n_servers,
+                                    expect=(MsgType.OK,))
+        rounds = [m["server_round"] for _, m, _ in replies]
+        return min(rounds), np.asarray(replies[0][1]["clocks"])
+
+    def rejoin(self, client_id: int) -> None:
+        self._request_all(MsgType.REJOIN,
+                          [{"client": int(client_id)}] * self.n_servers,
+                          expect=(MsgType.OK,))
+
+    def server_stats(self) -> list[dict[str, Any]]:
+        return [m for _, m, _ in self._request_all(
+            MsgType.STATS, [{}] * self.n_servers, expect=(MsgType.OK,))]
+
+    def shutdown_servers(self) -> None:
+        for conn in self._conns:
+            try:
+                conn.request(MsgType.SHUTDOWN, {}, expect=(MsgType.OK,))
+            except (ProtocolError, OSError):
+                pass
+
+    # ----------------------------------------------------------- counters
+    def counters(self) -> dict[str, Any]:
+        """Aggregated per-connection wire counters (bytes in/out, RPC
+        count, p50/p99 RPC latency) — the bench artifact surface."""
+        per = [c.counters() for c in self._conns]
+        lat = sorted(x for c in self._conns for x in c.rpc_latency_s)
+
+        def pct(p: float) -> float:
+            if not lat:
+                return 0.0
+            return lat[min(len(lat) - 1,
+                           int(round(p * (len(lat) - 1))))] * 1e3
+
+        return {
+            "bytes_in": sum(c["bytes_in"] for c in per),
+            "bytes_out": sum(c["bytes_out"] for c in per),
+            "rpc_count": sum(c["rpc_count"] for c in per),
+            "rpc_p50_ms": pct(0.50),
+            "rpc_p99_ms": pct(0.99),
+            "per_connection": per,
+        }
+
+    def close(self) -> None:
+        for conn in self._conns:
+            conn.close()
+        self._conns = []
+
+    def __enter__(self) -> "RemoteParameterServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# Process entrypoint (repro.launch.loopback workers)
+# ---------------------------------------------------------------------------
+
+def _checksum(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
+def stress_delta(round_idx: int, client_id: int, shape: tuple[int, int]
+                 ) -> np.ndarray:
+    """Deterministic integer-valued delta for the stress harness: the
+    launcher recomputes Σ over (round, client) and asserts the final
+    store equals init + Σ exactly."""
+    v, k = shape
+    base = (round_idx * 131 + client_id * 17) % 7 + 1
+    col = (np.arange(v, dtype=np.float32)[:, None]
+           + np.arange(k, dtype=np.float32)[None, :])
+    return np.float32(base) + (col % 3)
+
+
+def _run_train(args) -> dict[str, Any]:
+    from repro.core import lda, pdp
+    from repro.data.synthetic import CorpusConfig, make_topic_corpus
+    from repro.engine.trainer import Trainer, TrainerConfig
+    import jax
+
+    tokens, mask, _ = make_topic_corpus(CorpusConfig(
+        n_topics=args.n_topics, vocab_size=args.vocab_size,
+        n_docs=args.n_docs, doc_len=args.doc_len, seed=args.corpus_seed))
+    if args.family == "lda":
+        cfg = lda.LDAConfig(n_topics=args.n_topics,
+                            vocab_size=args.vocab_size)
+    elif args.family == "pdp":
+        cfg = pdp.PDPConfig(n_topics=args.n_topics,
+                            vocab_size=args.vocab_size)
+    else:
+        raise SystemExit(f"unsupported family for the wire: {args.family}")
+    clients = tuple(int(c) for c in args.clients.split(","))
+    tcfg = TrainerConfig(
+        n_clients=args.n_clients, tau=args.tau, layout=args.layout,
+        consistency=args.consistency, project_every=args.project_every,
+        transport="tcp", server_addrs=tuple(args.addrs.split(",")),
+        local_clients=clients)
+    trainer = Trainer(cfg, tokens, mask, config=tcfg,
+                      key=jax.random.PRNGKey(args.seed))
+    t0 = time.perf_counter()
+    for _ in range(args.n_rounds):
+        trainer.step()
+    trainer._sync()
+    dt = time.perf_counter() - t0
+    shared = trainer.shared
+    stats = {n: np.asarray(v)
+             for n, v in trainer.family.stats_dict(shared).items()}
+    result = {
+        "mode": "train",
+        "clients": list(clients),
+        "rounds": args.n_rounds,
+        "rounds_per_s": args.n_rounds / max(dt, 1e-9),
+        "checksums": {n: _checksum(v) for n, v in stats.items()},
+        "sums": {n: float(v.sum()) for n, v in stats.items()},
+        "perplexity": trainer.perplexity(),
+        "counters": trainer.remote.counters(),
+    }
+    trainer.close()
+    return result
+
+
+def _run_stress(args) -> dict[str, Any]:
+    clients = tuple(int(c) for c in args.clients.split(","))
+    fam = family_mod.get(args.family)
+    remote = RemoteParameterServer(
+        args.addrs.split(","), family=fam, n_clients=args.n_clients,
+        vocab_size=args.vocab_size, consistency=args.consistency,
+        timeout=args.timeout)
+    shape = (args.vocab_size, args.n_topics)
+    zero = {n: np.zeros(shape, np.float32) for n in fam.delta_names}
+    aggs = {a.out for a in fam.aggregates}
+    init_stats = dict(zero)
+    for n in fam.shared_stats:
+        if n not in init_stats and n in aggs:
+            init_stats[n] = np.zeros((args.n_topics,), np.float32)
+    for c in clients:
+        remote.init_push(c, fam.shared_from_dict(init_stats))
+    version: int | None = None
+    for r in range(args.n_rounds):
+        _shared, v, refreshed = remote.pull(r, version)
+        if refreshed:
+            version = v
+        for c in clients:
+            d = stress_delta(r, c, shape)
+            remote.push(r, c, {n: d for n in fam.delta_names})
+    sr, _clocks = remote.clock(min_round=args.n_rounds)
+    final = remote.pull_keys(list(fam.delta_names))
+    result = {
+        "mode": "stress",
+        "clients": list(clients),
+        "rounds": args.n_rounds,
+        "server_round": sr,
+        "checksums": {n: _checksum(v) for n, v in final.items()},
+        "sums": {n: float(v.sum()) for n, v in final.items()},
+        "counters": remote.counters(),
+    }
+    remote.close()
+    return result
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="parameter-server client process (repro.net)")
+    ap.add_argument("--mode", choices=("train", "stress"), default="train")
+    ap.add_argument("--addrs", required=True,
+                    help="comma-separated host:port shard servers")
+    ap.add_argument("--clients", required=True,
+                    help="comma-separated global client ids this process "
+                         "owns")
+    ap.add_argument("--family", default="lda")
+    ap.add_argument("--vocab-size", type=int, default=64)
+    ap.add_argument("--n-topics", type=int, default=4)
+    ap.add_argument("--n-clients", type=int, default=2)
+    ap.add_argument("--n-rounds", type=int, default=4)
+    ap.add_argument("--tau", type=int, default=1)
+    ap.add_argument("--layout", default="scan")
+    ap.add_argument("--consistency", default="bsp")
+    ap.add_argument("--project-every", type=int, default=1)
+    ap.add_argument("--n-docs", type=int, default=16)
+    ap.add_argument("--doc-len", type=int, default=12)
+    ap.add_argument("--corpus-seed", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--timeout", type=float, default=60.0)
+    ap.add_argument("--out", default=None, help="result JSON path")
+    args = ap.parse_args(argv)
+
+    result = _run_train(args) if args.mode == "train" else _run_stress(args)
+    payload = json.dumps(result, indent=2, sort_keys=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(payload)
+    print(payload, flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,588 @@
+"""The parameter-server process role (paper §5.2 over a real transport).
+
+A :class:`ShardServer` hosts one contiguous vocabulary row-range
+``[row_lo, row_hi)`` of the shared sufficient statistics over TCP,
+speaking :mod:`repro.net.protocol`.  ``serve_shards`` stands up the
+``n_shards`` row-range servers of a :class:`repro.core.server.ShardSpec`
+partition in one process (one listener + one handler thread per
+connection each).
+
+Bit-exactness with the in-process :class:`~repro.core.server.ParameterServer`
+is the design constraint, not an afterthought; the store mirrors the
+in-process arithmetic exactly:
+
+* the canonical store is the plain dict of row-sliced sharded statistics
+  (``n_wk[lo:hi]``, …); every mutation is elementwise, and elementwise
+  ops on a row slice equal the same ops on the dense array restricted to
+  those rows — so any shard count is bit-exact with the dense pytree,
+  the same argument as DESIGN.md §9's sharded store;
+* INIT merges per-client initial statistics in **ascending client id**
+  (fold-left), the exact order of ``Trainer._merge_shared``;
+* pushes buffer per ``(round, client)`` and a round finalizes only when
+  all ``n_clients`` deltas are present (the BSP barrier); the round
+  total is summed in ascending client order — the op order of the
+  reference loop's ``total_delta`` accumulation — then applied once;
+* projection applies the family's elementwise shared rules
+  (``repro.core.projection``) to the row slices on the ``project_every``
+  cadence, right after the round's push — aggregates (n_k, m_k, s_k) are
+  **never** stored here; clients re-derive them from the assembled rows,
+  which is exactly where the in-process server's ``apply_delta`` /
+  ``project`` get them from.
+
+Consistency policies map onto the wire as the ISSUE specifies: a PULL
+carries the client's cached version and the server answers NOT_MODIFIED
+when ``policy.needs_refresh(round, version)`` is False (SSP's versioned
+stale cache — the client keeps sampling its cache, up to ``bound``
+rounds ahead); a refreshing PULL blocks until the barrier has finalized
+every earlier round; async pushes apply immediately in arrival order
+(Gauss-Seidel, no parity guarantee across process interleavings) and
+async pulls never block.  Per-client clocks live server-side; the
+read-my-writes lag rides at the client edge (``RemoteParameterServer``
+holds each local client's own lag row — the server only ever sees
+post-filter deltas, so the pre-filter lag *cannot* be reconstructed
+here).
+
+Failure containment: a malformed frame (bad magic, bad version,
+oversized/negative length, truncated payload, undecodable npz) raises
+:class:`~repro.net.protocol.ProtocolError` inside that connection's
+handler thread, which sends a best-effort ERROR frame and closes *that
+connection only* — shard state is mutated only after a frame fully
+decodes, and only under the server lock, so a fuzzed connection can
+never corrupt the store or wedge the barrier for healthy clients.
+Blocking waits (barrier pulls, SNAPSHOT/CLOCK with ``min_round``) are
+bounded by ``barrier_timeout`` and answer ERROR instead of hanging.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import socket
+import threading
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.core import family as family_mod
+from repro.core import projection
+from repro.core import server as server_mod
+from repro.net import protocol
+from repro.net.protocol import MsgType, ProtocolError
+
+
+def sharded_stat_names(family, stats: dict[str, Any],
+                       vocab_size: int) -> tuple[str, ...]:
+    """The statistics the wire row-shards: 2-D with a leading vocabulary
+    dimension — the same predicate as ``ParameterServer._is_sharded``, so
+    both transports partition identically."""
+    return tuple(n for n, v in stats.items()
+                 if np.ndim(v) == 2 and np.shape(v)[0] == vocab_size)
+
+
+class _BarrierTimeout(RuntimeError):
+    """A bounded server-side wait expired (slow/dead peer)."""
+
+
+class ShardServer:
+    """One row-range shard of the parameter server, served over TCP.
+
+    The server is model-light: it needs the family only for its stat
+    *names*, merge rules, and elementwise projection rules — never for
+    sampling, alias tables, or evaluation (those are client-side), so a
+    server process is cheap and stateless beyond the store.
+    """
+
+    def __init__(self, family_name: str, *, vocab_size: int,
+                 n_clients: int, rows: tuple[int, int] | None = None,
+                 consistency: str = "bsp", project_every: int = 1,
+                 host: str = "127.0.0.1", port: int = 0,
+                 barrier_timeout: float = 60.0):
+        self.family = family_mod.get(family_name)
+        if type(self.family).post_round is not family_mod.ModelFamily.post_round:
+            raise NotImplementedError(
+                f"family {family_name!r} overrides post_round (cross-client "
+                "auxiliary resampling needs every client's locals at the "
+                "barrier) — not servable over the wire yet; use the "
+                "in-process transport")
+        self.family_name = family_name
+        self.vocab_size = vocab_size
+        self.n_clients = n_clients
+        self.rows = (0, vocab_size) if rows is None else (int(rows[0]),
+                                                          int(rows[1]))
+        if not 0 <= self.rows[0] < self.rows[1] <= vocab_size:
+            raise ValueError(f"bad row range {self.rows} for V={vocab_size}")
+        self.policy = server_mod.make_consistency(consistency)
+        self.project_every = project_every
+        self.barrier_timeout = barrier_timeout
+
+        self._cond = threading.Condition()
+        # Canonical row-sliced store + unsharded aux (merged at INIT,
+        # served verbatim — clients re-derive the aggregate entries).
+        self._store: dict[str, np.ndarray] | None = None
+        self._aux: dict[str, np.ndarray] = {}
+        self._sharded: tuple[str, ...] = ()
+        self._init_parts: dict[int, tuple[dict, dict]] = {}
+        self._pending: dict[int, dict[int, dict[str, np.ndarray]]] = {}
+        self._round = 0
+        self._clocks = np.zeros((n_clients,), np.int64)
+        # Elementwise shared rules whose operands are all row-sharded —
+        # the only rules a row-range can apply locally (aggregates are
+        # client-side); resolved once the stat names are known.
+        self._rules: tuple[projection.Rule, ...] = ()
+        self._stop = False
+        self._protocol_errors = 0
+        self._latency_s: list[float] = []
+        self._conn_counters: list[dict[str, Any]] = []
+        self._threads: list[threading.Thread] = []
+
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, port))
+        self._listener.listen(max(16, 2 * n_clients))
+        self.address: tuple[str, int] = self._listener.getsockname()[:2]
+        self._accept_thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "ShardServer":
+        t = threading.Thread(target=self._accept_loop,
+                             name=f"shard-accept-{self.address[1]}",
+                             daemon=True)
+        t.start()
+        self._accept_thread = t
+        return self
+
+    def close(self) -> None:
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=5.0)
+
+    def __enter__(self) -> "ShardServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ----------------------------------------------------------- accept/IO
+    def _accept_loop(self) -> None:
+        self._listener.settimeout(0.2)
+        while not self._stop:
+            try:
+                sock, _addr = self._listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            t = threading.Thread(target=self._serve_conn, args=(sock,),
+                                 daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _serve_conn(self, sock: socket.socket) -> None:
+        conn = protocol.FramedConnection(sock)
+        try:
+            while not self._stop:
+                try:
+                    mt, meta, arrays = conn.recv()
+                except protocol.ConnectionClosed:
+                    break
+                t0 = time.perf_counter()
+                try:
+                    reply = self._dispatch(mt, meta, arrays)
+                except _BarrierTimeout as e:
+                    conn.send(MsgType.ERROR, {"error": str(e)})
+                    continue
+                except (KeyError, ValueError, TypeError,
+                        NotImplementedError) as e:
+                    # Well-framed but semantically bad request: tell the
+                    # peer why, then drop it — its state machine is off.
+                    conn.send(MsgType.ERROR,
+                              {"error": f"{type(e).__name__}: {e}"})
+                    break
+                conn.send(*reply)
+                with self._cond:
+                    self._latency_s.append(time.perf_counter() - t0)
+                if mt is MsgType.SHUTDOWN:
+                    with self._cond:
+                        self._stop = True
+                        self._cond.notify_all()
+                    break
+        except ProtocolError as e:
+            # Malformed frame: the stream can no longer be trusted.  The
+            # store was never touched (mutation happens only after a full
+            # decode), so only this connection dies.
+            with self._cond:
+                self._protocol_errors += 1
+            try:
+                conn.send(MsgType.ERROR, {"error": str(e)})
+            except OSError:
+                pass
+        finally:
+            with self._cond:
+                self._conn_counters.append(conn.counters())
+            conn.close()
+
+    # ------------------------------------------------------------ dispatch
+    def _dispatch(self, mt: MsgType, meta: dict, arrays: dict):
+        if mt is MsgType.HELLO:
+            return self._on_hello(meta)
+        if mt is MsgType.INIT:
+            return self._on_init(meta, arrays)
+        if mt is MsgType.PULL:
+            return self._on_pull(meta)
+        if mt is MsgType.PULL_KEYS:
+            return self._on_pull_keys(meta)
+        if mt is MsgType.PUSH:
+            return self._on_push(meta, arrays)
+        if mt is MsgType.PROJECT:
+            with self._cond:
+                self._require_store()
+                self._project_locked()
+            return MsgType.OK, {"server_round": self._round}, None
+        if mt is MsgType.SNAPSHOT:
+            return self._on_snapshot(meta)
+        if mt is MsgType.CLOCK:
+            return self._on_clock(meta)
+        if mt is MsgType.REJOIN:
+            return self._on_rejoin(meta)
+        if mt is MsgType.STATS:
+            return MsgType.OK, self.stats(), None
+        if mt is MsgType.SHUTDOWN:
+            return MsgType.OK, {"server_round": self._round}, None
+        raise ValueError(f"message type {mt.name} is not a request")
+
+    def _on_hello(self, meta: dict):
+        for field, mine in (("family", self.family_name),
+                            ("vocab_size", self.vocab_size),
+                            ("n_clients", self.n_clients),
+                            ("consistency", self.policy.key)):
+            theirs = meta.get(field)
+            if theirs != mine:
+                raise ValueError(
+                    f"handshake mismatch on {field}: client says "
+                    f"{theirs!r}, server has {mine!r}")
+        return MsgType.WELCOME, {
+            "rows": list(self.rows),
+            "vocab_size": self.vocab_size,
+            "n_clients": self.n_clients,
+            "consistency": self.policy.key,
+            "project_every": self.project_every,
+            "server_round": self._round,
+        }, None
+
+    def _on_init(self, meta: dict, arrays: dict):
+        c = int(meta["client"])
+        if not 0 <= c < self.n_clients:
+            raise ValueError(f"client id {c} out of range")
+        sharded = tuple(meta["sharded"])
+        lo, hi = self.rows
+        part = {n: arrays[n] for n in sharded}
+        for n, v in part.items():
+            if v.ndim != 2 or v.shape[0] != hi - lo:
+                raise ValueError(
+                    f"INIT stat {n!r} has shape {v.shape}; this server "
+                    f"owns rows [{lo}, {hi}) and expects ({hi - lo}, K)")
+        aux = {n: arrays[n] for n in arrays if n not in sharded}
+        with self._cond:
+            if self._store is not None:
+                raise ValueError("INIT after the store was sealed")
+            if self._sharded and self._sharded != sharded:
+                raise ValueError(f"INIT sharded-name mismatch: {sharded} "
+                                 f"vs {self._sharded}")
+            self._sharded = sharded
+            self._init_parts[c] = (part, aux)
+            if len(self._init_parts) == self.n_clients:
+                self._seal_store_locked()
+                self._cond.notify_all()
+        return MsgType.OK, {"server_round": self._round,
+                            "initialized": self._store is not None}, None
+
+    def _seal_store_locked(self) -> None:
+        """Merge the per-client initial statistics in ascending client id
+        — fold-left, replicated stats from the lowest id — the exact op
+        order of ``Trainer._merge_shared``."""
+        cids = sorted(self._init_parts)
+        part0, aux0 = self._init_parts[cids[0]]
+        store = {n: np.array(v) for n, v in part0.items()}
+        aux = {n: np.array(v) for n, v in aux0.items()}
+        for c in cids[1:]:
+            part, auxc = self._init_parts[c]
+            for n in store:
+                store[n] = store[n] + part[n]
+            for n in aux:
+                if n in self.family.replicated_stats or aux[n].shape == ():
+                    continue
+                aux[n] = aux[n] + auxc[n]
+        self._store, self._aux = store, aux
+        self._init_parts.clear()
+        names = set(self._sharded)
+        self._rules = tuple(
+            r for r in self.family.shared_rules
+            if {r.a} | ({r.b} if r.b else set()) <= names)
+
+    def _require_store(self) -> None:
+        if self._store is None:
+            self._wait_locked(lambda: self._store is not None,
+                              "store initialization (INIT barrier)")
+
+    def _wait_locked(self, pred, what: str) -> None:
+        deadline = time.monotonic() + self.barrier_timeout
+        while not pred():
+            if self._stop:
+                raise _BarrierTimeout("server is shutting down")
+            remaining = deadline - time.monotonic()
+            if remaining <= 0 or not self._cond.wait(timeout=remaining):
+                raise _BarrierTimeout(
+                    f"timed out after {self.barrier_timeout:.1f}s waiting "
+                    f"for {what} (server at round {self._round})")
+
+    def _on_pull(self, meta: dict):
+        r = int(meta["round"])
+        version = meta.get("cached_version")
+        with self._cond:
+            if self.policy.caches and version is not None \
+                    and not self.policy.needs_refresh(r, int(version)):
+                # The client's cached version is within the staleness
+                # bound: no wait, no payload — the SSP fast path.
+                return MsgType.NOT_MODIFIED, {
+                    "version": int(version), "server_round": self._round}, None
+            self._require_store()
+            if not self.policy.immediate:
+                # Barrier: a refreshing pull for round r sees the state
+                # with every round < r applied.  (A client pulls r before
+                # pushing r, so this can never deadlock the barrier.)
+                self._wait_locked(lambda: self._round >= r,
+                                  f"round barrier {r}")
+            arrays = {n: v for n, v in self._store.items()}
+            arrays.update(self._aux)
+            return MsgType.STATE, {
+                "version": r, "server_round": self._round,
+                "sharded": list(self._sharded), "rows": list(self.rows),
+            }, arrays
+
+    def _on_pull_keys(self, meta: dict):
+        with self._cond:
+            self._require_store()
+            names = meta.get("names") or list(self._sharded)
+            lo, hi = self.rows
+            glo = int(meta.get("lo", lo))
+            ghi = int(meta.get("hi", hi))
+            clo, chi = max(glo, lo), min(ghi, hi)
+            if clo >= chi:
+                arrays = {}
+            else:
+                arrays = {n: self._store[n][clo - lo:chi - lo]
+                          for n in names}
+            return MsgType.STATE, {
+                "version": self._round, "server_round": self._round,
+                "rows": [clo, chi], "sharded": list(names)}, arrays
+
+    def _on_push(self, meta: dict, arrays: dict):
+        r, c = int(meta["round"]), int(meta["client"])
+        if not 0 <= c < self.n_clients:
+            raise ValueError(f"client id {c} out of range")
+        lo, hi = self.rows
+        with self._cond:
+            self._require_store()
+            deltas = {}
+            for n in self._sharded:
+                v = arrays[n]
+                if v.shape != self._store[n].shape:
+                    raise ValueError(
+                        f"PUSH delta {n!r} has shape {v.shape}, store has "
+                        f"{self._store[n].shape} (rows [{lo}, {hi}))")
+                deltas[n] = v
+            if self.policy.immediate:
+                # Async: apply on arrival (Gauss-Seidel in arrival order).
+                for n in deltas:
+                    self._store[n] = self._store[n] + deltas[n]
+                self._clocks[c] += 1
+                done = int(self._clocks.min())
+                if self.project_every and done > self._round:
+                    for m in range(self._round, done):
+                        if m % self.project_every == 0:
+                            self._project_locked()
+                    self._round = done
+                elif done > self._round:
+                    self._round = done
+                self._cond.notify_all()
+            else:
+                if r < self._round:
+                    raise ValueError(
+                        f"PUSH for already-finalized round {r} "
+                        f"(server at {self._round})")
+                slot = self._pending.setdefault(r, {})
+                if c in slot:
+                    raise ValueError(f"duplicate PUSH (round {r}, "
+                                     f"client {c})")
+                slot[c] = deltas
+                self._advance_locked()
+            return MsgType.OK, {"server_round": self._round,
+                                "round": r, "client": c}, None
+
+    def _advance_locked(self) -> None:
+        """Finalize every consecutive complete round: sum the pending
+        deltas in ascending client order, apply once, advance clocks,
+        project on cadence — the reference loop's barrier, verbatim."""
+        while len(self._pending.get(self._round, {})) == self.n_clients:
+            r = self._round
+            slot = self._pending.pop(r)
+            total: dict[str, np.ndarray] | None = None
+            for c in sorted(slot):
+                d = slot[c]
+                total = ({n: np.array(v) for n, v in d.items()}
+                         if total is None
+                         else {n: total[n] + d[n] for n in total})
+            for n in total:
+                self._store[n] = self._store[n] + total[n]
+            self._clocks += 1
+            if self.project_every and r % self.project_every == 0:
+                self._project_locked()
+            self._round = r + 1
+            self._cond.notify_all()
+
+    def _project_locked(self) -> None:
+        """The family's elementwise shared rules on the row slices
+        (aggregate re-derivation is the client's assembly step)."""
+        if not self._rules:
+            return
+        stats = projection.project(dict(self._store), self._rules)
+        self._store = {n: np.asarray(stats[n]) for n in self._store}
+
+    def _on_snapshot(self, meta: dict):
+        min_round = int(meta.get("min_round", 0))
+        with self._cond:
+            self._require_store()
+            self._wait_locked(lambda: self._round >= min_round,
+                              f"snapshot barrier {min_round}")
+            arrays = {n: v for n, v in self._store.items()}
+            arrays.update(self._aux)
+            return MsgType.STATE, {
+                "version": self._round, "server_round": self._round,
+                "sharded": list(self._sharded), "rows": list(self.rows),
+                "clocks": [int(x) for x in self._clocks]}, arrays
+
+    def _on_clock(self, meta: dict):
+        min_round = meta.get("min_round")
+        with self._cond:
+            if min_round is not None:
+                self._wait_locked(lambda: self._round >= int(min_round),
+                                  f"clock barrier {min_round}")
+            return MsgType.OK, {
+                "server_round": self._round,
+                "clocks": [int(x) for x in self._clocks]}, None
+
+    def _on_rejoin(self, meta: dict):
+        c = int(meta["client"])
+        if not 0 <= c < self.n_clients:
+            raise ValueError(f"client id {c} out of range")
+        with self._cond:
+            # Read-my-writes lag lives at the client edge; server-side the
+            # rejoin clears any stale pending push the crashed incarnation
+            # left in unfinalized rounds (it will re-push after re-pulling).
+            for slot in self._pending.values():
+                slot.pop(c, None)
+            return MsgType.OK, {"server_round": self._round,
+                                "client": c}, None
+
+    # -------------------------------------------------------------- admin
+    def stats(self) -> dict[str, Any]:
+        with self._cond:
+            live = [dict(c) for c in self._conn_counters]
+            lat = sorted(self._latency_s)
+
+            def pct(p: float) -> float:
+                if not lat:
+                    return 0.0
+                return lat[min(len(lat) - 1,
+                               int(round(p * (len(lat) - 1))))] * 1e3
+
+            return {
+                "server_round": self._round,
+                "rows": list(self.rows),
+                "clocks": [int(x) for x in self._clocks],
+                "protocol_errors": self._protocol_errors,
+                "rpc_count": len(self._latency_s),
+                "rpc_p50_ms": pct(0.50),
+                "rpc_p99_ms": pct(0.99),
+                "bytes_in": sum(c["bytes_in"] for c in live),
+                "bytes_out": sum(c["bytes_out"] for c in live),
+                "closed_connections": live,
+            }
+
+
+def serve_shards(family_name: str, *, vocab_size: int, n_clients: int,
+                 n_shards: int = 1, consistency: str = "bsp",
+                 project_every: int = 1, host: str = "127.0.0.1",
+                 ports: tuple[int, ...] | None = None,
+                 barrier_timeout: float = 60.0) -> list[ShardServer]:
+    """Start the ``n_shards`` row-range servers of a balanced
+    :class:`~repro.core.server.ShardSpec` partition (one listener each,
+    all in this process) and return them running.  Row ranges match the
+    in-process ``ShardSpec.rows_of`` exactly, so either transport shards
+    the vocabulary identically."""
+    spec = server_mod.ShardSpec(vocab_size, n_shards)
+    servers = []
+    for s in range(n_shards):
+        srv = ShardServer(
+            family_name, vocab_size=vocab_size, n_clients=n_clients,
+            rows=spec.rows_of(s), consistency=consistency,
+            project_every=project_every, host=host,
+            port=0 if ports is None else ports[s],
+            barrier_timeout=barrier_timeout)
+        servers.append(srv.start())
+    return servers
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="parameter-server shard process (repro.net)")
+    ap.add_argument("--family", default="lda")
+    ap.add_argument("--vocab-size", type=int, required=True)
+    ap.add_argument("--n-clients", type=int, required=True)
+    ap.add_argument("--n-shards", type=int, default=1)
+    ap.add_argument("--consistency", default="bsp")
+    ap.add_argument("--project-every", type=int, default=1)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--barrier-timeout", type=float, default=60.0)
+    ap.add_argument("--address-file", default=None,
+                    help="write the bound addresses as JSON (the launcher "
+                         "polls this instead of parsing stdout)")
+    args = ap.parse_args(argv)
+
+    servers = serve_shards(
+        args.family, vocab_size=args.vocab_size, n_clients=args.n_clients,
+        n_shards=args.n_shards, consistency=args.consistency,
+        project_every=args.project_every, host=args.host,
+        barrier_timeout=args.barrier_timeout)
+    addrs = [f"{h}:{p}" for h, p in (s.address for s in servers)]
+    if args.address_file:
+        tmp = args.address_file + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"addresses": addrs}, f)
+        os.replace(tmp, args.address_file)
+    for a in addrs:
+        print(f"READY {a}", flush=True)
+    try:
+        while any(not s._stop for s in servers):
+            time.sleep(0.1)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        for s in servers:
+            s.close()
+    for s in servers:
+        print(f"STATS {json.dumps({k: v for k, v in s.stats().items() if k != 'closed_connections'})}",
+              flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,282 @@
+"""Wire-protocol unit + fuzz tests (repro.net.protocol / DESIGN.md §11).
+
+The fuzz section drives a *live* ShardServer with malformed frames —
+truncated headers, bad magic, unsupported versions, oversized and
+negative lengths, mid-payload disconnects — and asserts the server (a)
+never hangs, (b) answers a clean ProtocolError/ERROR and closes only the
+offending connection, and (c) keeps its shard state byte-identical
+through the abuse.
+"""
+
+from __future__ import annotations
+
+import socket
+import struct
+import threading
+
+import numpy as np
+import pytest
+
+from repro.net import protocol
+from repro.net.client import RemoteParameterServer
+from repro.net.protocol import (ConnectionClosed, HEADER, MAGIC, MAX_PAYLOAD,
+                                MsgType, ProtocolError, PROTOCOL_VERSION)
+from repro.net.server import ShardServer
+
+# Everything here must finish fast; a blocked recv is itself a failure.
+SOCK_TIMEOUT = 5.0
+
+
+# ---------------------------------------------------------------------------
+# codec
+# ---------------------------------------------------------------------------
+
+def test_payload_roundtrip_preserves_dtypes_and_values():
+    meta = {"round": 3, "client": 1, "names": ["n_wk"], "f": 0.25}
+    arrays = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b": np.array([1, -2, 3], dtype=np.int64),
+        "c": np.float64(1.5) * np.ones((2, 2)),
+    }
+    meta2, arrays2 = protocol.unpack_payload(
+        protocol.pack_payload(meta, arrays))
+    assert meta2 == meta
+    assert set(arrays2) == set(arrays)
+    for n in arrays:
+        assert arrays2[n].dtype == arrays[n].dtype
+        np.testing.assert_array_equal(arrays2[n], arrays[n])
+
+
+def test_payload_roundtrip_no_arrays():
+    meta2, arrays2 = protocol.unpack_payload(
+        protocol.pack_payload({"ok": True}))
+    assert meta2 == {"ok": True}
+    assert arrays2 == {}
+
+
+@pytest.mark.parametrize("payload", [
+    b"",                                   # shorter than the meta length
+    b"\x00\x00",                           # still shorter
+    struct.pack("!I", 999) + b"{}",        # meta_len exceeds payload
+    struct.pack("!I", 2) + b"\xff\xfe",    # undecodable UTF-8
+    struct.pack("!I", 2) + b"[]",          # JSON but not an object
+    struct.pack("!I", 2) + b"{}" + b"not an npz archive",
+])
+def test_unpack_payload_rejects_garbage(payload):
+    with pytest.raises(ProtocolError):
+        protocol.unpack_payload(payload)
+
+
+def test_frame_header_validation():
+    good = protocol.pack_frame(MsgType.PULL, {"round": 0})
+    mt, length = protocol._validate_header(good[:protocol.HEADER_SIZE])
+    assert mt is MsgType.PULL
+    assert length == len(good) - protocol.HEADER_SIZE
+
+    def header(magic=MAGIC, version=PROTOCOL_VERSION, msg_type=int(MsgType.PULL),
+               flags=0, length=0):
+        return HEADER.pack(magic, version, msg_type, flags, length)
+
+    for bad, what in [
+        (header(magic=b"EVIL"), "magic"),
+        (header(version=PROTOCOL_VERSION + 1), "version"),
+        (header(msg_type=200), "unknown type"),
+        (header(flags=1), "reserved flags"),
+        (header(length=-1), "negative length"),
+        (header(length=MAX_PAYLOAD + 1), "oversized length"),
+    ]:
+        with pytest.raises(ProtocolError):
+            protocol._validate_header(bad), what
+
+
+def test_recv_all_boundary_vs_midread():
+    a, b = socket.socketpair()
+    a.settimeout(SOCK_TIMEOUT)
+    b.settimeout(SOCK_TIMEOUT)
+    try:
+        b.sendall(b"xyz")
+        assert protocol.recv_all(a, 3) == b"xyz"
+        # EOF at a frame boundary → clean close.
+        b.close()
+        with pytest.raises(ConnectionClosed):
+            protocol.recv_all(a, 4, at_boundary=True)
+    finally:
+        a.close()
+
+    a, b = socket.socketpair()
+    a.settimeout(SOCK_TIMEOUT)
+    try:
+        b.sendall(b"xy")
+        b.close()
+        # EOF two bytes into a four-byte read → truncation, even at a
+        # nominal boundary.
+        with pytest.raises(ProtocolError) as ei:
+            protocol.recv_all(a, 4, at_boundary=True)
+        assert not isinstance(ei.value, ConnectionClosed)
+    finally:
+        a.close()
+
+
+# ---------------------------------------------------------------------------
+# fuzz against a live server
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def live_server():
+    srv = ShardServer("lda", vocab_size=16, n_clients=1, consistency="bsp",
+                      barrier_timeout=SOCK_TIMEOUT)
+    srv.start()
+    yield srv
+    srv.close()
+
+
+def _raw(srv) -> socket.socket:
+    sock = socket.create_connection(srv.address, timeout=SOCK_TIMEOUT)
+    sock.settimeout(SOCK_TIMEOUT)
+    return sock
+
+
+def _seed_state(srv) -> dict[str, np.ndarray]:
+    """INIT the single client so the server holds a sealed store, and
+    return an independent copy of it."""
+    rps = RemoteParameterServer(["%s:%d" % srv.address], family="lda",
+                                n_clients=1, vocab_size=16,
+                                timeout=SOCK_TIMEOUT)
+    from repro.core import family as fam_mod
+    fam = fam_mod.get("lda")
+    n_wk = np.arange(16 * 4, dtype=np.float32).reshape(16, 4)
+    rps.init_push(0, fam.shared_from_dict(
+        {"n_wk": n_wk, "n_k": n_wk.sum(0)}))
+    state = rps.pull_keys(["n_wk"])
+    rps.close()
+    return state
+
+
+def _expect_error_then_close(sock: socket.socket):
+    """The server must answer ERROR (best effort) and close; it must
+    never leave us blocked."""
+    got = b""
+    try:
+        while len(got) < protocol.HEADER_SIZE:
+            chunk = sock.recv(1 << 16)
+            if not chunk:
+                return None  # closed without the courtesy ERROR — fine
+            got += chunk
+    except (socket.timeout, ConnectionResetError):
+        pytest.fail("server hung or reset instead of ERROR+close")
+    mt, length = protocol._validate_header(got[:protocol.HEADER_SIZE])
+    assert mt is MsgType.ERROR
+    return mt
+
+
+@pytest.mark.parametrize("frame", [
+    b"LVP",                                              # truncated header
+    protocol.pack_frame(MsgType.PULL, {})[:protocol.HEADER_SIZE - 4],
+    b"EVIL" + protocol.pack_frame(MsgType.PULL, {})[4:],  # bad magic
+    HEADER.pack(MAGIC, 99, int(MsgType.PULL), 0, 0),      # bad version
+    HEADER.pack(MAGIC, PROTOCOL_VERSION, 200, 0, 0),      # unknown type
+    HEADER.pack(MAGIC, PROTOCOL_VERSION, int(MsgType.PULL), 0, -5),
+    HEADER.pack(MAGIC, PROTOCOL_VERSION, int(MsgType.PULL), 0,
+                MAX_PAYLOAD + 1),
+], ids=["trunc3", "trunc12", "magic", "version", "msgtype", "neglen",
+        "oversize"])
+def test_fuzz_malformed_frames_never_hang(live_server, frame):
+    before = _seed_state(live_server)
+    sock = _raw(live_server)
+    try:
+        sock.sendall(frame)
+        if len(frame) < protocol.HEADER_SIZE:
+            sock.shutdown(socket.SHUT_WR)  # truncation = peer gone
+        _expect_error_then_close(sock)
+    finally:
+        sock.close()
+    # The abuse killed one connection, not the store.
+    rps = RemoteParameterServer(["%s:%d" % live_server.address],
+                                family="lda", n_clients=1, vocab_size=16,
+                                timeout=SOCK_TIMEOUT)
+    after = rps.pull_keys(["n_wk"])
+    rps.close()
+    np.testing.assert_array_equal(before["n_wk"], after["n_wk"])
+    assert live_server.stats()["protocol_errors"] >= 1
+
+
+def test_fuzz_mid_payload_disconnect(live_server):
+    before = _seed_state(live_server)
+    sock = _raw(live_server)
+    try:
+        full = protocol.pack_frame(
+            MsgType.PUSH, {"round": 0, "client": 0},
+            {"n_wk": np.ones((16, 4), np.float32)})
+        sock.sendall(full[:protocol.HEADER_SIZE + 10])  # then vanish
+    finally:
+        sock.close()
+    # The half-received PUSH must not have been applied, and the server
+    # must still serve new connections promptly.
+    rps = RemoteParameterServer(["%s:%d" % live_server.address],
+                                family="lda", n_clients=1, vocab_size=16,
+                                timeout=SOCK_TIMEOUT)
+    after = rps.pull_keys(["n_wk"])
+    rps.close()
+    np.testing.assert_array_equal(before["n_wk"], after["n_wk"])
+
+
+def test_fuzz_garbage_flood_concurrent(live_server):
+    """Several connections spraying garbage at once while a good client
+    keeps working: the good client must stay correct."""
+    before = _seed_state(live_server)
+    blobs = [b"\x00" * 64, b"LVPS" + b"\xff" * 60,
+             protocol.pack_frame(MsgType.PULL, {})[:7]]
+
+    def abuse(blob: bytes):
+        s = _raw(live_server)
+        try:
+            s.sendall(blob)
+            s.shutdown(socket.SHUT_WR)
+            try:
+                while s.recv(1 << 16):
+                    pass
+            except OSError:
+                pass
+        finally:
+            s.close()
+
+    threads = [threading.Thread(target=abuse, args=(b,))
+               for b in blobs * 3]
+    for t in threads:
+        t.start()
+    rps = RemoteParameterServer(["%s:%d" % live_server.address],
+                                family="lda", n_clients=1, vocab_size=16,
+                                timeout=SOCK_TIMEOUT)
+    mid = rps.pull_keys(["n_wk"])
+    for t in threads:
+        t.join(timeout=SOCK_TIMEOUT)
+        assert not t.is_alive()
+    np.testing.assert_array_equal(before["n_wk"], mid["n_wk"])
+    assert rps.server_stats()[0]["protocol_errors"] >= 1
+    rps.close()
+
+
+def test_semantic_error_reply_and_survival(live_server):
+    """A well-framed but semantically-invalid request gets an ERROR reply
+    (surfaced as RemoteError/ProtocolError client-side) and does not take
+    the server down."""
+    _seed_state(live_server)
+    rps = RemoteParameterServer(["%s:%d" % live_server.address],
+                                family="lda", n_clients=1, vocab_size=16,
+                                timeout=SOCK_TIMEOUT)
+    with pytest.raises(ProtocolError):
+        rps.push(0, 99, {"n_wk": np.zeros((16, 4), np.float32)})  # bad id
+    rps.close()
+    rps = RemoteParameterServer(["%s:%d" % live_server.address],
+                                family="lda", n_clients=1, vocab_size=16,
+                                timeout=SOCK_TIMEOUT)
+    assert rps.pull_keys(["n_wk"])["n_wk"].shape == (16, 4)
+    rps.close()
+
+
+def test_hello_mismatch_rejected(live_server):
+    from repro.net.client import RemoteError
+    with pytest.raises(RemoteError):
+        RemoteParameterServer(["%s:%d" % live_server.address],
+                              family="lda", n_clients=2,  # server has 1
+                              vocab_size=16, timeout=SOCK_TIMEOUT)

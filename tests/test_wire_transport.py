@@ -1,0 +1,344 @@
+"""Transport parity: the tcp backend vs the in-process ParameterServer.
+
+BSP over loopback TCP must be *bit-exact* with the in-process reference
+(same corpus, same key, same round count) — the acceptance criterion of
+DESIGN.md §11.  SSP stays within mass-conservation and perplexity
+tolerance.  The stress tests hammer a live server from threads and check
+the final store is exactly init + Σ deltas.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import family as fam_mod
+from repro.engine.trainer import Trainer, TrainerConfig
+from repro.net.client import RemoteParameterServer, stress_delta
+from repro.net.server import ShardServer, serve_shards
+from tests.conftest import make_family_cfg, make_synthetic_corpus
+
+TIMEOUT = 30.0
+
+
+def _corpus():
+    return make_synthetic_corpus(n_topics=4, vocab=64, n_docs=16,
+                                 doc_len=12, seed=3)
+
+
+def _stats(family_name, trainer):
+    return {n: np.asarray(v) for n, v in
+            fam_mod.get(family_name).stats_dict(trainer.shared).items()}
+
+
+def _run_ref(cfg, tokens, mask, *, n_clients, rounds, consistency="bsp",
+             tau=1):
+    t = Trainer(cfg, tokens, mask, key=jax.random.PRNGKey(0),
+                config=TrainerConfig(n_clients=n_clients, tau=tau,
+                                     consistency=consistency))
+    for _ in range(rounds):
+        t.step()
+    return t
+
+
+def _servers(family_name, *, n_clients, n_shards=1, consistency="bsp",
+             vocab_size=64):
+    return serve_shards(family_name, vocab_size=vocab_size,
+                        n_clients=n_clients, n_shards=n_shards,
+                        consistency=consistency, barrier_timeout=TIMEOUT)
+
+
+def _addrs(servers):
+    return tuple("%s:%d" % s.address for s in servers)
+
+
+# ---------------------------------------------------------------------------
+# Trainer-level parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family_name", ["lda", "pdp"])
+def test_bsp_tcp_bitexact_single_worker(family_name):
+    """One tcp Trainer hosting every client == in-process, bit for bit."""
+    tokens, mask, _ = _corpus()
+    cfg = make_family_cfg(family_name, n_topics=4, vocab_size=64)
+    ref = _run_ref(cfg, tokens, mask, n_clients=2, rounds=3)
+    want = _stats(family_name, ref)
+
+    servers = _servers(family_name, n_clients=2, n_shards=2)
+    try:
+        t = Trainer(cfg, tokens, mask, key=jax.random.PRNGKey(0),
+                    config=TrainerConfig(n_clients=2, tau=1,
+                                         transport="tcp",
+                                         server_addrs=_addrs(servers)))
+        for _ in range(3):
+            t.step()
+        got = _stats(family_name, t)
+        t.close()
+    finally:
+        for s in servers:
+            s.close()
+    assert set(want) == set(got)
+    for n in want:
+        np.testing.assert_array_equal(want[n], got[n], err_msg=n)
+
+
+def test_bsp_tcp_bitexact_two_workers():
+    """Two tcp Trainers (one global client each, stepped concurrently)
+    jointly reproduce the single-process run exactly."""
+    tokens, mask, _ = _corpus()
+    cfg = make_family_cfg("lda", n_topics=4, vocab_size=64)
+    ref = _run_ref(cfg, tokens, mask, n_clients=2, rounds=3)
+    want = _stats("lda", ref)
+
+    servers = _servers("lda", n_clients=2)
+    try:
+        mk = lambda cs: Trainer(  # noqa: E731
+            cfg, tokens, mask, key=jax.random.PRNGKey(0),
+            config=TrainerConfig(n_clients=2, tau=1, transport="tcp",
+                                 server_addrs=_addrs(servers),
+                                 local_clients=cs))
+        t0, t1 = mk((0,)), mk((1,))
+        for _ in range(3):
+            th = threading.Thread(target=t1.step)
+            th.start()
+            t0.step()
+            th.join(timeout=TIMEOUT)
+            assert not th.is_alive()
+        got0, got1 = _stats("lda", t0), _stats("lda", t1)
+        counters = t0.remote.counters()
+        t0.close()
+        t1.close()
+    finally:
+        for s in servers:
+            s.close()
+    for n in want:
+        np.testing.assert_array_equal(want[n], got0[n], err_msg=n)
+        np.testing.assert_array_equal(want[n], got1[n], err_msg=n)
+    assert counters["rpc_count"] > 0
+    assert counters["bytes_out"] > 0
+
+
+def test_ssp_tcp_runs_within_tolerance():
+    """SSP(2) over the wire: NOT_MODIFIED fast path engages, token mass
+    is conserved exactly, and model quality lands near the BSP result."""
+    tokens, mask, _ = _corpus()
+    cfg = make_family_cfg("lda", n_topics=4, vocab_size=64)
+    ref = _run_ref(cfg, tokens, mask, n_clients=2, rounds=6)
+    ref_ppl = ref.perplexity()
+    n_tokens = float(np.asarray(mask).sum())
+
+    servers = _servers("lda", n_clients=2, consistency="ssp:2")
+    try:
+        t = Trainer(cfg, tokens, mask, key=jax.random.PRNGKey(0),
+                    config=TrainerConfig(n_clients=2, tau=1,
+                                         consistency="ssp:2",
+                                         transport="tcp",
+                                         server_addrs=_addrs(servers)))
+        for _ in range(6):
+            t.step()
+        t._sync()
+        got = _stats("lda", t)
+        ppl = t.perplexity()
+        counters = t.remote.counters()
+        t.close()
+    finally:
+        for s in servers:
+            s.close()
+    # Every token is in exactly one (w, k) cell at all times.
+    assert got["n_wk"].sum() == pytest.approx(n_tokens)
+    assert np.isfinite(ppl)
+    assert abs(ppl - ref_ppl) / ref_ppl < 0.25
+    # Staleness bound 2 ⇒ strictly fewer refreshing pulls than rounds ⇒
+    # strictly fewer bytes than a BSP run would move.
+    assert counters["rpc_count"] > 0
+
+
+def test_tcp_rejects_unsupported_configs():
+    tokens, mask, _ = _corpus()
+    cfg = make_family_cfg("hdp", n_topics=4, vocab_size=64)
+    with pytest.raises(NotImplementedError):
+        Trainer(cfg, tokens, mask, key=jax.random.PRNGKey(0),
+                config=TrainerConfig(n_clients=2, transport="tcp",
+                                     server_addrs=("127.0.0.1:1",)))
+    lcfg = make_family_cfg("lda", n_topics=4, vocab_size=64)
+    with pytest.raises(ValueError):
+        Trainer(lcfg, tokens, mask, key=jax.random.PRNGKey(0),
+                config=TrainerConfig(n_clients=2, transport="tcp"))
+    with pytest.raises(ValueError):
+        Trainer(lcfg, tokens, mask, key=jax.random.PRNGKey(0),
+                config=TrainerConfig(n_clients=2, transport="inproc",
+                                     server_addrs=("127.0.0.1:1",)))
+
+
+# ---------------------------------------------------------------------------
+# RemoteParameterServer-level semantics
+# ---------------------------------------------------------------------------
+
+def _fresh_remote(servers, n_clients=1, consistency="bsp"):
+    return RemoteParameterServer(_addrs(servers), family="lda",
+                                 n_clients=n_clients, vocab_size=64,
+                                 consistency=consistency, timeout=TIMEOUT)
+
+
+def _zero_shared():
+    fam = fam_mod.get("lda")
+    n_wk = np.zeros((64, 4), np.float32)
+    return fam.shared_from_dict({"n_wk": n_wk, "n_k": n_wk.sum(0)})
+
+
+def test_not_modified_and_version_flow():
+    servers = _servers("lda", n_clients=1, consistency="ssp:2")
+    try:
+        with _fresh_remote(servers, consistency="ssp:2") as rps:
+            rps.init_push(0, _zero_shared())
+            shared, v, refreshed = rps.pull(0, None)
+            assert refreshed and v == 0 and shared is not None
+            rps.push(0, 0, {"n_wk": np.ones((64, 4), np.float32)})
+            # Round 1 with cache at version 0: within bound 2 → cached.
+            shared, v, refreshed = rps.pull(1, v)
+            assert not refreshed and shared is None and v == 0
+            rps.push(1, 0, {"n_wk": np.ones((64, 4), np.float32)})
+            rps.push(2, 0, {"n_wk": np.ones((64, 4), np.float32)})
+            # Round 3 with the version-0 cache exceeds the bound.
+            shared, v, refreshed = rps.pull(3, 0)
+            assert refreshed and v == 3
+            np.testing.assert_array_equal(
+                np.asarray(shared.n_wk), np.full((64, 4), 3, np.float32))
+    finally:
+        for s in servers:
+            s.close()
+
+
+def test_pull_keys_clock_rejoin_snapshot():
+    servers = _servers("lda", n_clients=1, n_shards=2)
+    try:
+        with _fresh_remote(servers) as rps:
+            rps.init_push(0, _zero_shared())
+            d = stress_delta(0, 0, (64, 4))
+            rps.pull(0)
+            rps.push(0, 0, {"n_wk": d})
+            sr, clocks = rps.clock(min_round=1)
+            assert sr == 1
+            np.testing.assert_array_equal(clocks, [1])
+            # Addressed row-range read spanning the shard boundary.
+            mid = rps.pull_keys(["n_wk"], lo=16, hi=48)["n_wk"]
+            np.testing.assert_array_equal(mid, d[16:48])
+            rps.rejoin(0)
+            snap = rps.snapshot(min_round=1)
+            np.testing.assert_array_equal(np.asarray(snap.n_wk), d)
+            np.testing.assert_array_equal(np.asarray(snap.n_k), d.sum(0))
+    finally:
+        for s in servers:
+            s.close()
+
+
+def test_projection_applied_at_barrier():
+    """A negative delta pushing a count below zero is clipped by the
+    family's nonneg rule at the round barrier, exactly like in-process."""
+    servers = _servers("lda", n_clients=1)
+    try:
+        with _fresh_remote(servers) as rps:
+            rps.init_push(0, _zero_shared())
+            rps.pull(0)
+            neg = np.full((64, 4), -1.0, np.float32)
+            rps.push(0, 0, {"n_wk": neg})
+            out = rps.pull_keys(["n_wk"])["n_wk"]
+            np.testing.assert_array_equal(out, np.zeros((64, 4)))
+    finally:
+        for s in servers:
+            s.close()
+
+
+def test_concurrent_stress_exact_sum():
+    """Many client threads, out-of-order arrivals: the barrier still
+    applies rounds deterministically — final state == init + Σ."""
+    n_clients, rounds = 4, 8
+    servers = _servers("lda", n_clients=n_clients, n_shards=2)
+    shape = (64, 4)
+    try:
+        remotes = [_fresh_remote(servers, n_clients=n_clients)
+                   for _ in range(n_clients)]
+        for c, rps in enumerate(remotes):
+            rps.init_push(c, _zero_shared())
+
+        def worker(c):
+            rps = remotes[c]
+            version = None
+            for r in range(rounds):
+                _, v, refreshed = rps.pull(r, version)
+                if refreshed:
+                    version = v
+                rps.push(r, c, {"n_wk": stress_delta(r, c, shape)})
+
+        threads = [threading.Thread(target=worker, args=(c,))
+                   for c in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=TIMEOUT * 4)
+            assert not t.is_alive(), "stress worker hung"
+        remotes[0].clock(min_round=rounds)
+        final = remotes[0].pull_keys(["n_wk"])["n_wk"]
+        want = np.zeros(shape, np.float32)
+        for r in range(rounds):
+            for c in range(n_clients):
+                want = want + stress_delta(r, c, shape)
+        np.testing.assert_array_equal(final, want)
+        for rps in remotes:
+            rps.close()
+    finally:
+        for s in servers:
+            s.close()
+
+
+def test_duplicate_and_stale_push_rejected():
+    servers = _servers("lda", n_clients=2)
+    try:
+        r0 = _fresh_remote(servers, n_clients=2)
+        r1 = _fresh_remote(servers, n_clients=2)
+        r0.init_push(0, _zero_shared())
+        r1.init_push(1, _zero_shared())
+        d = np.ones((64, 4), np.float32)
+        r0.pull(0)
+        r0.push(0, 0, {"n_wk": d})
+        from repro.net.protocol import ProtocolError
+        with pytest.raises(ProtocolError):
+            r1.push(0, 0, {"n_wk": d})  # duplicate (round, client)
+        r1.close()
+        r1 = _fresh_remote(servers, n_clients=2)
+        r1.push(0, 1, {"n_wk": d})      # completes round 0
+        r1.clock(min_round=1)
+        with pytest.raises(ProtocolError):
+            r1.push(0, 1, {"n_wk": d})  # round already finalized
+        r1.close()
+        r0.close()
+    finally:
+        for s in servers:
+            s.close()
+
+
+# ---------------------------------------------------------------------------
+# Process-level launcher
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_launch_loopback_stress_processes(tmp_path):
+    """Real processes on loopback: 1 server (2 shards) + 2 stress client
+    processes; both report identical checksums of the final store."""
+    from repro.launch.loopback import launch_loopback
+    res = launch_loopback(mode="stress", n_shards=2,
+                          client_sets=((0,), (1,)), n_rounds=4,
+                          timeout=180.0, workdir=str(tmp_path))
+    assert res.ok, [(p.name, p.returncode, p.stderr[-2000:])
+                    for p in res.failures()]
+    sums = [p.result["checksums"] for p in res.clients]
+    assert sums[0] == sums[1]
+    want = np.zeros((64, 4), np.float32)
+    for r in range(4):
+        for c in range(2):
+            want = want + stress_delta(r, c, (64, 4))
+    assert res.clients[0].result["sums"]["n_wk"] == pytest.approx(
+        float(want.sum()))

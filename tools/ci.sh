@@ -33,7 +33,13 @@ echo "=== quick benchmarks: throughput + families + consistency + failover ==="
 # periodic snapshot under each consistency policy; BENCH_failover.json
 # must carry the recovery-rounds and final-perplexity-degradation
 # numbers with degradation <= 5%.
-python -m benchmarks.run --only throughput,lda,pdp,hdp,consistency,failover --quick
+# The wire module is the out-of-process transport bench (DESIGN.md §11):
+# the same Trainer config over the in-process server and over loopback
+# TCP shard servers; BENCH_wire.json must carry rounds/s for both
+# transports, bytes/round, and RPC latency percentiles per policy, and
+# the module itself hard-fails if BSP-over-TCP is not bit-exact with
+# in-process.
+python -m benchmarks.run --only throughput,lda,pdp,hdp,consistency,failover,wire --quick
 python - <<'EOF'
 import json
 art = json.load(open("BENCH_consistency.json"))
@@ -68,6 +74,33 @@ print("failover artifact OK:", ", ".join(
     f"{pols[n]['kill_rejoin']['recovery_rounds']} rounds to recover"
     for n in sorted(pols)))
 EOF
+python - <<'EOF'
+import json
+art = json.load(open("BENCH_wire.json"))
+pols = art["policies"]
+missing = {"bsp", "ssp2"} - set(pols)
+assert not missing, f"BENCH_wire.json missing policies: {missing}"
+for name, res in pols.items():
+    for transport in ("inproc", "tcp"):
+        assert res["rounds_per_s"][transport] > 0, (name, transport, res)
+    assert res["bytes_per_round"] > 0, (name, res)
+    lat = res["rpc_latency_ms"]
+    assert lat["p50"] > 0 and lat["p99"] >= lat["p50"], (name, lat)
+assert art["parity"]["bsp_bitexact"] is True, art["parity"]
+print("wire artifact OK:", ", ".join(
+    f"{n}: {pols[n]['rounds_per_s']['tcp']:.1f} r/s tcp "
+    f"({pols[n]['bytes_per_round']/1024:.1f} KiB/round, "
+    f"p99 {pols[n]['rpc_latency_ms']['p99']:.1f} ms)"
+    for n in sorted(pols)))
+EOF
+
+echo "=== loopback e2e smoke: 1 shard server + 2 client processes ==="
+# Real processes over 127.0.0.1 speaking the framed protocol end to end;
+# the smoke asserts both client processes and an in-process reference
+# agree on the final shared-statistics checksums (BSP bit-exactness
+# across the socket).  timeout(1) guards against a hung server — a
+# protocol bug must fail CI, not wedge it.
+timeout 540 python -m repro.launch.loopback --smoke
 
 echo "=== artifacts ==="
 ls -l BENCH_*.json bench_results.csv
