@@ -1,0 +1,198 @@
+"""(V, K) scale benchmark — makes the vocabulary/topic scale axis real.
+
+Sweeps a ladder of (vocab, n_topics) points on the zipf synthetic corpus
+(``make_topic_corpus`` draws word frequencies from a power law) and, per
+point, reports the numbers that gate the scale story:
+
+* **tokens/s** of the K-tiled sorted mhw sweep (``tile_k`` staging keeps
+  per-table VMEM residency at ``tile_v × tile_k`` instead of
+  ``tile_v × K``; the grid is capped via an explicit ``tile_v`` because
+  interpret mode unrolls every grid program at trace time),
+* **alias-build ms/row** via the incremental row builder
+  (``kernels.alias_build_rows`` — the production cadence: only drifted
+  rows are rebuilt, so this is the cost that matters at scale),
+* **bytes/round** for the same sweep's deltas encoded as a dense PUSH
+  frame vs a sparse PUSH_SPARSE frame (DESIGN.md §12), plus a parity bit
+  asserting the sparse frame densifies back bit-exactly.
+
+The largest quick point is (V=65536, K=256).  At that size the full
+dense alias build (vmapped ``core.alias.build``) costs minutes on the
+CPU CI container, so points above ``_FULL_BUILD_MAX_V`` substitute
+synthetic uniform proposal tables (prob=1, alias=self — a valid alias
+table) over the real ``dense_probs`` staleness snapshot; throughput is
+unaffected because the sweep's cost does not depend on table *values*.
+
+Artifact: ``BENCH_scale.json`` — gated for completeness by tools/ci.sh.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import alias as alias_mod
+from repro.core import family as fam_mod
+from repro.core import lda
+from repro.core import ps
+from repro.data.synthetic import CorpusConfig, make_topic_corpus
+from repro.kernels import alias_build as ab
+from repro.net import protocol
+
+from benchmarks import common
+
+# (vocab, n_topics, tile_k); the ladder ends at the §6.3 scale target.
+QUICK_POINTS = ((1024, 64, 16), (8192, 128, 32), (65536, 256, 64))
+FULL_POINTS = ((4096, 128, 32), (32768, 256, 64), (131072, 512, 64))
+
+# Above this vocab the full dense alias build is replaced by synthetic
+# uniform tables (see module docstring); the incremental row builder is
+# still measured for real at every point.
+_FULL_BUILD_MAX_V = 8192
+
+
+def _uniform_tables(v: int, k: int) -> alias_mod.AliasTable:
+    """A valid alias table encoding the uniform distribution per row."""
+    return alias_mod.AliasTable(
+        prob=jnp.ones((v, k), jnp.float32),
+        alias=jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32), (v, k)),
+        mass=jnp.full((v,), float(k), jnp.float32))
+
+
+def _delta_frames(deltas: dict[str, np.ndarray], n_rows: int
+                  ) -> tuple[int, int, bool]:
+    """Encode one client's sweep deltas as dense PUSH vs sparse
+    PUSH_SPARSE frames; return (dense_bytes, sparse_bytes, parity)."""
+    meta = {"round": 0, "client": 0}
+    dense = protocol.pack_frame(protocol.MsgType.PUSH, meta, deltas)
+
+    sp = ps.to_sparse_delta(deltas)
+    rows = np.asarray(sp.rows).astype(np.uint32)
+    arrays = {"rows": rows}
+    arrays.update({n: np.ascontiguousarray(np.asarray(v))
+                   for n, v in sp.values.items()})
+    sparse = protocol.pack_frame(
+        protocol.MsgType.PUSH_SPARSE,
+        {**meta, "n_rows": n_rows, "sparse": sorted(sp.values)}, arrays)
+
+    parity = True
+    for n, v in deltas.items():
+        densified = np.zeros_like(v)
+        densified[rows] = np.asarray(sp.values[n])
+        parity = parity and bool(np.array_equal(densified, v))
+    return len(dense), len(sparse), parity
+
+
+def _measure_point(vocab: int, n_topics: int, tile_k: int, *,
+                   n_docs: int, doc_len: int) -> dict:
+    tokens, mask, _ = make_topic_corpus(CorpusConfig(
+        n_topics=8, vocab_size=vocab, n_docs=n_docs, doc_len=doc_len,
+        seed=5))
+    tokens, mask = jnp.asarray(tokens), jnp.asarray(mask)
+    n_tokens = float(np.asarray(mask).sum())
+
+    # Cap the grid explicitly: interpret mode unrolls every grid program
+    # at trace time, so tile_v must not be allowed to collapse to the
+    # VMEM-budget default at large V (which would mean hundreds of
+    # programs and a trace-bound measurement).
+    tile_v = max(vocab // 8, 128)
+    bp = tokens.size
+    cfg = lda.LDAConfig(n_topics=n_topics, vocab_size=vocab,
+                        tile_k=tile_k, tile_v=tile_v,
+                        tile_b=min(1024, bp), sorted_chunks=1)
+    fam = fam_mod.family_of(cfg)
+    key = jax.random.PRNGKey(0)
+    local, shared = fam.init_state(cfg, tokens, mask, key)
+    lays = fam.build_sorted_layouts(cfg, tokens, mask)
+
+    if vocab <= _FULL_BUILD_MAX_V:
+        with common.Timer() as t_build:
+            tables, stale = fam.build_alias(cfg, shared)
+            jax.block_until_ready(tables.prob)
+        full_build_s = t_build.elapsed
+    else:
+        tables = _uniform_tables(vocab, n_topics)
+        stale = lda.dense_probs(cfg, shared)
+        jax.block_until_ready(stale)
+        full_build_s = None
+
+    # Two reps: the first compiles, the second is the warm number.
+    sweep_key = jax.random.fold_in(key, 1)
+    deltas = None
+    for _ in range(2):
+        with common.Timer() as t_sweep:
+            _, deltas = fam.sweep_sorted(cfg, local, shared, tables, stale,
+                                         tokens, mask, sweep_key, lays)
+            jax.block_until_ready(deltas["n_wk"])
+    tokens_per_s = n_tokens / max(t_sweep.elapsed, 1e-9)
+
+    # Incremental alias rebuild over a batch of drifted rows — the
+    # production producer cost (kernels.alias_build_rows, K-tiled).
+    n_rows = min(vocab, 256)
+    p_rows = jax.random.uniform(key, (n_rows, n_topics)) + 1e-3
+    for _ in range(2):
+        with common.Timer() as t_rows:
+            prob, _, _ = ab.alias_build_rows(p_rows, tile_r=8, tile_k=tile_k)
+            jax.block_until_ready(prob)
+    alias_ms_per_row = t_rows.elapsed * 1e3 / n_rows
+
+    np_deltas = {n: np.asarray(v) for n, v in deltas.items()
+                 if np.asarray(v).ndim >= 1 and
+                 np.asarray(v).shape[0] == vocab}
+    dense_b, sparse_b, parity = _delta_frames(np_deltas, vocab)
+
+    nb = -(-bp // cfg.tile_b)
+    return {
+        "vocab": vocab, "n_topics": n_topics,
+        "tile_v": tile_v, "tile_k": tile_k, "tile_b": cfg.tile_b,
+        "grid": [nb, vocab // tile_v, n_topics // tile_k],
+        "table_tile_elems": tile_v * tile_k,
+        "table_tile_elems_untiled": tile_v * n_topics,
+        "n_tokens": n_tokens,
+        "tokens_per_s": tokens_per_s,
+        "sweep_s": t_sweep.elapsed,
+        "full_alias_build_s": full_build_s,
+        "alias_build_ms_per_row": alias_ms_per_row,
+        "alias_rows_batch": n_rows,
+        "bytes_per_round": {
+            "dense": dense_b, "sparse": sparse_b,
+            "ratio": dense_b / max(sparse_b, 1),
+        },
+        "sparse_parity": parity,
+    }
+
+
+def run(quick: bool = True) -> None:
+    points = QUICK_POINTS if quick else FULL_POINTS
+    n_docs, doc_len = (48, 16) if quick else (256, 32)
+    artifact: dict = {"quick": quick, "n_docs": n_docs, "doc_len": doc_len,
+                      "points": []}
+    for vocab, n_topics, tile_k in points:
+        t0 = time.perf_counter()
+        entry = _measure_point(vocab, n_topics, tile_k,
+                               n_docs=n_docs, doc_len=doc_len)
+        entry["point_s"] = time.perf_counter() - t0
+        artifact["points"].append(entry)
+        if not entry["sparse_parity"]:
+            raise AssertionError(
+                f"sparse delta frame at V={vocab} did not densify "
+                "back bit-exactly")
+        common.emit("scale", vocab=vocab, n_topics=n_topics,
+                    tile_k=tile_k,
+                    tokens_per_s=entry["tokens_per_s"],
+                    alias_build_ms_per_row=entry["alias_build_ms_per_row"],
+                    bytes_dense=entry["bytes_per_round"]["dense"],
+                    bytes_sparse=entry["bytes_per_round"]["sparse"],
+                    bytes_ratio=entry["bytes_per_round"]["ratio"])
+
+    artifact["max_point"] = {"vocab": max(p["vocab"] for p in
+                                          artifact["points"]),
+                             "n_topics": max(p["n_topics"] for p in
+                                             artifact["points"])}
+    common.write_artifact("scale", artifact)
+
+
+if __name__ == "__main__":
+    run(quick=True)

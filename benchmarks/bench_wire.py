@@ -1,14 +1,24 @@
-"""Wire-transport benchmark (DESIGN.md §11): in-process vs loopback TCP.
+"""Wire-transport benchmark (DESIGN.md §11-12): in-process vs loopback TCP.
 
 For each consistency policy, runs the same Trainer configuration over the
 in-process ParameterServer and over ``transport="tcp"`` against threaded
 :class:`repro.net.server.ShardServer` shards on loopback, and reports:
 
 * rounds/s for both transports (the cost of crossing the socket),
-* bytes moved per round (both directions, summed over shard servers),
+* bytes moved per round, split into **encoded** bytes (full frames,
+  headers included — what the socket carries) and **payload** bytes
+  (meta+npz sections only — what the application ships), both directions
+  summed over shard servers,
 * RPC latency percentiles (p50/p99) from the client-side counters,
 * a BSP bit-exactness parity bit (checksum equality with in-process —
   the §11 acceptance criterion, re-verified on every bench run).
+
+A second section measures the **sparse delta exchange** (DESIGN.md §12)
+on a zipf corpus whose vocabulary dwarfs the per-round touched rows:
+the same BSP run with ``sparse_push`` on vs off, reporting the
+client→server payload bytes/round for both and the reduction ratio
+(the §12 acceptance criterion: ≥ 5×), plus a checksum parity bit
+(sparse BSP must land bit-exactly on the dense result).
 
 Artifact: ``BENCH_wire.json`` — gated for completeness by tools/ci.sh.
 """
@@ -90,11 +100,13 @@ def run(quick: bool = True) -> None:
                 s.close()
 
         total_rounds = rounds + 1  # incl. warm-up
-        bytes_per_round = ((counters["bytes_in"] + counters["bytes_out"])
-                           / total_rounds)
+        encoded = (counters["bytes_in"] + counters["bytes_out"]) \
+            / total_rounds
+        payload = (counters["payload_in"] + counters["payload_out"]) \
+            / total_rounds
         entry = {
             "rounds_per_s": {"inproc": rps_inproc, "tcp": rps_tcp},
-            "bytes_per_round": bytes_per_round,
+            "bytes_per_round": {"encoded": encoded, "payload": payload},
             "rpc_latency_ms": {"p50": counters["rpc_p50_ms"],
                                "p99": counters["rpc_p99_ms"]},
             "rpc_count": counters["rpc_count"],
@@ -105,13 +117,77 @@ def run(quick: bool = True) -> None:
         common.emit("wire", policy=label,
                     rounds_per_s_inproc=rps_inproc,
                     rounds_per_s_tcp=rps_tcp,
-                    bytes_per_round=bytes_per_round,
+                    encoded_bytes_per_round=encoded,
+                    payload_bytes_per_round=payload,
                     rpc_p50_ms=counters["rpc_p50_ms"],
                     rpc_p99_ms=counters["rpc_p99_ms"])
 
     if not artifact["parity"]["bsp_bitexact"]:
         raise AssertionError(
             "BSP over loopback TCP diverged from the in-process result")
+
+    # --- sparse delta exchange (DESIGN.md §12) --------------------------
+    # A vocabulary much larger than the per-round touched row set — the
+    # regime the COO frames exist for.  zipf word frequencies mean each
+    # client's sweep touches a few dozen of the 2048 rows, so a dense
+    # PUSH ships mostly zeros.
+    sv, sk = (2048, 8) if quick else (16384, 64)
+    s_docs, s_len = (12, 8) if quick else (128, 32)
+    s_rounds = 3 if quick else 8
+    s_tokens, s_mask, _ = make_topic_corpus(CorpusConfig(
+        n_topics=4, vocab_size=sv, n_docs=s_docs, doc_len=s_len, seed=7))
+    s_cfg = LDAConfig(n_topics=sk, vocab_size=sv)
+
+    sums, push_payload, modes = {}, {}, ("dense", "sparse")
+    for mode in modes:
+        servers = serve_shards("lda", vocab_size=sv, n_clients=n_clients,
+                               n_shards=n_shards, consistency="bsp",
+                               barrier_timeout=120.0)
+        addrs = tuple("%s:%d" % s.address for s in servers)
+        try:
+            tcp = Trainer(s_cfg, s_tokens, s_mask, key=key,
+                          config=TrainerConfig(
+                              n_clients=n_clients, tau=1,
+                              consistency="bsp", transport="tcp",
+                              server_addrs=addrs,
+                              sparse_push=(mode == "sparse")))
+            # Warm up first so the INIT push (full dense state, one-off)
+            # and compile round stay out of the steady-state counters.
+            tcp.step()
+            tcp._sync()
+            before = tcp.remote.counters()["payload_out"]
+            for _ in range(s_rounds):
+                tcp.step()
+            tcp._sync()
+            after = tcp.remote.counters()["payload_out"]
+            sums[mode] = _stats_checksums(tcp)
+            tcp.close()
+        finally:
+            for s in servers:
+                s.close()
+        # client→server payload: dominated by the PUSH/PUSH_SPARSE frames
+        # (pull requests are O(100) bytes).
+        push_payload[mode] = (after - before) / s_rounds
+
+    ratio = push_payload["dense"] / max(push_payload["sparse"], 1e-9)
+    parity = sums["dense"] == sums["sparse"]
+    artifact["sparse"] = {
+        "vocab": sv, "n_topics": sk, "rounds": s_rounds,
+        "push_payload_bytes_per_round": dict(push_payload),
+        "reduction_ratio": ratio,
+    }
+    artifact["parity"]["sparse_bitexact"] = parity
+    common.emit("wire_sparse", vocab=sv, n_topics=sk,
+                dense_push_payload=push_payload["dense"],
+                sparse_push_payload=push_payload["sparse"],
+                reduction_ratio=ratio)
+    if not parity:
+        raise AssertionError(
+            "sparse_push BSP diverged from the dense-push result")
+    if ratio < 5.0:
+        raise AssertionError(
+            f"sparse push reduced payload only {ratio:.2f}x (< 5x) at "
+            f"V={sv}")
     common.write_artifact("wire", artifact)
 
 

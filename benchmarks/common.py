@@ -47,15 +47,24 @@ def rows() -> list[dict]:
 
 
 def write_csv(path: str) -> None:
-    keys: list[str] = []
-    for r in _ROWS:
-        for k in r:
-            if k not in keys:
-                keys.append(k)
+    """Write the collected rows in long format: ``bench,row,metric,value``.
+
+    ``row`` is the ordinal of the emit() call within its bench, so the
+    fields of one emit stay joinable.  Long format means the schema does
+    not change when a bench adds a metric — downstream diffing selects
+    by (bench, metric) instead of chasing a union-of-columns header.
+    """
+    ordinal: dict[str, int] = {}
     with open(path, "w") as f:
-        f.write(",".join(keys) + "\n")
+        f.write("bench,row,metric,value\n")
         for r in _ROWS:
-            f.write(",".join(str(r.get(k, "")) for k in keys) + "\n")
+            bench = r["bench"]
+            i = ordinal.get(bench, 0)
+            ordinal[bench] = i + 1
+            for k, v in r.items():
+                if k == "bench":
+                    continue
+                f.write(f"{bench},{i},{k},{v}\n")
 
 
 def family_sweep_perplexity(cfg, tokens, mask, layout: str, seed: int,

@@ -19,6 +19,9 @@ Mapping to the paper:
   bench_roofline    §Roofline table from the dry-run artifacts
   bench_wire        §11     in-process vs loopback-TCP transport (rounds/s,
                            bytes/round, RPC latency, BSP parity bit)
+  bench_scale       §6.3   (V, K) scale ladder — K-tiled sweep tokens/s,
+                           incremental alias-build ms/row, dense-vs-sparse
+                           bytes/round (reaches V=65536, K=256 in quick)
 
 Besides the CSV, benchmark modules write machine-readable
 ``BENCH_<name>.json`` artifacts (``common.write_artifact``) so the perf
@@ -37,7 +40,7 @@ from benchmarks import common
 
 MODULES = ("lda", "pdp", "hdp", "projection", "scaling", "throughput",
            "filters", "consistency", "failover", "stale_sync", "roofline",
-           "wire")
+           "wire", "scale")
 
 
 def main(argv=None) -> int:

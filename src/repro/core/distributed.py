@@ -109,6 +109,26 @@ def filter_push(fam: family_mod.ModelFamily, deltas: dict[str, Array],
     return sent, {n: deltas[n] - sent[n] for n in deltas}
 
 
+def filter_push_sparse(fam: family_mod.ModelFamily,
+                       deltas: dict[str, Array], spec: ps.FilterSpec,
+                       key: Array,
+                       residual: dict[str, Array] | None = None
+                       ) -> tuple[ps.SparseDelta, dict[str, Array] | None]:
+    """:func:`filter_push` with a COO row-sliced result (DESIGN.md §12).
+
+    The filter runs dense (identical arithmetic — same residual as the
+    dense path), then the sent delta crosses the pytree boundary through
+    ``ps.to_sparse_delta``: the non-zero-row union across delta stats,
+    packed as (rows, values).  ``ps.from_sparse_delta`` reconstructs the
+    sent delta bit-for-bit, so a transport shipping the sparse form is
+    bit-exact with one shipping the dense form — while moving only the
+    rows the filter (or the corpus' power-law row access) actually
+    touched.  Host-side: the result shape is data-dependent.
+    """
+    sent, residual = filter_push(fam, deltas, spec, key, residual)
+    return ps.to_sparse_delta(sent), residual
+
+
 @dataclass(frozen=True)
 class DistConfig:
     model: str = "lda"                 # any name in family.FAMILIES

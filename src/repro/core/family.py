@@ -239,9 +239,17 @@ class ModelFamily:
     def sorted_tile_v(self, cfg) -> int:
         """The vocab tile size the sorted sweep will use for ``cfg`` —
         hoisted layouts MUST be built with this exact size.  The VMEM
-        budget is taken over the (tile_v, E) joint-outcome tiles."""
-        return cfg.tile_v or segment.pick_tile_vmem(cfg.vocab_size,
-                                                    self.n_outcomes(cfg))
+        budget is taken over the (tile_v, E) joint-outcome tiles —
+        (tile_v, tile_k) when ``cfg.tile_k`` turns on the K-tiled
+        staging, which is what keeps tile_v usable at K=1024+."""
+        return cfg.tile_v or segment.pick_tile_vmem(
+            cfg.vocab_size, self.n_outcomes(cfg),
+            tile_k=self.sorted_tile_k(cfg))
+
+    def sorted_tile_k(self, cfg) -> int | None:
+        """K-tile size for the fused kernels' staging axis (None = full
+        K).  Layout geometry does not depend on it, only kernel VMEM."""
+        return getattr(cfg, "tile_k", None)
 
     def build_sorted_layouts(self, cfg, tokens: Array, mask: Array
                              ) -> tuple[segment.SortedLayout, ...]:
@@ -390,7 +398,7 @@ class _LMFamilyBase(ModelFamily):
             self.sparse_prior(cfg, shared), lay.rows, e_sorted, ndk_rows,
             lay.vstart, lay.vcount, key, mh_steps=cfg.mh_steps,
             beta=cfg.beta, beta_bar=cfg.beta * cfg.vocab_size,
-            tile_v=tile_v, tile_b=tile_b)
+            tile_v=tile_v, tile_b=tile_b, tile_k=self.sorted_tile_k(cfg))
 
     def _delta_wk(self, cfg, tokens, mask, z_old, z_new) -> Array:
         w_flat = tokens.reshape(-1)
@@ -599,7 +607,7 @@ class PDPFamily(ModelFamily):
             lay.vcount, key, mh_steps=cfg.mh_steps,
             concentration=cfg.concentration, discount=cfg.discount,
             gamma=cfg.gamma, gamma_bar=cfg.gamma * cfg.vocab_size,
-            tile_v=tile_v, tile_b=tile_b)
+            tile_v=tile_v, tile_b=tile_b, tile_k=self.sorted_tile_k(cfg))
 
     def finalize_sorted(self, cfg, local, e_grid, n_dk, tokens, mask):
         z_new = e_grid % cfg.n_topics

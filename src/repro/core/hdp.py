@@ -47,6 +47,7 @@ class HDPConfig:
     alias_refresh_every: int = 1
     tile_v: int | None = None
     tile_b: int = 1024
+    tile_k: int | None = None
     sorted_chunks: int = 4
 
 

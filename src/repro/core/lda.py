@@ -68,6 +68,11 @@ class LDAConfig:
     # fewer vocab tiles (more programs skipped) but launch more programs.
     tile_v: int | None = None
     tile_b: int = 1024
+    # K-tile size for the staging axis of the fused kernels (None = full
+    # K, the untiled path).  Must divide K.  With it set, table VMEM
+    # residency is (tile_v, tile_k) and the budget-derived tile_v stops
+    # shrinking as K grows (segment.pick_tile_vmem).
+    tile_k: int | None = None
     # Sequential position-chunks per sorted sweep: each chunk is one fused
     # word-major kernel launch, with n_dk refreshed between chunks so the
     # within-document Gauss-Seidel effect of the scan layout is mostly

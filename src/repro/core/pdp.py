@@ -58,6 +58,7 @@ class PDPConfig:
     alias_refresh_every: int = 1
     tile_v: int | None = None
     tile_b: int = 1024
+    tile_k: int | None = None
     sorted_chunks: int = 4
 
 

@@ -31,6 +31,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 
@@ -133,6 +134,53 @@ def changed_rows(row_mass: Array, k_rows: int, threshold: float
     k_rows = min(k_rows, row_mass.shape[0])
     mass, idx = jax.lax.top_k(row_mass, k_rows)
     return idx.astype(jnp.int32), mass > threshold
+
+
+class SparseDelta(NamedTuple):
+    """Row-sliced COO pytree delta: one shared row-index vector plus the
+    packed rows of every delta statistic at those indices.
+
+    The dense↔sparse boundary contract (DESIGN.md §12): ``to_sparse_delta``
+    keeps every row that is non-zero in *any* statistic, so
+    ``from_sparse_delta`` reconstructs the dense pytree bit-for-bit — the
+    selected rows carry their exact float values and the dropped rows were
+    exactly 0.0 in every statistic.  No arithmetic is re-ordered, which is
+    why a sparse push under BSP is bit-exact with the dense push.
+    """
+
+    rows: Array                  # (R,) int32, strictly increasing, unique
+    values: dict[str, Array]     # name -> (R, K) packed rows
+
+
+def to_sparse_delta(deltas: dict[str, Array]) -> SparseDelta:
+    """Dense delta pytree → :class:`SparseDelta` of its non-zero rows.
+
+    Host-side (data-dependent shape — the wire path and the Python
+    reference loop use it; the compiled round keeps dense deltas).  Rows
+    are the ascending union of non-zero rows across statistics.
+    """
+    mats = {n: np.asarray(v) for n, v in deltas.items()}
+    nz: np.ndarray | None = None
+    for v in mats.values():
+        row_any = np.any(v != 0, axis=tuple(range(1, v.ndim)))
+        nz = row_any if nz is None else (nz | row_any)
+    rows = np.flatnonzero(nz).astype(np.int32)
+    return SparseDelta(rows=rows,
+                       values={n: v[rows] for n, v in mats.items()})
+
+
+def from_sparse_delta(sp: SparseDelta, n_rows: int) -> dict[str, Array]:
+    """:class:`SparseDelta` → dense delta pytree (exact inverse of
+    :func:`to_sparse_delta` given the dense row count)."""
+    out: dict[str, Array] = {}
+    rows = jnp.asarray(sp.rows, jnp.int32)
+    for n, v in sp.values.items():
+        v = jnp.asarray(v)
+        dense = jnp.zeros((n_rows,) + v.shape[1:], v.dtype)
+        # Unique indices by construction: the scatter-add writes each
+        # selected row's exact value (0 + x == x bit-for-bit).
+        out[n] = dense.at[rows].add(v)
+    return out
 
 
 def residual_update(residual: Array, delta: Array, sent: Array) -> Array:

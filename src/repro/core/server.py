@@ -430,6 +430,22 @@ class ParameterServer:
                 clocks=state.clocks + clock_inc.astype(jnp.int32))
         return state
 
+    def push_sparse(self, state: ServerState, sparse: ps.SparseDelta,
+                    clock_inc: Array | None = None, *,
+                    track_mass: bool = False) -> ServerState:
+        """Apply a :class:`~repro.core.ps.SparseDelta` push.
+
+        The sparse→dense conversion happens here, at the pytree boundary
+        (``ps.from_sparse_delta``), and the densified delta goes through
+        the exact :meth:`push` path — same ``apply_delta`` op order, same
+        clock/ mass accounting — so a sparse push under BSP is bit-exact
+        with the dense push of the same delta (DESIGN.md §12).  The win is
+        what *crosses a transport*: callers ship (rows, packed values)
+        instead of (V, K) matrices and convert at either edge.
+        """
+        dense = ps.from_sparse_delta(sparse, self.spec.n_rows)
+        return self.push(state, dense, clock_inc, track_mass=track_mass)
+
     def accumulate_mass(self, state: ServerState, deltas: dict[str, Array]
                         ) -> ServerState:
         """Fold a push's per-row L1 mass into the per-shard accounting.

@@ -77,16 +77,23 @@ def pick_tile(n: int, target: int) -> int:
     return 1
 
 
-def pick_tile_vmem(v: int, k: int, budget_elems: int = 65536) -> int:
+def pick_tile_vmem(v: int, k: int, budget_elems: int = 65536,
+                   tile_k: int | None = None) -> int:
     """Vocab tile size from a VMEM budget: the largest divisor of ``v``
     whose (tile_v, K) tile stays within ``budget_elems`` elements per
     resident array (~256 KB fp32 at the default).
+
+    With ``tile_k`` set (the K-tiled kernels), table residency is
+    (tile_v, tile_k), so the budget divides by ``tile_k`` instead of K —
+    tile_v no longer collapses as K grows, which is what makes the
+    (V, K) scale axis usable.
 
     Small models fit entirely in one tile (minimal grid, no skipping
     needed); production vocabularies tile down and rely on the
     scalar-prefetch skip to keep work ~O(B).
     """
-    return pick_tile(v, max(1, budget_elems // max(k, 1)))
+    cols = k if tile_k is None else min(tile_k, k)
+    return pick_tile(v, max(1, budget_elems // max(cols, 1)))
 
 
 @partial(jax.jit, static_argnames=("vocab_size", "tile_v", "tile_b"))

@@ -91,7 +91,8 @@ from repro.core import ps
 
 # Re-exported here for drivers/benchmarks that address the round body
 # through the engine namespace.
-from repro.core.distributed import filter_push, tau_sweeps  # noqa: F401
+from repro.core.distributed import (filter_push,  # noqa: F401
+                                    filter_push_sparse, tau_sweeps)
 
 
 @dataclass(frozen=True)

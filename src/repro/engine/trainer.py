@@ -184,6 +184,14 @@ class TrainerConfig:
     # global client id, so the union of processes reproduces the
     # in-process run exactly under BSP.
     local_clients: tuple[int, ...] | None = None
+    # Encode pushes as COO row-sliced PUSH_SPARSE frames (tcp only;
+    # DESIGN.md §12).  Bit-exact with dense pushes under BSP — the server
+    # densifies and rides the same barrier path — but only the changed
+    # rows cross the wire, which is the bytes/round win on zipf corpora.
+    sparse_push: bool = False
+    # Consecutive re-dial budget per server for dropped connections
+    # during PULL (tcp only; the pull_retry_limit idiom on the wire).
+    reconnect_limit: int = 3
 
 
 @dataclass
@@ -245,9 +253,10 @@ class Trainer:
             raise ValueError(f"unknown transport {config.transport!r}; "
                              "expected 'inproc' or 'tcp'")
         if config.transport == "inproc" and (
-                config.server_addrs or config.local_clients is not None):
-            raise ValueError("server_addrs / local_clients are tcp-only "
-                             "knobs; set transport='tcp'")
+                config.server_addrs or config.local_clients is not None
+                or config.sparse_push):
+            raise ValueError("server_addrs / local_clients / sparse_push "
+                             "are tcp-only knobs; set transport='tcp'")
         self.cfg = model_cfg
         self.tcfg = config
         self.fault_plan = self._resolve_fault_plan(config)
@@ -302,7 +311,9 @@ class Trainer:
                 config.server_addrs, family=self.family,
                 n_clients=config.n_clients,
                 vocab_size=model_cfg.vocab_size,
-                consistency=config.consistency)
+                consistency=config.consistency,
+                sparse_push=config.sparse_push,
+                reconnect_limit=config.reconnect_limit)
             for c in sorted(init_stats):
                 self.remote.init_push(c, init_stats[c])
             stats_template = self.family.stats_dict(

@@ -140,67 +140,201 @@ def _alias_build_fused_kernel(n_wk_ref, n_k_ref, prob_ref, alias_ref,
     mass_ref[...] = mass.astype(jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("tile_r", "interpret"))
+def _alias_build_tiled_kernel(p_ref, prob_ref, alias_ref, mass_ref,
+                              p_s, prob_s, alias_s, *, tile_k: int):
+    """Two-phase K-streamed build (grid (nr, 2, nk), lexicographic order):
+    phase 0 stages the row tile's input k-tiles into full-K scratch;
+    phase 1 runs the pairing once (at its first k-tile step) on the
+    staged rows and flushes the result back out one k-tile per step.
+    Walker pairing moves probability mass between arbitrary outcome
+    columns, so the *build state* is irreducibly full-K per row — the
+    streaming bounds the in/out block residency, not the scratch.
+
+    Output blocks written during phase 0 hold garbage; the grid revisits
+    every (row, k-tile) output block in phase 1 after all of that row's
+    phase-0 steps (the phase axis is major to the k axis), so the
+    phase-1 flush is the one that lands."""
+    pi = pl.program_id(1)
+    ki = pl.program_id(2)
+    ksl = pl.ds(ki * tile_k, tile_k)
+
+    @pl.when(pi == 0)
+    def _stage():
+        p_s[:, ksl] = p_ref[...].astype(jnp.float32)
+
+    @pl.when((pi == 1) & (ki == 0))
+    def _build():
+        p = p_s[...]
+        k = p.shape[-1]
+        mass = jnp.sum(p, axis=-1)
+        safe = mass > 0
+        pn = jnp.where(safe[:, None],
+                       p / jnp.where(safe, mass, 1.0)[:, None],
+                       jnp.full_like(p, 1.0 / k))
+        prob, alias = _build_tile(pn * k)
+        prob_s[...] = prob
+        alias_s[...] = alias
+        mass_ref[...] = mass.astype(jnp.float32)
+
+    @pl.when(pi == 1)
+    def _flush():
+        prob_ref[...] = prob_s[:, ksl]
+        alias_ref[...] = alias_s[:, ksl]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_r", "tile_k", "interpret"))
 def alias_build(p: jax.Array, *, tile_r: int = DEFAULT_TILE_R,
-                interpret: bool = True):
-    """Build alias tables for (V, K) rows. Returns (prob, alias, mass)."""
+                tile_k: int | None = None, interpret: bool = True):
+    """Build alias tables for (V, K) rows. Returns (prob, alias, mass).
+
+    ``tile_k`` (None ⇒ K) streams the input and output K dimension in
+    (tile_r, tile_k) blocks through the two-phase kernel; the build math
+    is identical either way (the pairing always sees the full row), so
+    tiled and untiled tables are bit-identical."""
     v, k = p.shape
     assert v % tile_r == 0, f"V={v} must be a multiple of tile_r={tile_r}"
-    grid = (v // tile_r,)
+    out_shape = [
+        jax.ShapeDtypeStruct((v, k), jnp.float32),
+        jax.ShapeDtypeStruct((v, k), jnp.int32),
+        jax.ShapeDtypeStruct((v,), jnp.float32),
+    ]
+    if tile_k is None or tile_k >= k:
+        return pl.pallas_call(
+            _alias_build_kernel,
+            grid=(v // tile_r,),
+            in_specs=[pl.BlockSpec((tile_r, k), lambda i: (i, 0))],
+            out_specs=[
+                pl.BlockSpec((tile_r, k), lambda i: (i, 0)),
+                pl.BlockSpec((tile_r, k), lambda i: (i, 0)),
+                pl.BlockSpec((tile_r,), lambda i: (i,)),
+            ],
+            out_shape=out_shape,
+            interpret=interpret,
+        )(p)
+    assert k % tile_k == 0, f"K={k} must be a multiple of tile_k={tile_k}"
+    nk = k // tile_k
+    kernel = functools.partial(_alias_build_tiled_kernel, tile_k=tile_k)
     return pl.pallas_call(
-        _alias_build_kernel,
-        grid=grid,
-        in_specs=[pl.BlockSpec((tile_r, k), lambda i: (i, 0))],
+        kernel,
+        grid=(v // tile_r, 2, nk),
+        in_specs=[pl.BlockSpec((tile_r, tile_k), lambda i, pi, ki: (i, ki))],
         out_specs=[
-            pl.BlockSpec((tile_r, k), lambda i: (i, 0)),
-            pl.BlockSpec((tile_r, k), lambda i: (i, 0)),
-            pl.BlockSpec((tile_r,), lambda i: (i,)),
+            pl.BlockSpec((tile_r, tile_k), lambda i, pi, ki: (i, ki)),
+            pl.BlockSpec((tile_r, tile_k), lambda i, pi, ki: (i, ki)),
+            pl.BlockSpec((tile_r,), lambda i, pi, ki: (i,)),
         ],
-        out_shape=[
-            jax.ShapeDtypeStruct((v, k), jnp.float32),
-            jax.ShapeDtypeStruct((v, k), jnp.int32),
-            jax.ShapeDtypeStruct((v,), jnp.float32),
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((tile_r, k), jnp.float32),   # staged input rows
+            pltpu.VMEM((tile_r, k), jnp.float32),   # built prob rows
+            pltpu.VMEM((tile_r, k), jnp.int32),     # built alias rows
         ],
         interpret=interpret,
     )(p)
 
 
+def _alias_build_fused_tiled_kernel(n_wk_ref, n_k_ref, prob_ref, alias_ref,
+                                    mass_ref, nwk_s, nk_s, prob_s, alias_s,
+                                    *, tile_k: int, alpha, beta, beta_bar):
+    """K-streamed fused build: phase 0 stages the *raw* statistics
+    k-tiles; phase 1 computes the dense term on the full-K staged rows —
+    the exact expression and shapes of :func:`_alias_build_fused_kernel`,
+    so XLA emits the same rounding and tiled == untiled bit-for-bit —
+    then runs the pairing and flushes one k-tile per step."""
+    pi = pl.program_id(1)
+    ki = pl.program_id(2)
+    ksl = pl.ds(ki * tile_k, tile_k)
+
+    @pl.when(pi == 0)
+    def _stage():
+        nwk_s[:, ksl] = n_wk_ref[...].astype(jnp.float32)
+        nk_s[:, ksl] = n_k_ref[...].astype(jnp.float32)
+
+    @pl.when((pi == 1) & (ki == 0))
+    def _build():
+        p = alpha * (nwk_s[...] + beta) / (nk_s[...] + beta_bar)
+        k = p.shape[-1]
+        mass = jnp.sum(p, axis=-1)
+        pn = p / mass[:, None]
+        prob, alias = _build_tile(pn * k)
+        prob_s[...] = prob
+        alias_s[...] = alias
+        mass_ref[...] = mass.astype(jnp.float32)
+
+    @pl.when(pi == 1)
+    def _flush():
+        prob_ref[...] = prob_s[:, ksl]
+        alias_ref[...] = alias_s[:, ksl]
+
+
 @functools.partial(jax.jit,
                    static_argnames=("alpha", "beta", "vocab_size", "tile_r",
-                                    "interpret"))
+                                    "tile_k", "interpret"))
 def alias_build_fused(n_wk: jax.Array, n_k: jax.Array, *, alpha: float,
                       beta: float, vocab_size: int,
-                      tile_r: int = DEFAULT_TILE_R, interpret: bool = True):
-    """Fused dense-term + alias build from raw LDA statistics."""
+                      tile_r: int = DEFAULT_TILE_R,
+                      tile_k: int | None = None, interpret: bool = True):
+    """Fused dense-term + alias build from raw LDA statistics.
+
+    ``tile_k`` (None ⇒ K) streams inputs and outputs in k-tiles as in
+    :func:`alias_build`; the dense term and the pairing see identical
+    values either way, so the tables are bit-identical."""
     v, k = n_wk.shape
     assert v % tile_r == 0
-    grid = (v // tile_r,)
-    kernel = functools.partial(_alias_build_fused_kernel, alpha=alpha,
-                               beta=beta, beta_bar=beta * vocab_size)
+    out_shape = [
+        jax.ShapeDtypeStruct((v, k), jnp.float32),
+        jax.ShapeDtypeStruct((v, k), jnp.int32),
+        jax.ShapeDtypeStruct((v,), jnp.float32),
+    ]
+    if tile_k is None or tile_k >= k:
+        kernel = functools.partial(_alias_build_fused_kernel, alpha=alpha,
+                                   beta=beta, beta_bar=beta * vocab_size)
+        return pl.pallas_call(
+            kernel,
+            grid=(v // tile_r,),
+            in_specs=[
+                pl.BlockSpec((tile_r, k), lambda i: (i, 0)),
+                pl.BlockSpec((1, k), lambda i: (0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((tile_r, k), lambda i: (i, 0)),
+                pl.BlockSpec((tile_r, k), lambda i: (i, 0)),
+                pl.BlockSpec((tile_r,), lambda i: (i,)),
+            ],
+            out_shape=out_shape,
+            interpret=interpret,
+        )(n_wk, n_k.reshape(1, -1))
+    assert k % tile_k == 0, f"K={k} must be a multiple of tile_k={tile_k}"
+    nk = k // tile_k
+    kernel = functools.partial(_alias_build_fused_tiled_kernel,
+                               tile_k=tile_k, alpha=alpha, beta=beta,
+                               beta_bar=beta * vocab_size)
     return pl.pallas_call(
         kernel,
-        grid=grid,
+        grid=(v // tile_r, 2, nk),
         in_specs=[
-            pl.BlockSpec((tile_r, k), lambda i: (i, 0)),
-            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((tile_r, tile_k), lambda i, pi, ki: (i, ki)),
+            pl.BlockSpec((1, tile_k), lambda i, pi, ki: (0, ki)),
         ],
         out_specs=[
-            pl.BlockSpec((tile_r, k), lambda i: (i, 0)),
-            pl.BlockSpec((tile_r, k), lambda i: (i, 0)),
-            pl.BlockSpec((tile_r,), lambda i: (i,)),
+            pl.BlockSpec((tile_r, tile_k), lambda i, pi, ki: (i, ki)),
+            pl.BlockSpec((tile_r, tile_k), lambda i, pi, ki: (i, ki)),
+            pl.BlockSpec((tile_r,), lambda i, pi, ki: (i,)),
         ],
-        out_shape=[
-            jax.ShapeDtypeStruct((v, k), jnp.float32),
-            jax.ShapeDtypeStruct((v, k), jnp.int32),
-            jax.ShapeDtypeStruct((v,), jnp.float32),
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((tile_r, k), jnp.float32),   # staged n_wk rows
+            pltpu.VMEM((1, k), jnp.float32),        # staged n_k row
+            pltpu.VMEM((tile_r, k), jnp.float32),   # built prob rows
+            pltpu.VMEM((tile_r, k), jnp.int32),     # built alias rows
         ],
         interpret=interpret,
     )(n_wk, n_k.reshape(1, -1))
 
 
-@functools.partial(jax.jit, static_argnames=("tile_r", "interpret"))
+@functools.partial(jax.jit, static_argnames=("tile_r", "tile_k", "interpret"))
 def alias_build_rows(p: jax.Array, *, tile_r: int = DEFAULT_TILE_R,
-                     interpret: bool = True):
+                     tile_k: int | None = None, interpret: bool = True):
     """Alias build over a compacted (R, K) row block — the gathered changed
     rows of an incremental rebuild.  R need not be a tile_r multiple (rows
     are padded with zero mass, which the kernel's uniform fallback absorbs,
@@ -209,7 +343,7 @@ def alias_build_rows(p: jax.Array, *, tile_r: int = DEFAULT_TILE_R,
     pad = (-r) % tile_r
     p_pad = jnp.pad(p, ((0, pad), (0, 0))) if pad else p
     prob, alias, mass = alias_build(p_pad, tile_r=min(tile_r, r + pad),
-                                    interpret=interpret)
+                                    tile_k=tile_k, interpret=interpret)
     return prob[:r], alias[:r], mass[:r]
 
 

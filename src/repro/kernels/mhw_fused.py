@@ -51,53 +51,79 @@ from repro.core.pdp import corrected_rows, log_factors, own_contrib
 from repro.kernels.alias_sample import DEFAULT_TILE_B, DEFAULT_TILE_V
 
 
-def _index_maps(nv: int):
+def _index_maps(nv: int, nk: int):
     """BlockSpec index maps shared by both sorted-layout kernels: per-batch
-    blocks, per-step uniform blocks, whole-array residents, and the
-    scalar-prefetched vocab-tile-window maps (the tile-skip re-point)."""
-    def bmap(bi, vi, vs, vc):
+    blocks, per-step uniform blocks, whole-array residents, the
+    scalar-prefetched vocab-tile-window maps (the tile-skip re-point), and
+    the K-tile maps of the ``tile_k`` staging axis (grid axis 2, minor)."""
+    def vtile(bi, vi, vs, vc):
+        return jnp.clip(vs[bi] + jnp.minimum(vi, vc[bi] - 1), 0, nv - 1)
+
+    def bmap(bi, vi, ki, vs, vc):
         return (bi,)
 
-    def bmap2(bi, vi, vs, vc):
+    def bmap2(bi, vi, ki, vs, vc):
         return (bi, 0)
 
-    def smap(bi, vi, vs, vc):
+    def smap(bi, vi, ki, vs, vc):
         return (0, bi)
 
-    def fullmap(bi, vi, vs, vc):
+    def fullmap(bi, vi, ki, vs, vc):
         return (0, 0)
 
-    def vmap_(bi, vi, vs, vc):
-        return (jnp.clip(vs[bi] + jnp.minimum(vi, vc[bi] - 1), 0, nv - 1), 0)
+    def vmapk(bi, vi, ki, vs, vc):
+        # (vocab-tile, k-tile) table block — the (tile_v, tile_k) residency
+        # that replaces the (tile_v, K) one.
+        return (vtile(bi, vi, vs, vc), ki)
 
-    def vmap1(bi, vi, vs, vc):
-        return (jnp.clip(vs[bi] + jnp.minimum(vi, vc[bi] - 1), 0, nv - 1),)
+    def vmapk_clip(bi, vi, ki, vs, vc):
+        # (V, K) statistics under a 2K-outcome e-tile axis: k-tiles exist
+        # only for the first nk e-tiles; later steps re-fetch the last one
+        # (the kernel guards the stage, the map just has to stay in range).
+        return (vtile(bi, vi, vs, vc), jnp.minimum(ki, nk - 1))
 
-    return bmap, bmap2, smap, fullmap, vmap_, vmap1
+    def vmap1(bi, vi, ki, vs, vc):
+        return (vtile(bi, vi, vs, vc),)
+
+    return bmap, bmap2, smap, fullmap, vmapk, vmapk_clip, vmap1
 
 
 def _mhw_fused_kernel(vstart_ref, vcount_ref, rows_ref, z_ref, ndk_ref,
                       slot_ref, coin_ref, umix_ref, usp_ref, uacc_ref,
                       prob_ref, alias_ref, mass_ref, stale_ref, nwk_ref,
-                      nk_ref, prior_ref, out_ref, *, tile_v: int,
-                      n_vtiles: int, beta: float, beta_bar: float):
+                      nk_ref, prior_ref, out_ref, nwk_s, stale_s, prob_s,
+                      alias_s, *, tile_v: int, n_vtiles: int, tile_k: int,
+                      n_ktiles: int, beta: float, beta_bar: float):
     bi = pl.program_id(0)
     vi = pl.program_id(1)
+    ki = pl.program_id(2)
     tid = jnp.clip(vstart_ref[bi] + jnp.minimum(vi, vcount_ref[bi] - 1),
                    0, n_vtiles - 1)
     row_lo = tid * tile_v
 
-    @pl.when(vi == 0)
+    rows = rows_ref[...]                           # (TILE_B,) sorted rows
+    local = rows - row_lo
+    in_tile = (local >= 0) & (local < tile_v)
+    lidx = jnp.clip(local, 0, tile_v - 1)
+
+    @pl.when((vi == 0) & (ki == 0))
     def _init():
         out_ref[...] = z_ref[...]
 
     @pl.when(vi < vcount_ref[bi])
-    def _body():
-        rows = rows_ref[...]                       # (TILE_B,) sorted rows
-        local = rows - row_lo
-        in_tile = (local >= 0) & (local < tile_v)
-        lidx = jnp.clip(local, 0, tile_v - 1)
+    def _stage():
+        # Stage this (tile_v, tile_k) table block's per-token gathers into
+        # the full-K VMEM scratch.  Pure data movement: column tiles of
+        # the same gathered rows concatenate to exactly the rows the
+        # untiled kernel gathers, so tiling cannot perturb the chain.
+        ksl = pl.ds(ki * tile_k, tile_k)
+        nwk_s[:, ksl] = nwk_ref[...][lidx]
+        stale_s[:, ksl] = stale_ref[...][lidx]
+        prob_s[:, ksl] = prob_ref[...][lidx]
+        alias_s[:, ksl] = alias_ref[...][lidx]
 
+    @pl.when((vi < vcount_ref[bi]) & (ki == n_ktiles - 1))
+    def _body():
         z0 = z_ref[...]                            # (TILE_B,) chain init
         k_topics = ndk_ref.shape[-1]
 
@@ -107,13 +133,13 @@ def _mhw_fused_kernel(vstart_ref, vcount_ref, rows_ref, z_ref, ndk_ref,
         karange = jax.lax.broadcasted_iota(jnp.int32, (1, k_topics), 1)
         own = ((karange == z0[:, None]) & in_tile[:, None]).astype(jnp.float32)
         ndk = ndk_ref[...] - own                   # (TILE_B, K)
-        rows_wk = nwk_ref[...][lidx]               # (TILE_B, K)
+        rows_wk = nwk_s[...]                       # (TILE_B, K) staged
         lm = (rows_wk - own + beta) / (nk_ref[...] - own + beta_bar)
 
         z = mix_chain(
             z0, doc=ndk, prior=prior_ref[...][0], logf=jnp.log(lm + _EPS),
-            sparse_w=ndk * lm, stale_rows=stale_ref[...][lidx],
-            prob_rows=prob_ref[...][lidx], alias_rows=alias_ref[...][lidx],
+            sparse_w=ndk * lm, stale_rows=stale_s[...],
+            prob_rows=prob_s[...], alias_rows=alias_s[...],
             dense_mass=mass_ref[...][lidx], slot=slot_ref[...],
             coin=coin_ref[...], u_mix=umix_ref[...], u_sparse=usp_ref[...],
             u_acc=uacc_ref[...])
@@ -122,8 +148,8 @@ def _mhw_fused_kernel(vstart_ref, vcount_ref, rows_ref, z_ref, ndk_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("tile_v", "tile_b", "n_steps", "beta",
-                                    "beta_bar", "interpret"))
+                   static_argnames=("tile_v", "tile_b", "tile_k", "n_steps",
+                                    "beta", "beta_bar", "interpret"))
 def mhw_sweep_fused(prob: jax.Array, alias: jax.Array, mass: jax.Array,
                     stale: jax.Array, n_wk: jax.Array, n_k: jax.Array,
                     prior: jax.Array, rows: jax.Array, z0: jax.Array,
@@ -132,6 +158,7 @@ def mhw_sweep_fused(prob: jax.Array, alias: jax.Array, mass: jax.Array,
                     vstart: jax.Array, vcount: jax.Array, *,
                     tile_v: int = DEFAULT_TILE_V,
                     tile_b: int = DEFAULT_TILE_B,
+                    tile_k: int | None = None,
                     n_steps: int = 2, beta: float = 0.01,
                     beta_bar: float | None = None,
                     interpret: bool = True) -> jax.Array:
@@ -145,24 +172,36 @@ def mhw_sweep_fused(prob: jax.Array, alias: jax.Array, mass: jax.Array,
     (n_steps, B) per-MH-step uniforms (slot is int32 in [0, K)).
     vstart/vcount: (B/tile_b,) vocab-tile windows from
     ``segment.build_layout``.  Returns (B,) int32 final states.
+
+    ``tile_k`` (None ⇒ K) adds the K-tile *staging* axis: the (V, K)
+    tables stream through VMEM in (tile_v, tile_k) blocks whose per-token
+    gathers accumulate into full-K scratch; the chain itself — which
+    needs the full K row per token (cumsum proposal CDF, arbitrary-index
+    gathers) — runs once per (batch, vocab) tile on the staged scratch,
+    bit-identical to the untiled kernel.  Table VMEM residency drops from
+    (tile_v, K) to (tile_v, tile_k); the (tile_b, K) per-token state is
+    the floor, so shrink ``tile_b`` as K grows (``segment.pick_tile_vmem``).
     """
     v, k = prob.shape
     b = rows.shape[0]
     tile_v = min(tile_v, v)
     tile_b = min(tile_b, b)
+    tile_k = k if tile_k is None else min(tile_k, k)
     assert v % tile_v == 0 and b % tile_b == 0
-    nb, nv = b // tile_b, v // tile_v
+    assert k % tile_k == 0, f"K={k} must be a multiple of tile_k={tile_k}"
+    nb, nv, nk = b // tile_b, v // tile_v, k // tile_k
     assert vstart.shape == (nb,) and vcount.shape == (nb,)
     if beta_bar is None:
         beta_bar = beta * v
 
     kernel = functools.partial(_mhw_fused_kernel, tile_v=tile_v, n_vtiles=nv,
+                               tile_k=tile_k, n_ktiles=nk,
                                beta=beta, beta_bar=beta_bar)
-    bmap, bmap2, smap, fullmap, vmap_, vmap1 = _index_maps(nv)
+    bmap, bmap2, smap, fullmap, vmapk, _, vmap1 = _index_maps(nv, nk)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(nb, nv),
+        grid=(nb, nv, nk),
         in_specs=[
             pl.BlockSpec((tile_b,), bmap),           # rows
             pl.BlockSpec((tile_b,), bmap),           # z0
@@ -172,15 +211,21 @@ def mhw_sweep_fused(prob: jax.Array, alias: jax.Array, mass: jax.Array,
             pl.BlockSpec((n_steps, tile_b), smap),   # u_mix
             pl.BlockSpec((n_steps, tile_b), smap),   # u_sparse
             pl.BlockSpec((n_steps, tile_b), smap),   # u_acc
-            pl.BlockSpec((tile_v, k), vmap_),        # prob
-            pl.BlockSpec((tile_v, k), vmap_),        # alias
+            pl.BlockSpec((tile_v, tile_k), vmapk),   # prob
+            pl.BlockSpec((tile_v, tile_k), vmapk),   # alias
             pl.BlockSpec((tile_v,), vmap1),          # mass
-            pl.BlockSpec((tile_v, k), vmap_),        # stale
-            pl.BlockSpec((tile_v, k), vmap_),        # n_wk
+            pl.BlockSpec((tile_v, tile_k), vmapk),   # stale
+            pl.BlockSpec((tile_v, tile_k), vmapk),   # n_wk
             pl.BlockSpec((1, k), fullmap),           # n_k
             pl.BlockSpec((1, k), fullmap),           # prior
         ],
         out_specs=pl.BlockSpec((tile_b,), bmap),
+        scratch_shapes=[
+            pltpu.VMEM((tile_b, k), jnp.float32),    # staged n_wk gathers
+            pltpu.VMEM((tile_b, k), jnp.float32),    # staged stale gathers
+            pltpu.VMEM((tile_b, k), jnp.float32),    # staged prob gathers
+            pltpu.VMEM((tile_b, k), jnp.int32),      # staged alias gathers
+        ],
     )
     return pl.pallas_call(
         kernel,
@@ -201,25 +246,45 @@ def _pdp_fused_kernel(vstart_ref, vcount_ref, rows_ref, e_ref, ndk_ref,
                       slot_ref, coin_ref, umix_ref, usp_ref, uacc_ref,
                       prob_ref, alias_ref, mass_ref, stale_ref, mwk_ref,
                       swk_ref, mk_ref, sk_ref, prior_ref, stirl_ref, out_ref,
-                      *, tile_v: int, n_vtiles: int, b: float, a: float,
+                      mwk_s, swk_s, stale_s, prob_s, alias_s,
+                      *, tile_v: int, n_vtiles: int, tile_k: int,
+                      n_ktiles: int, b: float, a: float,
                       gamma: float, gamma_bar: float):
     bi = pl.program_id(0)
     vi = pl.program_id(1)
+    ei = pl.program_id(2)          # e-tile over the 2K joint outcomes
+    n_etiles = 2 * n_ktiles
     tid = jnp.clip(vstart_ref[bi] + jnp.minimum(vi, vcount_ref[bi] - 1),
                    0, n_vtiles - 1)
     row_lo = tid * tile_v
 
-    @pl.when(vi == 0)
+    rows = rows_ref[...]
+    local = rows - row_lo
+    in_tile = (local >= 0) & (local < tile_v)
+    lidx = jnp.clip(local, 0, tile_v - 1)
+
+    @pl.when((vi == 0) & (ei == 0))
     def _init():
         out_ref[...] = e_ref[...]
 
     @pl.when(vi < vcount_ref[bi])
-    def _body():
-        rows = rows_ref[...]
-        local = rows - row_lo
-        in_tile = (local >= 0) & (local < tile_v)
-        lidx = jnp.clip(local, 0, tile_v - 1)
+    def _stage_e():
+        # The (V, 2K) joint-outcome tables stream one e-tile per step.
+        esl = pl.ds(ei * tile_k, tile_k)
+        stale_s[:, esl] = stale_ref[...][lidx]
+        prob_s[:, esl] = prob_ref[...][lidx]
+        alias_s[:, esl] = alias_ref[...][lidx]
 
+    @pl.when((vi < vcount_ref[bi]) & (ei < n_ktiles))
+    def _stage_k():
+        # The (V, K) customer/table counts only have k-tiles for the
+        # first half of the e axis (their index map clips past it).
+        ksl = pl.ds(ei * tile_k, tile_k)
+        mwk_s[:, ksl] = mwk_ref[...][lidx]
+        swk_s[:, ksl] = swk_ref[...][lidx]
+
+    @pl.when((vi < vcount_ref[bi]) & (ei == n_etiles - 1))
+    def _body():
         e0 = e_ref[...]                            # (TILE_B,) joint outcome
         k_topics = ndk_ref.shape[-1]
 
@@ -227,7 +292,7 @@ def _pdp_fused_kernel(vstart_ref, vcount_ref, rows_ref, e_ref, ndk_ref,
         # the gathered rows, the aggregates and its doc row, with the CRP
         # bookkeeping repair — same functions as the oracle.
         own_t, own_r = own_contrib(k_topics, e0, in_tile)
-        m_row, s_row = corrected_rows(mwk_ref[...][lidx], swk_ref[...][lidx],
+        m_row, s_row = corrected_rows(mwk_s[...], swk_s[...],
                                       own_t, own_r)
         m_k_m = mk_ref[...] - own_t                # (TILE_B, K) via broadcast
         s_k_m = sk_ref[...] - own_r
@@ -242,8 +307,8 @@ def _pdp_fused_kernel(vstart_ref, vcount_ref, rows_ref, e_ref, ndk_ref,
         e = mix_chain(
             e0, doc=ndk_ext, prior=prior_ref[...][0], logf=log_f,
             sparse_w=ndk_ext * jnp.exp(log_f),
-            stale_rows=stale_ref[...][lidx], prob_rows=prob_ref[...][lidx],
-            alias_rows=alias_ref[...][lidx], dense_mass=mass_ref[...][lidx],
+            stale_rows=stale_s[...], prob_rows=prob_s[...],
+            alias_rows=alias_s[...], dense_mass=mass_ref[...][lidx],
             slot=slot_ref[...], coin=coin_ref[...], u_mix=umix_ref[...],
             u_sparse=usp_ref[...], u_acc=uacc_ref[...])
 
@@ -251,8 +316,8 @@ def _pdp_fused_kernel(vstart_ref, vcount_ref, rows_ref, e_ref, ndk_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("tile_v", "tile_b", "n_steps", "b_conc",
-                                    "a_disc", "gamma", "gamma_bar",
+                   static_argnames=("tile_v", "tile_b", "tile_k", "n_steps",
+                                    "b_conc", "a_disc", "gamma", "gamma_bar",
                                     "interpret"))
 def pdp_sweep_fused(prob: jax.Array, alias: jax.Array, mass: jax.Array,
                     stale: jax.Array, m_wk: jax.Array, s_wk: jax.Array,
@@ -262,7 +327,8 @@ def pdp_sweep_fused(prob: jax.Array, alias: jax.Array, mass: jax.Array,
                     u_mix: jax.Array, u_sparse: jax.Array, u_acc: jax.Array,
                     vstart: jax.Array, vcount: jax.Array, *,
                     tile_v: int = DEFAULT_TILE_V,
-                    tile_b: int = DEFAULT_TILE_B, n_steps: int = 2,
+                    tile_b: int = DEFAULT_TILE_B,
+                    tile_k: int | None = None, n_steps: int = 2,
                     b_conc: float = 10.0, a_disc: float = 0.1,
                     gamma: float = 0.5, gamma_bar: float | None = None,
                     interpret: bool = True) -> jax.Array:
@@ -274,6 +340,13 @@ def pdp_sweep_fused(prob: jax.Array, alias: jax.Array, mass: jax.Array,
     prior: (2K,) = α·1.  rows/e0: (B,) sorted token-types and joint-outcome
     chain init; ndk: (B, K) raw gathered doc rows; uniforms (n_steps, B),
     slot int32 in [0, 2K).  Returns (B,) int32 final joint outcomes.
+
+    ``tile_k`` (None ⇒ K) adds the staging axis as in
+    :func:`mhw_sweep_fused`, here over ``2K/tile_k`` e-tiles: the (V, 2K)
+    joint tables stage one (tile_v, tile_k) block per step, the (V, K)
+    customer/table counts only during the first K/tile_k steps; the chain
+    runs on the staged full-width scratch at the last e-tile, bit-exact
+    with the untiled kernel.
     """
     v, e_out = prob.shape
     k = m_wk.shape[1]
@@ -281,21 +354,24 @@ def pdp_sweep_fused(prob: jax.Array, alias: jax.Array, mass: jax.Array,
     bsz = rows.shape[0]
     tile_v = min(tile_v, v)
     tile_b = min(tile_b, bsz)
+    tile_k = k if tile_k is None else min(tile_k, k)
     assert v % tile_v == 0 and bsz % tile_b == 0
-    nb, nv = bsz // tile_b, v // tile_v
+    assert k % tile_k == 0, f"K={k} must be a multiple of tile_k={tile_k}"
+    nb, nv, nk = bsz // tile_b, v // tile_v, k // tile_k
     assert vstart.shape == (nb,) and vcount.shape == (nb,)
     if gamma_bar is None:
         gamma_bar = gamma * v
 
     kernel = functools.partial(_pdp_fused_kernel, tile_v=tile_v, n_vtiles=nv,
+                               tile_k=tile_k, n_ktiles=nk,
                                b=b_conc, a=a_disc, gamma=gamma,
                                gamma_bar=gamma_bar)
-    bmap, bmap2, smap, fullmap, vmap_, vmap1 = _index_maps(nv)
+    bmap, bmap2, smap, fullmap, vmapk, vmapk_clip, vmap1 = _index_maps(nv, nk)
 
     s_dim = stirl.shape[0]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(nb, nv),
+        grid=(nb, nv, 2 * nk),
         in_specs=[
             pl.BlockSpec((tile_b,), bmap),            # rows
             pl.BlockSpec((tile_b,), bmap),            # e0
@@ -305,18 +381,25 @@ def pdp_sweep_fused(prob: jax.Array, alias: jax.Array, mass: jax.Array,
             pl.BlockSpec((n_steps, tile_b), smap),    # u_mix
             pl.BlockSpec((n_steps, tile_b), smap),    # u_sparse
             pl.BlockSpec((n_steps, tile_b), smap),    # u_acc
-            pl.BlockSpec((tile_v, e_out), vmap_),     # prob
-            pl.BlockSpec((tile_v, e_out), vmap_),     # alias
+            pl.BlockSpec((tile_v, tile_k), vmapk),    # prob (e-tiles)
+            pl.BlockSpec((tile_v, tile_k), vmapk),    # alias (e-tiles)
             pl.BlockSpec((tile_v,), vmap1),           # mass
-            pl.BlockSpec((tile_v, e_out), vmap_),     # stale
-            pl.BlockSpec((tile_v, k), vmap_),         # m_wk
-            pl.BlockSpec((tile_v, k), vmap_),         # s_wk
+            pl.BlockSpec((tile_v, tile_k), vmapk),    # stale (e-tiles)
+            pl.BlockSpec((tile_v, tile_k), vmapk_clip),  # m_wk (k-tiles)
+            pl.BlockSpec((tile_v, tile_k), vmapk_clip),  # s_wk (k-tiles)
             pl.BlockSpec((1, k), fullmap),            # m_k
             pl.BlockSpec((1, k), fullmap),            # s_k
             pl.BlockSpec((1, e_out), fullmap),        # prior
             pl.BlockSpec((s_dim, s_dim), fullmap),    # stirling table
         ],
         out_specs=pl.BlockSpec((tile_b,), bmap),
+        scratch_shapes=[
+            pltpu.VMEM((tile_b, k), jnp.float32),     # staged m_wk gathers
+            pltpu.VMEM((tile_b, k), jnp.float32),     # staged s_wk gathers
+            pltpu.VMEM((tile_b, e_out), jnp.float32),  # staged stale
+            pltpu.VMEM((tile_b, e_out), jnp.float32),  # staged prob
+            pltpu.VMEM((tile_b, e_out), jnp.int32),   # staged alias
+        ],
     )
     return pl.pallas_call(
         kernel,

@@ -116,6 +116,7 @@ def mhw_sweep_sorted(tables: AliasTable, stale: jax.Array, n_wk: jax.Array,
                      beta: float, beta_bar: float,
                      tile_v: int = _sample.DEFAULT_TILE_V,
                      tile_b: int = _sample.DEFAULT_TILE_B,
+                     tile_k: int | None = None,
                      interpret: bool | None = None) -> jax.Array:
     """Fused sorted-layout MHW chain for the lm families (LDA: prior = α·1,
     HDP: prior = b1·θ0): draws the per-step uniforms and runs
@@ -126,8 +127,8 @@ def mhw_sweep_sorted(tables: AliasTable, stale: jax.Array, n_wk: jax.Array,
     return _fused.mhw_sweep_fused(
         tables.prob, tables.alias, tables.mass, stale, n_wk, n_k, prior,
         rows, z0, ndk, slot, coin, u_mix, u_sparse, u_acc, vstart, vcount,
-        tile_v=tile_v, tile_b=tile_b, n_steps=mh_steps, beta=beta,
-        beta_bar=beta_bar,
+        tile_v=tile_v, tile_b=tile_b, tile_k=tile_k, n_steps=mh_steps,
+        beta=beta, beta_bar=beta_bar,
         interpret=INTERPRET if interpret is None else interpret)
 
 
@@ -140,6 +141,7 @@ def pdp_sweep_sorted(tables: AliasTable, stale: jax.Array, m_wk: jax.Array,
                      gamma_bar: float,
                      tile_v: int = _sample.DEFAULT_TILE_V,
                      tile_b: int = _sample.DEFAULT_TILE_B,
+                     tile_k: int | None = None,
                      interpret: bool | None = None) -> jax.Array:
     """Fused sorted-layout MHW chain for PDP's joint 2K outcome space:
     draws the per-step uniforms (slot over [0, 2K)) and runs
@@ -151,9 +153,9 @@ def pdp_sweep_sorted(tables: AliasTable, stale: jax.Array, m_wk: jax.Array,
     return _fused.pdp_sweep_fused(
         tables.prob, tables.alias, tables.mass, stale, m_wk, s_wk, m_k, s_k,
         stirl, prior, rows, e0, ndk, slot, coin, u_mix, u_sparse, u_acc,
-        vstart, vcount, tile_v=tile_v, tile_b=tile_b, n_steps=mh_steps,
-        b_conc=concentration, a_disc=discount, gamma=gamma,
-        gamma_bar=gamma_bar,
+        vstart, vcount, tile_v=tile_v, tile_b=tile_b, tile_k=tile_k,
+        n_steps=mh_steps, b_conc=concentration, a_disc=discount,
+        gamma=gamma, gamma_bar=gamma_bar,
         interpret=INTERPRET if interpret is None else interpret)
 
 

@@ -71,39 +71,48 @@ class RemoteParameterServer:
 
     def __init__(self, addrs: Sequence[str], *, family, n_clients: int,
                  vocab_size: int, consistency: str = "bsp",
-                 timeout: float = 60.0):
+                 timeout: float = 60.0, sparse_push: bool = False,
+                 reconnect_limit: int = 3):
         self.family = (family_mod.get(family) if isinstance(family, str)
                        else family)
         self.n_clients = n_clients
         self.vocab_size = vocab_size
         self.policy = server_mod.make_consistency(consistency)
         self.timeout = timeout
+        # Encode pushes as COO row-sliced PUSH_SPARSE frames (DESIGN.md
+        # §12).  Off by default: dense PUSH is the reference encoding.
+        self.sparse_push = sparse_push
+        # Bounded re-dial budget for dropped connections during PULL
+        # (read-only, so a retry on a fresh socket is always safe).
+        self.reconnect_limit = reconnect_limit
         self._conns: list[protocol.FramedConnection] = []
         self._rows: list[tuple[int, int]] = []
+        self._addrs: list[str] = []
         self.project_every: int | None = None
-        hello = {"family": self.family.name, "vocab_size": vocab_size,
-                 "n_clients": n_clients, "consistency": self.policy.key}
+        self._hello = {"family": self.family.name, "vocab_size": vocab_size,
+                       "n_clients": n_clients,
+                       "consistency": self.policy.key}
         pairs = []
         for addr in addrs:
             conn = _connect(addr, timeout)
             try:
-                _, meta, _ = conn.request(MsgType.HELLO, hello,
+                _, meta, _ = conn.request(MsgType.HELLO, self._hello,
                                           expect=(MsgType.WELCOME,))
             except ProtocolError as e:
                 conn.close()
-                for c, _r in pairs:
+                for _a, c, _r in pairs:
                     c.close()
                 raise RemoteError(f"handshake with {addr} failed: {e}") \
                     from e
-            pairs.append((conn, tuple(meta["rows"])))
+            pairs.append((addr, conn, tuple(meta["rows"])))
             self.project_every = meta.get("project_every",
                                           self.project_every)
         # Servers sorted by row range; together they must tile [0, V).
-        pairs.sort(key=lambda p: p[1][0])
+        pairs.sort(key=lambda p: p[2][0])
         cursor = 0
-        for conn, (lo, hi) in pairs:
+        for addr, conn, (lo, hi) in pairs:
             if lo != cursor:
-                for c, _r in pairs:
+                for _a, c, _r in pairs:
                     c.close()
                 raise RemoteError(
                     f"server row ranges do not tile the vocabulary: "
@@ -111,6 +120,7 @@ class RemoteParameterServer:
             cursor = hi
             self._conns.append(conn)
             self._rows.append((lo, hi))
+            self._addrs.append(addr)
         if cursor != vocab_size:
             self.close()
             raise RemoteError(f"server row ranges cover [0, {cursor}) "
@@ -159,6 +169,38 @@ class RemoteParameterServer:
                                     expect=expect))
         return out
 
+    def _reconnect(self, i: int) -> None:
+        """Re-dial server ``i`` after a dropped connection: fresh socket,
+        fresh HELLO handshake, and a check that the server still serves
+        the same row range it did at construction (a restarted server
+        with a different partition is a config error, not a blip).  Wire
+        counters carry over so bench totals survive a reconnect."""
+        old = self._conns[i]
+        try:
+            old.close()
+        except OSError:
+            pass
+        conn = _connect(self._addrs[i], self.timeout)
+        try:
+            _, meta, _ = conn.request(MsgType.HELLO, self._hello,
+                                      expect=(MsgType.WELCOME,))
+        except ProtocolError as e:
+            conn.close()
+            raise RemoteError(
+                f"re-handshake with {self._addrs[i]} failed: {e}") from e
+        if tuple(meta["rows"]) != self._rows[i]:
+            conn.close()
+            raise RemoteError(
+                f"server {self._addrs[i]} came back with row range "
+                f"{tuple(meta['rows'])} (was {self._rows[i]})")
+        conn.bytes_in += old.bytes_in
+        conn.bytes_out += old.bytes_out
+        conn.payload_in += old.payload_in
+        conn.payload_out += old.payload_out
+        conn.rpc_count += old.rpc_count
+        conn.rpc_latency_s = old.rpc_latency_s + conn.rpc_latency_s
+        self._conns[i] = conn
+
     # ------------------------------------------------------------- protocol
     def init_push(self, client_id: int, shared) -> None:
         """Send one client's initial statistics (the server merges all
@@ -189,9 +231,34 @@ class RemoteParameterServer:
         meta = {"round": int(round_idx)}
         if cached_version is not None:
             meta["cached_version"] = int(cached_version)
-        replies = self._request_all(
-            MsgType.PULL, [meta] * self.n_servers,
-            expect=(MsgType.STATE, MsgType.NOT_MODIFIED))
+        # PULL is read-only, so a dropped connection is retried on a
+        # fresh socket — bounded by ``reconnect_limit`` consecutive
+        # failures per server (the ``pull_retry_limit`` idiom): past the
+        # budget the failure propagates instead of spinning forever
+        # against a dead server.
+        replies = []
+        for i in range(self.n_servers):
+            failures = 0
+            while True:
+                try:
+                    replies.append(self._conns[i].request(
+                        MsgType.PULL, meta,
+                        expect=(MsgType.STATE, MsgType.NOT_MODIFIED)))
+                    break
+                except (protocol.ConnectionClosed, OSError) as e:
+                    failures += 1
+                    if failures > self.reconnect_limit:
+                        raise RemoteError(
+                            f"pull from {self._addrs[i]} failed after "
+                            f"{self.reconnect_limit} reconnects: {e}") \
+                            from e
+                    try:
+                        self._reconnect(i)
+                    except OSError:
+                        # Dial failure (server down): the dead connection
+                        # stays in place, the next loop iteration fails
+                        # fast and burns the same bounded budget.
+                        pass
         kinds = {mt for mt, _, _ in replies}
         if kinds == {MsgType.NOT_MODIFIED}:
             return None, int(cached_version), False
@@ -226,12 +293,38 @@ class RemoteParameterServer:
     def push(self, round_idx: int, client_id: int,
              deltas: dict[str, Any]) -> None:
         """One client's delta frame for ``round_idx`` (row-sliced per
-        server; the server finalizes the round at the barrier)."""
+        server; the server finalizes the round at the barrier).
+
+        With ``sparse_push`` the row slice is COO-encoded before it hits
+        the wire: the rows that are non-zero in *any* statistic (the
+        union keeps one shared index vector per frame) plus the packed
+        (R, K) values per statistic.  The server scatters the packed rows
+        into zeros and rides the exact dense barrier path, so the round
+        total is bit-for-bit the dense PUSH total (dropped rows are
+        exactly 0.0, and 0 + x == x in IEEE 754)."""
         nps = {n: np.asarray(v) for n, v in deltas.items()}
         names = tuple(nps)
         meta = {"round": int(round_idx), "client": int(client_id)}
-        self._request_all(MsgType.PUSH, [meta] * self.n_servers,
-                          self._split_rows(nps, names),
+        parts = self._split_rows(nps, names)
+        if not self.sparse_push:
+            self._request_all(MsgType.PUSH, [meta] * self.n_servers,
+                              parts, expect=(MsgType.OK,))
+            return
+        metas: list[dict] = []
+        arrays_list: list[dict[str, np.ndarray]] = []
+        for (lo, hi), part in zip(self._rows, parts):
+            nz: np.ndarray | None = None
+            for v in part.values():
+                row_any = np.any(v != 0, axis=tuple(range(1, v.ndim)))
+                nz = row_any if nz is None else (nz | row_any)
+            rows = np.flatnonzero(nz).astype(np.uint32)
+            arrays = {"rows": rows}
+            arrays.update({n: np.ascontiguousarray(part[n][rows])
+                           for n in names})
+            metas.append({**meta, "n_rows": int(hi - lo),
+                          "sparse": list(names)})
+            arrays_list.append(arrays)
+        self._request_all(MsgType.PUSH_SPARSE, metas, arrays_list,
                           expect=(MsgType.OK,))
 
     def project(self) -> None:
@@ -290,6 +383,8 @@ class RemoteParameterServer:
         return {
             "bytes_in": sum(c["bytes_in"] for c in per),
             "bytes_out": sum(c["bytes_out"] for c in per),
+            "payload_in": sum(c["payload_in"] for c in per),
+            "payload_out": sum(c["payload_out"] for c in per),
             "rpc_count": sum(c["rpc_count"] for c in per),
             "rpc_p50_ms": pct(0.50),
             "rpc_p99_ms": pct(0.99),

@@ -95,6 +95,13 @@ class MsgType(enum.IntEnum):
     SHUTDOWN = 14      # client → server: stop serving after reply
     ERROR = 15         # server → client: request failed (meta["error"])
     PULL_KEYS = 16     # client → server: addressed shard-local row slices
+    PUSH_SPARSE = 17   # client → server: COO row-sliced delta frame —
+    #                    arrays carry "rows" (u32/i32 shard-local row ids,
+    #                    strictly increasing, unique) plus one packed
+    #                    (R, K) value matrix per delta statistic; meta
+    #                    carries round/client plus "sparse" (stat names)
+    #                    and "n_rows" (the shard's dense row count, so the
+    #                    server can cross-check before scatter-adding).
 
 
 def _require(cond: bool, msg: str) -> None:
@@ -215,8 +222,14 @@ class FramedConnection:
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         except OSError:
             pass
+        # encoded bytes: everything on the wire, headers included.
         self.bytes_in = 0
         self.bytes_out = 0
+        # payload bytes: the framed data sections only (u32 meta_len +
+        # JSON meta + npz) — what a different encoding could shrink; the
+        # encoded−payload gap is fixed per-frame header overhead.
+        self.payload_in = 0
+        self.payload_out = 0
         self.rpc_count = 0
         self.rpc_latency_s: list[float] = []
 
@@ -225,6 +238,7 @@ class FramedConnection:
         frame = pack_frame(msg_type, meta, arrays)
         self.sock.sendall(frame)
         self.bytes_out += len(frame)
+        self.payload_out += len(frame) - HEADER_SIZE
 
     def recv(self, *, expect: tuple[MsgType, ...] | None = None
              ) -> tuple[MsgType, dict[str, Any], dict[str, np.ndarray]]:
@@ -233,6 +247,7 @@ class FramedConnection:
         mt, length = _validate_header(header)
         payload = recv_all(self.sock, length)
         self.bytes_in += length
+        self.payload_in += length
         meta, arrays = unpack_payload(payload)
         if mt is MsgType.ERROR:
             raise ProtocolError(f"peer error: {meta.get('error', '?')}")
@@ -263,6 +278,8 @@ class FramedConnection:
         return {
             "bytes_in": self.bytes_in,
             "bytes_out": self.bytes_out,
+            "payload_in": self.payload_in,
+            "payload_out": self.payload_out,
             "rpc_count": self.rpc_count,
             "rpc_p50_ms": pct(0.50) * 1e3,
             "rpc_p99_ms": pct(0.99) * 1e3,

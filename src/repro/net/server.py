@@ -241,6 +241,8 @@ class ShardServer:
             return self._on_pull_keys(meta)
         if mt is MsgType.PUSH:
             return self._on_push(meta, arrays)
+        if mt is MsgType.PUSH_SPARSE:
+            return self._on_push_sparse(meta, arrays)
         if mt is MsgType.PROJECT:
             with self._cond:
                 self._require_store()
@@ -399,33 +401,98 @@ class ShardServer:
                         f"PUSH delta {n!r} has shape {v.shape}, store has "
                         f"{self._store[n].shape} (rows [{lo}, {hi}))")
                 deltas[n] = v
-            if self.policy.immediate:
-                # Async: apply on arrival (Gauss-Seidel in arrival order).
-                for n in deltas:
-                    self._store[n] = self._store[n] + deltas[n]
-                self._clocks[c] += 1
-                done = int(self._clocks.min())
-                if self.project_every and done > self._round:
-                    for m in range(self._round, done):
-                        if m % self.project_every == 0:
-                            self._project_locked()
-                    self._round = done
-                elif done > self._round:
-                    self._round = done
-                self._cond.notify_all()
-            else:
-                if r < self._round:
+            return self._apply_push_locked(r, c, deltas)
+
+    def _on_push_sparse(self, meta: dict, arrays: dict):
+        """The COO row-sliced push frame (DESIGN.md §12): ``rows`` carries
+        shard-local row ids, each delta stat a packed (R, K) value block.
+
+        Every index is validated — integer dtype, 1-D, in-range for this
+        shard's row slice, strictly increasing (which implies unique and
+        non-negative), value blocks exactly (R, K) — *before* the store is
+        touched, under the lock, so a malformed sparse frame answers a
+        clean ERROR and leaves the store byte-identical.  The densified
+        delta then rides the exact dense-push barrier path: scatter of
+        disjoint rows into zeros reconstructs the sender's dense delta
+        bit-for-bit, so sparse BSP stays bit-exact with dense BSP.
+        """
+        r, c = int(meta["round"]), int(meta["client"])
+        if not 0 <= c < self.n_clients:
+            raise ValueError(f"client id {c} out of range")
+        lo, hi = self.rows
+        if "rows" not in arrays:
+            raise ValueError("PUSH_SPARSE frame is missing the 'rows' array")
+        rows = arrays["rows"]
+        if rows.ndim != 1 or not np.issubdtype(rows.dtype, np.integer):
+            raise ValueError(
+                f"PUSH_SPARSE rows must be a 1-D integer array, got "
+                f"shape {rows.shape} dtype {rows.dtype}")
+        rows = rows.astype(np.int64)
+        n_local = hi - lo
+        if int(meta.get("n_rows", n_local)) != n_local:
+            raise ValueError(
+                f"PUSH_SPARSE n_rows={meta.get('n_rows')} does not match "
+                f"this shard's row slice [{lo}, {hi})")
+        if rows.size and (rows[0] < 0 or rows[-1] >= n_local
+                          or np.any(rows < 0)
+                          or np.any(rows >= n_local)):
+            raise ValueError(
+                f"PUSH_SPARSE row index out of range [0, {n_local}) "
+                f"(rows [{lo}, {hi}))")
+        if rows.size and np.any(np.diff(rows) <= 0):
+            raise ValueError(
+                "PUSH_SPARSE rows must be strictly increasing (duplicate "
+                "or unsorted row indices would mis-apply the scatter-add)")
+        with self._cond:
+            self._require_store()
+            deltas = {}
+            for n in self._sharded:
+                if n not in arrays:
+                    raise ValueError(f"PUSH_SPARSE frame is missing packed "
+                                     f"rows for stat {n!r}")
+                v = arrays[n]
+                want = (rows.size,) + self._store[n].shape[1:]
+                if v.shape != want:
                     raise ValueError(
-                        f"PUSH for already-finalized round {r} "
-                        f"(server at {self._round})")
-                slot = self._pending.setdefault(r, {})
-                if c in slot:
-                    raise ValueError(f"duplicate PUSH (round {r}, "
-                                     f"client {c})")
-                slot[c] = deltas
-                self._advance_locked()
-            return MsgType.OK, {"server_round": self._round,
-                                "round": r, "client": c}, None
+                        f"PUSH_SPARSE values {n!r} have shape {v.shape}; "
+                        f"{len(rows)} row indices over store "
+                        f"{self._store[n].shape} require {want}")
+                dense = np.zeros(self._store[n].shape, v.dtype)
+                dense[rows] = v
+                deltas[n] = dense
+            return self._apply_push_locked(r, c, deltas)
+
+    def _apply_push_locked(self, r: int, c: int,
+                           deltas: dict[str, np.ndarray]):
+        """Shared tail of the dense and sparse push paths — the policy
+        split (async immediate vs barrier buffering) and the ack."""
+        if self.policy.immediate:
+            # Async: apply on arrival (Gauss-Seidel in arrival order).
+            for n in deltas:
+                self._store[n] = self._store[n] + deltas[n]
+            self._clocks[c] += 1
+            done = int(self._clocks.min())
+            if self.project_every and done > self._round:
+                for m in range(self._round, done):
+                    if m % self.project_every == 0:
+                        self._project_locked()
+                self._round = done
+            elif done > self._round:
+                self._round = done
+            self._cond.notify_all()
+        else:
+            if r < self._round:
+                raise ValueError(
+                    f"PUSH for already-finalized round {r} "
+                    f"(server at {self._round})")
+            slot = self._pending.setdefault(r, {})
+            if c in slot:
+                raise ValueError(f"duplicate PUSH (round {r}, "
+                                 f"client {c})")
+            slot[c] = deltas
+            self._advance_locked()
+        return MsgType.OK, {"server_round": self._round,
+                            "round": r, "client": c}, None
 
     def _advance_locked(self) -> None:
         """Finalize every consecutive complete round: sum the pending

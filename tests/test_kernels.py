@@ -91,3 +91,31 @@ def test_ops_sample_rows_statistics():
         emp = np.bincount(s[r], minlength=k) / s.shape[1]
         refd = np.asarray(p[r] / p[r].sum())
         assert 0.5 * np.abs(emp - refd).sum() < 0.05
+
+
+@pytest.mark.parametrize("tile_k", [4, 8, 16])
+def test_alias_build_tile_k_bitexact(tile_k):
+    """The 2-phase K-tiled alias build (stage → build-on-scratch → flush)
+    equals the untiled single-phase kernel bit for bit."""
+    v, k = 32, 16
+    p = jax.random.gamma(jax.random.PRNGKey(7), 0.5, (v, k)) + 1e-4
+    want = alias_build.alias_build(p, tile_r=8)
+    got = alias_build.alias_build(p, tile_r=8, tile_k=tile_k)
+    for a, b in zip(want, got):
+        assert bool(jnp.all(a == b))
+
+
+@pytest.mark.parametrize("tile_k", [4, 8, 16])
+def test_alias_build_fused_tile_k_bitexact(tile_k):
+    """The fused LDA-term build stages *raw* n_wk/n_k tiles and computes
+    the dense term on full-K scratch — so XLA cannot round the
+    elementwise term differently per block shape (the 1-ulp trap)."""
+    v, k = 32, 16
+    key = jax.random.PRNGKey(11)
+    n_wk = jnp.floor(jax.random.gamma(key, 1.0, (v, k)) * 4)
+    n_k = n_wk.sum(0)
+    kw = dict(alpha=0.1, beta=0.01, vocab_size=v, tile_r=8)
+    want = alias_build.alias_build_fused(n_wk, n_k, **kw)
+    got = alias_build.alias_build_fused(n_wk, n_k, tile_k=tile_k, **kw)
+    for a, b in zip(want, got):
+        assert bool(jnp.all(a == b))

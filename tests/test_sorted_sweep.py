@@ -366,3 +366,115 @@ def test_family_sorted_matches_scan_perplexity(name):
     }
     rel = abs(means["sorted"] - means["scan"]) / means["scan"]
     assert rel < 0.05, means
+
+
+# ---------------------------------------------------------------------------
+# K-tiling: the tile_k staging axis (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def _mhw_inputs(v=60, k=16, b=256, lo=0, hi=60, steps=2):
+    key = jax.random.PRNGKey(v * k + b)
+    alpha, beta = 0.1, 0.01
+    beta_bar = beta * v
+    n_wk = jax.random.gamma(key, 1.0, (v, k)) * 5
+    n_k = n_wk.sum(0)
+    prior = jnp.full((k,), alpha, jnp.float32)
+    stale = prior[None, :] * (n_wk + beta) / (n_k[None, :] + beta_bar)
+    tabs = ops.build_tables(stale, tile_r=segment.pick_tile(v, 8))
+    rows = _sorted_rows(jax.random.fold_in(key, 1), b, lo, hi, v)
+    z0 = jax.random.randint(jax.random.fold_in(key, 2), (b,), 0, k,
+                            jnp.int32)
+    ndk = jax.random.gamma(jax.random.fold_in(key, 3), 0.5, (b, k))
+    ndk = ndk.at[jnp.arange(b), z0].add(1.0)
+    ks = jax.random.split(jax.random.fold_in(key, 4), 5)
+    slot = jax.random.randint(ks[0], (steps, b), 0, k, jnp.int32)
+    uni = [jax.random.uniform(ks[i], (steps, b)) for i in range(1, 5)]
+    return (tabs, stale, n_wk, n_k, prior, rows, z0, ndk, slot, uni,
+            beta, beta_bar, steps)
+
+
+@pytest.mark.parametrize("tile_k", [4, 8, 16])
+def test_mhw_fused_tile_k_bitexact(tile_k):
+    """The K-staging grid axis is pure data movement: for any tile_k the
+    fused kernel's draws equal the untiled kernel's and the oracle's,
+    bit for bit."""
+    (tabs, stale, n_wk, n_k, prior, rows, z0, ndk, slot, uni,
+     beta, beta_bar, steps) = _mhw_inputs()
+    vstart, vcount = _windows(rows, 60, 12, 64)
+
+    def run(tk):
+        return mhw_fused.mhw_sweep_fused(
+            tabs.prob, tabs.alias, tabs.mass, stale, n_wk, n_k, prior,
+            rows, z0, ndk, slot, *uni, vstart, vcount, tile_v=12,
+            tile_b=64, n_steps=steps, beta=beta, beta_bar=beta_bar,
+            tile_k=tk)
+
+    out_r = ref.mhw_sweep_sorted_ref(
+        tabs.prob, tabs.alias, tabs.mass, stale, n_wk, n_k, prior, rows,
+        z0, ndk, slot, *uni, beta=beta, beta_bar=beta_bar)
+    assert bool(jnp.all(run(tile_k) == out_r))
+    assert bool(jnp.all(run(tile_k) == run(None)))
+
+
+@pytest.mark.parametrize("tile_k", [2, 4, 8])
+def test_pdp_fused_tile_k_bitexact(tile_k):
+    """Same staging argument for the PDP kernel's 2K joint-outcome axis
+    (e-tiles stage always, K-side stats only for the first nk tiles)."""
+    v, k, b, steps = 64, 8, 256, 2
+    key = jax.random.PRNGKey(v * k + b + 1)
+    cfg = pdp.PDPConfig(n_topics=k, vocab_size=v, mh_steps=steps,
+                        stirling_n_max=128, concentration=5.0)
+    m_wk = jnp.floor(jax.random.gamma(key, 1.0, (v, k)) * 3)
+    s_wk = jnp.minimum(jnp.ceil(m_wk * 0.5), m_wk)
+    shared = pdp.SharedStats(m_wk=m_wk, s_wk=s_wk, m_k=m_wk.sum(0),
+                             s_k=s_wk.sum(0))
+    tabs, stale = pdp.build_alias(cfg, shared)
+    stirl = stirling.as_jax(cfg.stirling_n_max, cfg.discount)
+    prior = jnp.full((2 * k,), cfg.alpha, jnp.float32)
+    rows = _sorted_rows(jax.random.fold_in(key, 1), b, 0, v, v)
+    e0 = jax.random.randint(jax.random.fold_in(key, 2), (b,), 0, 2 * k,
+                            jnp.int32)
+    ndk = jnp.floor(jax.random.gamma(jax.random.fold_in(key, 3), 0.5,
+                                     (b, k)) * 2)
+    ndk = ndk.at[jnp.arange(b), e0 % k].add(1.0)
+    ks = jax.random.split(jax.random.fold_in(key, 4), 5)
+    slot = jax.random.randint(ks[0], (steps, b), 0, 2 * k, jnp.int32)
+    uni = [jax.random.uniform(ks[i], (steps, b)) for i in range(1, 5)]
+    vstart, vcount = _windows(rows, v, 16, 64)
+
+    def run(tk):
+        return mhw_fused.pdp_sweep_fused(
+            tabs.prob, tabs.alias, tabs.mass, stale, m_wk, s_wk,
+            shared.m_k, shared.s_k, stirl, prior, rows, e0, ndk, slot,
+            *uni, vstart, vcount, tile_v=16, tile_b=64, n_steps=steps,
+            b_conc=cfg.concentration, a_disc=cfg.discount,
+            gamma=cfg.gamma, gamma_bar=cfg.gamma * v, tile_k=tk)
+
+    out_r = ref.pdp_sweep_sorted_ref(
+        tabs.prob, tabs.alias, tabs.mass, stale, m_wk, s_wk, shared.m_k,
+        shared.s_k, stirl, prior, rows, e0, ndk, slot, *uni,
+        b=cfg.concentration, a=cfg.discount, gamma=cfg.gamma,
+        gamma_bar=cfg.gamma * v)
+    assert bool(jnp.all(run(tile_k) == out_r))
+    assert bool(jnp.all(run(tile_k) == run(None)))
+
+
+@pytest.mark.parametrize("name", ["lda", "pdp"])
+def test_family_sweep_sorted_tile_k_bitexact(name, tiny_corpus):
+    """cfg.tile_k is representation only: the full sorted sweep produces
+    byte-identical deltas with and without K-tiling."""
+    import dataclasses
+    tokens, mask, _ = tiny_corpus
+    fam = family.get(name)
+    deltas = {}
+    for tk in (None, 4):
+        cfg = dataclasses.replace(_family_cfg(name), tile_v=12, tile_k=tk)
+        local, shared = fam.init_state(cfg, tokens, mask,
+                                       jax.random.PRNGKey(0))
+        tables, stale = fam.build_alias(cfg, shared)
+        _, deltas[tk] = fam.sweep_sorted(cfg, local, shared, tables,
+                                         stale, tokens, mask,
+                                         jax.random.PRNGKey(1), None)
+    for n in deltas[None]:
+        np.testing.assert_array_equal(np.asarray(deltas[None][n]),
+                                      np.asarray(deltas[4][n]), err_msg=n)

@@ -280,3 +280,103 @@ def test_hello_mismatch_rejected(live_server):
         RemoteParameterServer(["%s:%d" % live_server.address],
                               family="lda", n_clients=2,  # server has 1
                               vocab_size=16, timeout=SOCK_TIMEOUT)
+
+
+# ---------------------------------------------------------------------------
+# PUSH_SPARSE frame fuzz (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def _sparse_frame(rows, values=None, *, n_rows=16, names=("n_wk",),
+                  drop_rows=False):
+    """A well-framed PUSH_SPARSE with attacker-controlled indices."""
+    rows = np.asarray(rows)
+    if values is None:
+        values = np.ones((rows.shape[0] if rows.ndim else 0, 4), np.float32)
+    meta = {"round": 0, "client": 0, "n_rows": n_rows,
+            "sparse": list(names)}
+    arrays = {} if drop_rows else {"rows": rows}
+    arrays.update({n: values for n in names})
+    return protocol.pack_frame(MsgType.PUSH_SPARSE, meta, arrays)
+
+
+@pytest.mark.parametrize("frame_fn", [
+    lambda: _sparse_frame(np.array([99], np.int64)),
+    lambda: _sparse_frame(np.array([-1], np.int64)),
+    lambda: _sparse_frame(np.array([3, 3], np.int64)),
+    lambda: _sparse_frame(np.array([5, 1], np.int64)),
+    # uint32 pairs: np.diff would wrap positive without the int64 cast.
+    lambda: _sparse_frame(np.array([5, 1], np.uint32)),
+    lambda: _sparse_frame(np.array([0, 2**32 - 1], np.uint32)),
+    lambda: _sparse_frame(np.array([1], np.int64), drop_rows=True),
+    lambda: _sparse_frame(np.array([[1, 2]], np.int64),
+                          values=np.ones((1, 4), np.float32)),
+    lambda: _sparse_frame(np.array([1.0, 2.0], np.float32)),
+    lambda: _sparse_frame(np.array([1], np.int64), n_rows=7),
+    lambda: _sparse_frame(np.array([1, 2], np.int64),
+                          values=np.ones((3, 4), np.float32)),
+    lambda: _sparse_frame(np.array([1, 2], np.int64),
+                          values=np.ones((2, 3), np.float32)),
+], ids=["oor", "negative", "dup", "unsorted", "unsorted-u32", "oor-u32",
+        "no-rows", "rows-2d", "rows-float", "n_rows-mismatch",
+        "r-mismatch", "k-mismatch"])
+def test_fuzz_sparse_frames_rejected_store_intact(live_server, frame_fn):
+    """Malformed-but-well-framed sparse pushes: clean ERROR, no hang, and
+    the store stays byte-identical (validation precedes any mutation)."""
+    before = _seed_state(live_server)
+    sock = _raw(live_server)
+    try:
+        sock.sendall(frame_fn())
+        _expect_error_then_close(sock)
+    finally:
+        sock.close()
+    rps = RemoteParameterServer(["%s:%d" % live_server.address],
+                                family="lda", n_clients=1, vocab_size=16,
+                                timeout=SOCK_TIMEOUT)
+    after = rps.pull_keys(["n_wk"])
+    rps.close()
+    np.testing.assert_array_equal(before["n_wk"], after["n_wk"])
+
+
+def test_fuzz_sparse_mid_payload_disconnect(live_server):
+    before = _seed_state(live_server)
+    sock = _raw(live_server)
+    try:
+        full = _sparse_frame(np.array([1, 4], np.int64),
+                             values=np.ones((2, 4), np.float32))
+        sock.sendall(full[:protocol.HEADER_SIZE + 14])  # then vanish
+    finally:
+        sock.close()
+    rps = RemoteParameterServer(["%s:%d" % live_server.address],
+                                family="lda", n_clients=1, vocab_size=16,
+                                timeout=SOCK_TIMEOUT)
+    after = rps.pull_keys(["n_wk"])
+    rps.close()
+    np.testing.assert_array_equal(before["n_wk"], after["n_wk"])
+
+
+def test_sparse_push_applies_bitexact_with_dense():
+    """The good path: the same delta pushed dense and sparse (via the
+    client's sparse_push encoder) lands on byte-identical stores."""
+    delta = np.zeros((16, 4), np.float32)
+    delta[2] = [1.0, -2.0, 0.5, 0.0]
+    delta[11] = [-1.0, 0.0, 0.0, 3.0]
+
+    results = {}
+    for mode in ("dense", "sparse"):
+        srv = ShardServer("lda", vocab_size=16, n_clients=1,
+                          consistency="bsp", barrier_timeout=SOCK_TIMEOUT)
+        srv.start()
+        try:
+            _seed_state(srv)
+            rps = RemoteParameterServer(
+                ["%s:%d" % srv.address], family="lda", n_clients=1,
+                vocab_size=16, timeout=SOCK_TIMEOUT,
+                sparse_push=(mode == "sparse"))
+            rps.push(0, 0, {"n_wk": delta})
+            results[mode] = rps.pull_keys(["n_wk"])["n_wk"]
+            rps.close()
+        finally:
+            srv.close()
+    np.testing.assert_array_equal(results["dense"], results["sparse"])
+    # The push genuinely applied (it is not two untouched stores).
+    assert results["dense"][2, 1] != 0.0 or results["dense"][2, 0] != 0.0

@@ -342,3 +342,94 @@ def test_launch_loopback_stress_processes(tmp_path):
             want = want + stress_delta(r, c, (64, 4))
     assert res.clients[0].result["sums"]["n_wk"] == pytest.approx(
         float(want.sum()))
+
+
+# ---------------------------------------------------------------------------
+# Sparse delta exchange over the wire (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family_name", ["lda", "pdp"])
+def test_sparse_push_tcp_bitexact(family_name):
+    """sparse_push is an encoding, not an algorithm change: the tcp
+    Trainer with COO push frames reproduces the in-process run bit for
+    bit (incl. the multi-stat pdp delta, whose rows are the non-zero
+    union across m_wk/s_wk)."""
+    tokens, mask, _ = _corpus()
+    cfg = make_family_cfg(family_name, n_topics=4, vocab_size=64)
+    ref = _run_ref(cfg, tokens, mask, n_clients=2, rounds=3)
+    want = _stats(family_name, ref)
+
+    servers = _servers(family_name, n_clients=2, n_shards=2)
+    try:
+        t = Trainer(cfg, tokens, mask, key=jax.random.PRNGKey(0),
+                    config=TrainerConfig(n_clients=2, tau=1,
+                                         transport="tcp",
+                                         server_addrs=_addrs(servers),
+                                         sparse_push=True))
+        for _ in range(3):
+            t.step()
+        got = _stats(family_name, t)
+        t.close()
+    finally:
+        for s in servers:
+            s.close()
+    for n in want:
+        np.testing.assert_array_equal(want[n], got[n], err_msg=n)
+
+
+def test_sparse_push_rejected_on_inproc_transport():
+    tokens, mask, _ = _corpus()
+    cfg = make_family_cfg("lda", n_topics=4, vocab_size=64)
+    with pytest.raises(ValueError):
+        Trainer(cfg, tokens, mask,
+                config=TrainerConfig(n_clients=2, sparse_push=True))
+
+
+# ---------------------------------------------------------------------------
+# Bounded reconnect on pull
+# ---------------------------------------------------------------------------
+
+def test_pull_reconnects_after_dropped_connection():
+    """A dead socket under a pull: the client re-dials, re-handshakes,
+    carries its wire counters over, and the pull succeeds."""
+    servers = _servers("lda", n_clients=1, n_shards=2)
+    try:
+        with _fresh_remote(servers) as rps:
+            rps.init_push(0, _zero_shared())
+            rps.pull(0)
+            before = rps.counters()
+            # Kill both connections out from under the client.
+            for conn in rps._conns:
+                conn.sock.close()
+            shared, v, refreshed = rps.pull(0)
+            assert refreshed and shared is not None
+            after = rps.counters()
+            # Counters carried over the reconnect (monotone, not reset).
+            assert after["bytes_out"] > before["bytes_out"]
+            assert after["rpc_count"] > before["rpc_count"]
+    finally:
+        for s in servers:
+            s.close()
+
+
+def test_pull_reconnect_budget_exhausts_on_dead_server():
+    """Every reconnect attempt fails once the server is gone: the pull
+    must surface a RemoteError after reconnect_limit tries, not spin."""
+    from repro.net.client import RemoteError
+    servers = _servers("lda", n_clients=1)
+    rps = RemoteParameterServer(_addrs(servers), family="lda",
+                                n_clients=1, vocab_size=64,
+                                timeout=TIMEOUT, reconnect_limit=2)
+    try:
+        rps.init_push(0, _zero_shared())
+        rps.pull(0)
+        for s in servers:
+            s.close()
+        for conn in rps._conns:
+            conn.sock.close()
+        with pytest.raises(RemoteError, match="after 2 reconnects"):
+            rps.pull(0)
+    finally:
+        rps.close()
+        for s in servers:
+            s.close()

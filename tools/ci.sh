@@ -36,10 +36,14 @@ echo "=== quick benchmarks: throughput + families + consistency + failover ==="
 # The wire module is the out-of-process transport bench (DESIGN.md §11):
 # the same Trainer config over the in-process server and over loopback
 # TCP shard servers; BENCH_wire.json must carry rounds/s for both
-# transports, bytes/round, and RPC latency percentiles per policy, and
-# the module itself hard-fails if BSP-over-TCP is not bit-exact with
-# in-process.
-python -m benchmarks.run --only throughput,lda,pdp,hdp,consistency,failover,wire --quick
+# transports, bytes/round (encoded vs payload), and RPC latency
+# percentiles per policy, and the module itself hard-fails if
+# BSP-over-TCP is not bit-exact with in-process or if the sparse delta
+# exchange (DESIGN.md §12) reduces push payload by less than 5x.
+# The scale module is the (V, K) ladder (DESIGN.md §12): K-tiled sorted
+# sweep tokens/s, incremental alias-build ms/row and dense-vs-sparse
+# frame bytes up to (V=65536, K=256) in quick mode.
+python -m benchmarks.run --only throughput,lda,pdp,hdp,consistency,failover,wire,scale --quick
 python - <<'EOF'
 import json
 art = json.load(open("BENCH_consistency.json"))
@@ -83,15 +87,42 @@ assert not missing, f"BENCH_wire.json missing policies: {missing}"
 for name, res in pols.items():
     for transport in ("inproc", "tcp"):
         assert res["rounds_per_s"][transport] > 0, (name, transport, res)
-    assert res["bytes_per_round"] > 0, (name, res)
+    bpr = res["bytes_per_round"]
+    assert bpr["encoded"] >= bpr["payload"] > 0, (name, bpr)
     lat = res["rpc_latency_ms"]
     assert lat["p50"] > 0 and lat["p99"] >= lat["p50"], (name, lat)
+# Bytes/round regression guard: the quick-mode BSP geometry is fixed
+# (V=64, K=4, 2 clients, 2 shards, tau=1), so encoded bytes/round is
+# deterministic modulo JSON meta jitter.  7523 B is the PR-8 baseline;
+# a frame-format or push-cadence regression shows up here.
+assert pols["bsp"]["bytes_per_round"]["encoded"] <= 7523 * 1.10, \
+    ("bytes/round regression vs 7523 B baseline", pols["bsp"])
+sparse = art["sparse"]
+assert sparse["reduction_ratio"] >= 5.0, sparse
 assert art["parity"]["bsp_bitexact"] is True, art["parity"]
+assert art["parity"]["sparse_bitexact"] is True, art["parity"]
 print("wire artifact OK:", ", ".join(
     f"{n}: {pols[n]['rounds_per_s']['tcp']:.1f} r/s tcp "
-    f"({pols[n]['bytes_per_round']/1024:.1f} KiB/round, "
+    f"({pols[n]['bytes_per_round']['encoded']/1024:.1f} KiB/round, "
     f"p99 {pols[n]['rpc_latency_ms']['p99']:.1f} ms)"
-    for n in sorted(pols)))
+    for n in sorted(pols))
+    + f"; sparse push {sparse['reduction_ratio']:.1f}x smaller")
+EOF
+python - <<'EOF'
+import json
+art = json.load(open("BENCH_scale.json"))
+pts = art["points"]
+assert pts, "BENCH_scale.json has no points"
+assert art["max_point"]["vocab"] >= 65536, art["max_point"]
+assert art["max_point"]["n_topics"] >= 256, art["max_point"]
+for p in pts:
+    assert p["tokens_per_s"] > 0, p
+    assert p["alias_build_ms_per_row"] > 0, p
+    assert p["sparse_parity"] is True, p
+    assert p["bytes_per_round"]["ratio"] > 1.0, p
+print("scale artifact OK:", ", ".join(
+    f"V={p['vocab']} K={p['n_topics']}: {p['tokens_per_s']:.0f} tok/s, "
+    f"sparse {p['bytes_per_round']['ratio']:.0f}x" for p in pts))
 EOF
 
 echo "=== loopback e2e smoke: 1 shard server + 2 client processes ==="
