@@ -14,6 +14,19 @@ Measured per consistency policy (BSP, SSP(2), async):
   is back within 2% of the baseline trajectory at the same round;
 * ``degradation`` — relative final-perplexity gap vs the baseline run.
 
+The ``tcp`` section repeats the exercise over the wire (DESIGN.md §13)
+with *process*-level kills: a BSP loopback run through chaos proxies
+(connection drop on the push path) in which one shard-server process is
+killed and restarted from its snapshot and one worker process is killed
+and relaunched with ``--restore``.  Recorded there:
+
+* ``bsp_bitexact`` — the parity bit: final per-stat checksums of the
+  disturbed tcp run equal the undisturbed in-process run's;
+* ``recovery_rounds`` — rounds the restarted worker re-executed beyond
+  its kill point (0 = resumed at exactly the snapshotted round);
+* ``degradation`` — relative final-perplexity gap vs the in-process
+  baseline (0 when bit-exact, by construction).
+
 Artifact: ``BENCH_failover.json``.
 """
 
@@ -61,6 +74,67 @@ def _recovery_rounds(base: list[float], killed: list[float],
     return n - rejoin_round
 
 
+def _tcp_failover(quick: bool) -> dict:
+    """Kill-and-rejoin over the wire: real processes, chaos proxy,
+    shard restart from snapshot, worker restart from snapshot."""
+    from repro.core.fault import FaultEvent, FaultPlan
+    from repro.launch.loopback import _reference_run, launch_failover
+
+    n_rounds = 6 if quick else 10
+    kill_client_round, kill_server_round = 2, 3
+    # Connection ordinal 0 loses its round-1 push on the wire (frame 5)
+    # and recovers through idempotent replay.
+    plan = FaultPlan.scripted(
+        FaultEvent("conn_drop", client=0, start=5, stop=6, period=1))
+    res = launch_failover(
+        client_sets=((0,), (1,)), n_rounds=n_rounds,
+        kill_server_round=kill_server_round,
+        kill_client=1, kill_client_round=kill_client_round,
+        chaos_plan=plan, timeout=420.0)
+    assert res.ok, \
+        f"tcp failover run failed: {[(p.name, p.returncode) for p in res.failures()]}" \
+        f" diagnostics={res.diagnostics}"
+    assert res.restarts == {"server": 1, "client": 1}, \
+        f"expected one shard and one worker restart, got {res.restarts}"
+
+    finals = [p for p in res.clients if p.returncode == 0 and p.result]
+    ref = _reference_run(n_rounds)
+    sums = [p.result["checksums"] for p in finals]
+    bitexact = bool(sums) and all(s == ref["checksums"] for s in sums)
+    victim = next(p for p in finals if p.result["restored"])
+    # Rounds re-executed beyond the kill point: 0 means the restarted
+    # worker resumed at exactly the round its snapshot recorded.
+    recovery = (kill_client_round + victim.result["rounds_done"]) - n_rounds
+    degradation = victim.result["perplexity"] / ref["perplexity"] - 1.0
+    assert bitexact, \
+        f"disturbed tcp run diverged from in-process: {sums} vs " \
+        f"{ref['checksums']}"
+    assert degradation <= MAX_DEGRADATION, \
+        f"tcp: final perplexity degraded {degradation:.3f}"
+
+    section = {
+        "n_rounds": n_rounds,
+        "kill_client_round": kill_client_round,
+        "kill_server_round": kill_server_round,
+        "restarts": res.restarts,
+        "conn_drops": sum(p["actions"]["conn_drop"] for p in res.proxies),
+        "retries": sum(p.result["counters"]["retries"] for p in finals),
+        "bsp_bitexact": bitexact,
+        "recovery_rounds": recovery,
+        "degradation": degradation,
+        "perplexity_final": victim.result["perplexity"],
+        "perplexity_baseline": ref["perplexity"],
+    }
+    common.emit("failover_54", policy="bsp", variant="tcp_kill_rejoin",
+                perplexity_final=victim.result["perplexity"],
+                recovery_rounds=recovery, degradation=degradation,
+                bsp_bitexact=int(bitexact),
+                restarts_server=res.restarts["server"],
+                restarts_client=res.restarts["client"],
+                conn_drops=section["conn_drops"])
+    return section
+
+
 def run(quick: bool = True) -> None:
     tokens, mask, _, ccfg = common.default_corpus(quick, seed=7)
     cfg = lda.LDAConfig(n_topics=ccfg.n_topics, vocab_size=ccfg.vocab_size,
@@ -105,6 +179,8 @@ def run(quick: bool = True) -> None:
         common.emit("failover_54", policy=label, variant="kill_rejoin",
                     perplexity_final=kill_ppl[-1],
                     recovery_rounds=recovery, degradation=degradation)
+
+    artifact["tcp"] = _tcp_failover(quick)
 
     common.write_artifact("failover", artifact)
 

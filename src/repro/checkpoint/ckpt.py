@@ -182,6 +182,41 @@ def restore(directory: str, name: str, template: Any,
     return tree
 
 
+def load_raw(directory: str, name: str,
+             step: int | None = None) -> tuple[int, dict[str, np.ndarray]]:
+    """Template-free restore: the newest readable snapshot as a flat
+    ``{key: array}`` dict plus its step.
+
+    The shard-server restore path (DESIGN.md §13) uses this: a restarted
+    shard process does not yet know its row count or which aux/pending
+    buffers were live, so there is no template to validate against — the
+    server rebuilds its state from whatever keys were saved and validates
+    semantically (row-range, family) afterwards.  Walks the manifest's
+    step history past corrupt files exactly like :func:`restore_latest`;
+    an explicit ``step`` disables the fallback."""
+    manifest = _read_manifest(directory, name)
+    if manifest is None:
+        raise FileNotFoundError(f"no snapshot for {name} in {directory}")
+    steps = [step] if step is not None else \
+        sorted(set(manifest.get("steps", []) or [manifest["step"]]),
+               reverse=True)
+    errors: list[str] = []
+    for s in steps:
+        path = _snapshot_path(directory, name, s, manifest)
+        try:
+            with np.load(path, allow_pickle=False) as data:
+                return s, {k: data[k] for k in data.files}
+        except _NPZ_READ_ERRORS as e:
+            if step is not None:
+                raise CorruptSnapshotError(
+                    f"snapshot {path} is unreadable "
+                    f"({type(e).__name__}: {e})") from e
+            errors.append(f"step {s}: {type(e).__name__}: {e}")
+    raise CorruptSnapshotError(
+        f"no readable snapshot for {name} in {directory}; tried steps "
+        f"{steps}: {errors}")
+
+
 def restore_latest(directory: str, name: str, template: Any,
                    shardings: Any | None = None,
                    step: int | None = None) -> Any:

@@ -58,6 +58,31 @@ round program.  Four event kinds:
     healthy server replica).  Under BSP/async there is no refreshable
     cache — the pull *is* the barrier read — so the event is a no-op.
 
+Network fault kinds (``NET_KINDS``, DESIGN.md §13) schedule *transport*
+misbehavior for the chaos proxy (:mod:`repro.net.chaos`) rather than
+client liveness; :meth:`FaultPlan.resolve` ignores them — they never
+enter the traced round masks.  For these kinds ``client`` is a
+**connection ordinal** at the proxy (-1 = every connection) and
+``[start, stop)`` is a window of client→server **frame ordinals** on
+that connection; ``period`` repeats the action every period-th frame of
+the window (the field defaults to 2 — pass ``period=1`` to fire on
+every frame; single-frame windows are unaffected); ``magnitude`` is
+the action's size:
+
+``conn_drop``
+    Sever the proxied connection before forwarding the scheduled frame —
+    the client sees a mid-RPC connection loss and must retry through the
+    idempotent-replay path (DESIGN.md §13).
+
+``frame_truncate``
+    Forward the frame header plus only ``magnitude`` (fraction, default
+    0.5) of the payload bytes, then sever — the receiver gets a
+    mid-read EOF (`ProtocolError`), never a silently corrupt frame.
+
+``delay``
+    Sleep ``magnitude`` seconds (default 0.05) before forwarding the
+    frame — latency injection without loss.
+
 Determinism: a plan is a frozen value.  :meth:`FaultPlan.random`
 materializes its events eagerly from ``numpy.random.default_rng(seed)``
 at construction, so resolution is a pure function of (plan, round) and a
@@ -70,21 +95,33 @@ from dataclasses import dataclass
 
 import numpy as np
 
-KINDS = ("crash", "straggle", "lost_push", "failed_pull")
+ROUND_KINDS = ("crash", "straggle", "lost_push", "failed_pull")
+NET_KINDS = ("conn_drop", "frame_truncate", "delay")
+KINDS = ROUND_KINDS + NET_KINDS
+
+_NET_MAGNITUDE_DEFAULT = {"conn_drop": 0.0, "frame_truncate": 0.5,
+                          "delay": 0.05}
 
 
 @dataclass(frozen=True)
 class FaultEvent:
     """One scheduled fault: ``kind`` applied to ``client`` for rounds in
     ``[start, stop)``.  ``client`` is ignored for ``failed_pull`` (the
-    cache refresh is shared).  ``period`` applies to ``straggle`` only:
-    the client completes work every ``period``-th round of the window."""
+    cache refresh is shared).  ``period`` applies to ``straggle`` only
+    (the client completes work every ``period``-th round of the window)
+    and to the network kinds (the action fires every ``period``-th frame
+    of the window; the default of 2 means every other frame — pass
+    ``period=1`` for every frame).  For the network kinds
+    (``NET_KINDS``) ``client`` is a proxy connection ordinal (-1 = all),
+    ``[start, stop)`` is a frame-ordinal window, and ``magnitude`` sizes
+    the action (truncate fraction / delay seconds)."""
 
     kind: str
     client: int = 0
     start: int = 0
     stop: int = 0
     period: int = 2
+    magnitude: float = 0.0
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -93,6 +130,25 @@ class FaultEvent:
         if self.stop < self.start:
             raise ValueError(f"fault window [{self.start}, {self.stop}) "
                              "is reversed")
+        if self.kind in NET_KINDS:
+            if self.client < -1:
+                raise ValueError("network fault connection ordinal must "
+                                 f"be >= -1 (-1 = all), got {self.client}")
+            if self.period < 1:
+                raise ValueError("network fault period must be >= 1, "
+                                 f"got {self.period}")
+            if self.magnitude == 0.0 and self.kind != "conn_drop":
+                object.__setattr__(self, "magnitude",
+                                   _NET_MAGNITUDE_DEFAULT[self.kind])
+            if self.kind == "frame_truncate" and not (
+                    0.0 <= self.magnitude < 1.0):
+                raise ValueError("frame_truncate magnitude is the kept "
+                                 "payload fraction and must be in "
+                                 f"[0, 1), got {self.magnitude}")
+            if self.magnitude < 0.0:
+                raise ValueError(f"magnitude must be >= 0, "
+                                 f"got {self.magnitude}")
+            return
         if self.kind != "failed_pull" and self.client < 0:
             raise ValueError(f"client must be >= 0, got {self.client}")
         if self.kind == "straggle" and self.period < 2:
@@ -231,15 +287,24 @@ class FaultPlan:
     # ----------------------------------------------------------- resolution
     @property
     def max_client(self) -> int:
-        """Largest client id any per-client event names (-1 if none) —
-        validated against ``n_clients`` by the Trainer."""
-        ids = [e.client for e in self.events if e.kind != "failed_pull"]
+        """Largest client id any per-client *round* event names (-1 if
+        none) — validated against ``n_clients`` by the Trainer.  Network
+        events name connection ordinals, not clients, and are skipped."""
+        ids = [e.client for e in self.events
+               if e.kind not in NET_KINDS and e.kind != "failed_pull"]
         return max(ids) if ids else -1
 
     @property
     def last_round(self) -> int:
-        """First round from which the plan is permanently healthy."""
-        return max((e.stop for e in self.events), default=0)
+        """First round from which the plan is permanently healthy (the
+        frame-ordinal windows of network events do not count)."""
+        return max((e.stop for e in self.events
+                    if e.kind not in NET_KINDS), default=0)
+
+    @property
+    def net_events(self) -> tuple[FaultEvent, ...]:
+        """The transport-level events, for the chaos proxy."""
+        return tuple(e for e in self.events if e.kind in NET_KINDS)
 
     def resolve(self, round_idx: int, n_clients: int) -> RoundFaults:
         """The per-round fault flags — a pure host-side function of
@@ -251,6 +316,8 @@ class FaultPlan:
         pull_failed = False
         rejoining: set[int] = set()
         for e in self.events:
+            if e.kind in NET_KINDS:
+                continue  # transport-level: resolved by the chaos proxy
             if e.kind == "failed_pull":
                 pull_failed = pull_failed or e.active(round_idx)
                 continue

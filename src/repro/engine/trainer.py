@@ -313,7 +313,8 @@ class Trainer:
                 vocab_size=model_cfg.vocab_size,
                 consistency=config.consistency,
                 sparse_push=config.sparse_push,
-                reconnect_limit=config.reconnect_limit)
+                reconnect_limit=config.reconnect_limit,
+                local_clients=self.local_clients)
             for c in sorted(init_stats):
                 self.remote.init_push(c, init_stats[c])
             stats_template = self.family.stats_dict(
@@ -384,18 +385,18 @@ class Trainer:
 
     def _validate_tcp(self, config: TrainerConfig) -> None:
         """Reject TrainerConfig combinations the wire transport cannot
-        honor (each names its inproc-only machinery)."""
+        honor (each names its inproc-only machinery).
+
+        ``fault_plan`` / ``drop_client`` and ``snapshot_every`` used to be
+        rejected here too; since the wire grew idempotent replay, ghost
+        pushes and worker-side snapshots (DESIGN.md §13) the same fault
+        schedules and snapshot cadences run over tcp — simulated faults
+        ride the wire as ghost barrier frames, and a killed worker
+        process restores from its own snapshot with ``Trainer.restore``.
+        """
         if not config.server_addrs:
             raise ValueError("transport='tcp' requires server_addrs "
                              "(host:port shard servers)")
-        if config.fault_plan is not None or config.drop_client is not None:
-            raise ValueError(
-                "fault injection (fault_plan / drop_client) is an inproc "
-                "simulation knob; over tcp, kill the worker process "
-                "instead (repro.launch.loopback)")
-        if config.snapshot_every:
-            raise ValueError("snapshot_every is inproc-only: over tcp the "
-                             "shard servers own the canonical state")
         if config.alias_rebuild_threshold is not None:
             raise ValueError("incremental alias rebuilds are inproc "
                              "compiled-round machinery; tcp rebuilds from "
@@ -561,11 +562,20 @@ class Trainer:
     def _rejoin(self, clients: tuple[int, ...]) -> None:
         snap = self._load_latest_snapshot()
         for c in clients:
-            if snap is not None:
+            if snap is not None and (self.remote is None
+                                     or c in self.local_clients):
                 self.locals_[c] = snap["locals"][c]
                 if self.residuals[c] is not None:
                     self.residuals[c] = snap["residuals"][c]
-            self.pstate = self.server.rejoin_client(self.pstate, c)
+            if self.remote is not None:
+                # Over the wire the rejoin protocol is a REJOIN frame
+                # (clear pending pushes + open mutation-log entries, lift
+                # any eviction) followed by a forced-fresh pull, which
+                # the caller triggers via the rejoining mask.
+                if c in self.local_clients:
+                    self.remote.rejoin(c)
+            else:
+                self.pstate = self.server.rejoin_client(self.pstate, c)
         self.rejoins += len(clients)
 
     def _load_latest_snapshot(self) -> dict | None:
@@ -670,26 +680,60 @@ class Trainer:
         projection runs server-side on the same cadence, and the
         read-my-writes lag is this process's own rows.  RNG streams key
         on the *global* client id, so M worker processes jointly
-        reproduce the single-process run — bit-exactly under BSP."""
+        reproduce the single-process run — bit-exactly under BSP.
+
+        Fault injection (DESIGN.md §13): the same host-side
+        ``fault_plan`` resolution as the inproc loops, with the masks
+        expressed as wire frames — a dead or push-losing client fills
+        its barrier slot with a *ghost* push (counted for completeness,
+        no delta, no clock tick), bit-exact with the inproc alive/push
+        masks; a ``failed_pull`` skips the due cache refresh and keeps
+        sampling the stale snapshot, bounded by ``pull_retry_limit``;
+        a rejoin restores locals from the latest snapshot, REJOINs at
+        the servers and takes a forced-fresh pull."""
         fam, cfg, tcfg = self.family, self.cfg, self.tcfg
         r = self.round_idx
         pol = self.remote.policy
-        snapshot_new, version, refreshed = self.remote.pull(
-            r, self._tcp_version if pol.caches else None)
-        if refreshed:
-            self._tcp_snapshot = snapshot_new
-            self._tcp_version = version
-            self._host_version = version
-            if self._lag is not None:
-                # Fresh cache already contains every applied push: zero
-                # the read-my-writes accumulators (srv.reset_lag).
-                self._lag = {
-                    c: {n: jnp.zeros_like(v) for n, v in row.items()}
-                    for c, row in self._lag.items()}
+        rf = self._round_faults()
+        force = bool(rf.rejoining)
+        skip_pull = False
+        if rf.pull_failed and not force and pol.caches \
+                and self._tcp_snapshot is not None \
+                and pol.needs_refresh(r, self._host_version) \
+                and self._pull_retries < tcfg.pull_retry_limit:
+            # The due refresh RPC "fails": continue on the stale cache
+            # past the bound (that is the degradation) and retry next
+            # round — the inproc failed_pull idiom on the wire.
+            self._pull_retries += 1
+            self.pull_failures += 1
+            skip_pull = True
+        refreshed = False
+        if not skip_pull:
+            snapshot_new, version, refreshed = self.remote.pull(
+                r, None if force else (
+                    self._tcp_version if pol.caches else None))
+            if refreshed:
+                self._tcp_snapshot = snapshot_new
+                self._tcp_version = version
+                self._host_version = version
+                self._pull_retries = 0
+                if self._lag is not None:
+                    # Fresh cache already contains every applied push:
+                    # zero the read-my-writes accumulators
+                    # (srv.reset_lag).
+                    self._lag = {
+                        c: {n: jnp.zeros_like(v) for n, v in row.items()}
+                        for c, row in self._lag.items()}
         snapshot = self._tcp_snapshot
         self._refresh_alias_tcp(refreshed)
 
         for c in self.local_clients:
+            if not rf.alive[c]:
+                # Dead client (§5.4): frozen locals, no contribution —
+                # but the servers' round barrier still needs its slot,
+                # so a ghost frame rides the wire in its place.
+                self.remote.push_ghost(r, c)
+                continue
             t, m = self.shards[c]
             lays = self.layouts[c] if self.layouts is not None else None
             local_shared = (fam.apply_delta(snapshot, self._lag[c])
@@ -706,11 +750,18 @@ class Trainer:
             self.locals_[c] = fam.local_project(self.locals_[c])
             if self._lag is not None:
                 # Pre-filter delta rides in the client's own lag row until
-                # the next refresh (read-my-writes).
+                # the next refresh (read-my-writes) — including when the
+                # push below is lost (the delta is in the replica
+                # regardless), exactly the reference loop.
                 self._lag[c] = {n: self._lag[c][n] + acc[n] for n in acc}
             kf = jax.random.fold_in(self.key, 7000 + r * 131 + c)
             acc, self.residuals[c] = round_mod.filter_push(   # filter
                 fam, acc, tcfg.filter, kf, self.residuals[c])
+            if not rf.push_ok[c]:
+                # Lost push (§5.4): the filtered delta is dropped on the
+                # floor; a ghost fills the barrier slot in its place.
+                self.remote.push_ghost(r, c)
+                continue
             self.remote.push(r, c, acc)              # push (delta frame)
         self.round_idx += 1
 
@@ -803,15 +854,19 @@ class Trainer:
         resident alias proposal), per-client locals and residuals, the
         run RNG key, and the host-side schedule scalars (round index,
         cache-version mirror, retry/build counters) as int32 leaves —
-        everything a bit-exact BSP resume needs."""
-        if self.remote is not None:
-            raise NotImplementedError(
-                "trainer snapshots are inproc-only: over tcp the shard "
-                "servers own the canonical state")
+        everything a bit-exact BSP resume needs.
+
+        Over tcp the shard servers own the canonical statistics (they
+        snapshot themselves — SNAPSHOT_WRITE), so the worker snapshot
+        carries the *client edge* instead: this process's locals and
+        residuals, the pulled versioned snapshot, the alias proposal
+        built from it, and the read-my-writes lag rows.  A restored
+        worker resumes mid-run against the still-live servers
+        (``Trainer.restore``), bit-exactly under BSP with
+        ``snapshot_every=1``."""
         hv = -1 if self._host_version is None else self._host_version
-        return {
+        state = {
             "locals": tuple(self.locals_),
-            "server": self.pstate,
             "residuals": tuple(self.residuals),
             "key": self.key,
             "round_idx": np.int32(self.round_idx),
@@ -819,6 +874,23 @@ class Trainer:
             "alias_builds": np.int32(self.alias_builds),
             "pull_retries": np.int32(self._pull_retries),
         }
+        if self.remote is not None:
+            if self._tcp_snapshot is None or self._tcp_tables is None:
+                raise ValueError(
+                    "tcp snapshot before the first pull: the client edge "
+                    "(pulled snapshot + alias proposal) is empty — step "
+                    "at least one round first")
+            tv = -1 if self._tcp_version is None else self._tcp_version
+            state.update({
+                "tcp_snapshot": self._tcp_snapshot,
+                "tcp_version": np.int32(tv),
+                "tcp_tables": self._tcp_tables,
+                "tcp_stale": self._tcp_stale,
+                "tcp_lag": self._lag,
+            })
+        else:
+            state["server"] = self.pstate
+        return state
 
     def save_snapshot(self) -> str:
         """Write a snapshot of :meth:`snapshot_state` at the current
@@ -864,17 +936,35 @@ class Trainer:
         # snapshot's pytree structure (snapshots are written after at
         # least one round, whose pull built the tables — a fresh
         # Trainer's `tables=None` placeholder would not unflatten).
-        trainer.pstate = trainer.server.refresh_proposal(model_cfg,
-                                                         trainer.pstate)
+        # Note the fresh tcp Trainer's __init__ already re-sent its INIT
+        # pushes — the servers' mutation log dedups them (same seed ⇒
+        # same digest), so the canonical state is untouched.
+        if trainer.remote is not None:
+            trainer._materialize_tcp_edge()
+        else:
+            trainer.pstate = trainer.server.refresh_proposal(
+                model_cfg, trainer.pstate)
         snap = ckpt.restore_latest(sdir, tcfg.snapshot_name,
                                    trainer.snapshot_state(), step=step)
         trainer._install_snapshot(snap)
         return trainer
 
+    def _materialize_tcp_edge(self) -> None:
+        """Template materialization for a tcp restore: structurally the
+        client edge a running worker holds — one pull (any round the
+        servers have finalized) plus the alias proposal built from it.
+        Values are overwritten by the restored snapshot."""
+        if self._tcp_snapshot is None:
+            snap, version, _ = self.remote.pull(0, None)
+            self._tcp_snapshot = snap
+            self._tcp_version = version
+        if self._tcp_tables is None:
+            self._tcp_tables, self._tcp_stale = self.family.build_alias(
+                self.cfg, self._tcp_snapshot)
+
     def _install_snapshot(self, snap: dict) -> None:
         as_device = functools.partial(jax.tree.map, jnp.asarray)
         self.locals_ = list(as_device(snap["locals"]))
-        self.pstate = as_device(snap["server"])
         self.residuals = list(as_device(snap["residuals"]))
         self.key = jnp.asarray(snap["key"])
         self.round_idx = int(snap["round_idx"])
@@ -882,6 +972,24 @@ class Trainer:
         self._host_version = None if hv < 0 else hv
         self.alias_builds = int(snap["alias_builds"])
         self._pull_retries = int(snap["pull_retries"])
+        if self.remote is None:
+            self.pstate = as_device(snap["server"])
+            return
+        self._tcp_snapshot = as_device(snap["tcp_snapshot"])
+        tv = int(snap["tcp_version"])
+        self._tcp_version = None if tv < 0 else tv
+        self._tcp_tables = as_device(snap["tcp_tables"])
+        self._tcp_stale = as_device(snap["tcp_stale"])
+        self._lag = as_device(snap["tcp_lag"])
+        # The rejoin protocol (DESIGN.md §13): clear whatever pending
+        # pushes and open mutation-log entries the dead incarnation left
+        # at the servers, lift any eviction, and take the next pull
+        # fresh.  Replayed pushes for rounds the servers already
+        # finalized dedup against the mutation log (bit-exact restore ⇒
+        # identical digests), so the resumed rounds apply exactly once.
+        for c in self.local_clients:
+            self.remote.rejoin(c)
+        self._tcp_version = None
 
     def run(self, n_rounds: int, *, eval_every: int = 5,
             eval_docs: int = 32) -> RunResult:

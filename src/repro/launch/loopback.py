@@ -1,5 +1,5 @@
 """Multi-process loopback launcher for the out-of-process parameter
-server (DESIGN.md §11).
+server (DESIGN.md §11, §13).
 
 Spawns N shard-server processes (``python -m repro.net.server``) and M
 client processes (``python -m repro.net.client``) on 127.0.0.1, waits
@@ -10,10 +10,31 @@ is the paper's deployment shape in miniature: parameter-server
 loopback interface), with the same frames a cross-machine deployment
 would use.
 
+Fault tolerance (DESIGN.md §13) adds two layers on top:
+
+* ``chaos_plan`` — a :class:`repro.core.fault.FaultPlan` whose network
+  events are interposed as :class:`repro.net.chaos.ChaosProxy` relays
+  between the clients and each shard address: seeded connection drops,
+  frame truncations and delays on the wire, with the proxies' action
+  counts collected into the result.
+* :func:`launch_failover` — the kill-and-rejoin choreography: the shard
+  process and/or one worker process carry ``--die-after-round`` and the
+  launcher *supervises*, relaunching the killed shard with ``--restore
+  --ports`` (same addresses, state reloaded from its own snapshot) and
+  the killed worker with ``--restore`` (locals reloaded from its
+  trainer snapshot, servers caught up through idempotent replay).
+
+On abnormal exit the launcher dumps diagnostics into the result: the
+last stderr lines of every failed process plus each live shard's STATS
+frame (per-connection RPC counters) — enough to see *which* connection
+died *where* without re-running.
+
 ``--smoke`` runs the CI end-to-end check: 1 shard server + 2 train
 client processes (one global client each), then an in-process reference
 ``Trainer`` on the identical corpus/key, and asserts the BSP result is
-bit-exact (checksum equality across the socket).
+bit-exact (checksum equality across the socket).  ``--failover-smoke``
+runs the same parity check through chaos proxies while killing and
+restarting both one shard process and one worker process mid-run.
 """
 
 from __future__ import annotations
@@ -38,6 +59,7 @@ class ProcResult:
     stdout: str
     stderr: str
     result: dict[str, Any] | None = None  # parsed --out JSON, clients only
+    expected: bool = False  # a scheduled --die-after-round kill (exit 42)
 
 
 @dataclass
@@ -45,13 +67,23 @@ class LaunchResult:
     addresses: list[str]
     servers: list[ProcResult] = field(default_factory=list)
     clients: list[ProcResult] = field(default_factory=list)
+    # Chaos-proxy action counts (one dict per interposed shard address).
+    proxies: list[dict[str, Any]] = field(default_factory=list)
+    # {"server": n, "client": n} relaunches performed by launch_failover.
+    restarts: dict[str, int] = field(default_factory=dict)
+    # Populated on abnormal exit: stderr tails of failed processes plus
+    # the shards' per-connection RPC counters (STATS frames).
+    diagnostics: dict[str, Any] = field(default_factory=dict)
 
     @property
     def ok(self) -> bool:
-        return all(p.returncode == 0 for p in self.servers + self.clients)
+        return all(p.returncode == 0 or (p.expected and p.returncode == 42)
+                   for p in self.servers + self.clients)
 
     def failures(self) -> list[ProcResult]:
-        return [p for p in self.servers + self.clients if p.returncode != 0]
+        return [p for p in self.servers + self.clients
+                if p.returncode != 0 and not (p.expected
+                                              and p.returncode == 42)]
 
 
 def _python() -> list[str]:
@@ -64,6 +96,12 @@ def _env() -> dict[str, str]:
         os.path.dirname(os.path.abspath(__file__)))))
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
     return env
+
+
+def _tail(text: str, n: int = 15) -> list[str]:
+    """The last ``n`` non-empty-ish lines of a captured stream — what a
+    failure diagnosis actually needs from a long log."""
+    return (text or "").strip().splitlines()[-n:]
 
 
 def _wait_address_file(path: str, proc: subprocess.Popen,
@@ -112,6 +150,53 @@ def _send_shutdown(addresses: list[str], timeout: float = 10.0) -> None:
             conn.close()
 
 
+def _query_server_stats(addresses: list[str],
+                        timeout: float = 5.0) -> list[dict[str, Any]]:
+    """Each live shard's STATS frame (server round, clocks, evictions,
+    per-connection RPC counters) — the server half of the abnormal-exit
+    diagnostics.  Unreachable shards report instead of raising."""
+    import socket
+
+    from repro.net import protocol
+
+    out: list[dict[str, Any]] = []
+    for addr in addresses:
+        host, port = addr.rsplit(":", 1)
+        try:
+            sock = socket.create_connection((host, int(port)),
+                                            timeout=timeout)
+        except OSError as e:
+            out.append({"address": addr, "error": f"unreachable: {e}"})
+            continue
+        conn = protocol.FramedConnection(sock)
+        try:
+            _, meta, _ = conn.request(protocol.MsgType.STATS, {},
+                                      expect=(protocol.MsgType.OK,))
+            out.append({"address": addr, **meta})
+        except (protocol.ProtocolError, OSError) as e:
+            out.append({"address": addr, "error": str(e)})
+        finally:
+            conn.close()
+    return out
+
+
+def _diagnose(result: LaunchResult, addresses: list[str],
+              server_alive: bool) -> None:
+    """Fill ``result.diagnostics`` for an abnormal exit: stderr tails of
+    every failed process, plus the shards' per-connection RPC counters
+    while they are still answering."""
+    if result.ok:
+        return
+    result.diagnostics = {
+        "failures": {
+            p.name: {"returncode": p.returncode,
+                     "stderr_tail": _tail(p.stderr)}
+            for p in result.failures()},
+        "server_stats": (_query_server_stats(addresses)
+                         if server_alive else []),
+    }
+
+
 def _finish(proc: subprocess.Popen, name: str, args: list[str],
             timeout: float) -> ProcResult:
     try:
@@ -124,6 +209,16 @@ def _finish(proc: subprocess.Popen, name: str, args: list[str],
                           + f"\n[launcher] killed after {timeout:.0f}s "
                             "timeout")
     return ProcResult(name, args, proc.returncode, out or "", err or "")
+
+
+def _interpose(addresses: list[str], chaos_plan):
+    """Stand chaos proxies in front of ``addresses`` (always, when a
+    plan is given — a plan with no net events is the pass-through
+    control arm); returns (addresses clients should dial, proxies)."""
+    if chaos_plan is None:
+        return addresses, []
+    from repro.net.chaos import interpose
+    return interpose(addresses, chaos_plan)
 
 
 def launch_loopback(*,
@@ -142,10 +237,16 @@ def launch_loopback(*,
                     seed: int = 0,
                     timeout: float = 300.0,
                     workdir: str | None = None,
+                    chaos_plan=None,
                     extra_client_args: tuple[str, ...] = (),
                     ) -> LaunchResult:
     """Spawn 1 server process hosting ``n_shards`` shards plus one client
     process per entry of ``client_sets`` and wait for everything.
+
+    With ``chaos_plan`` (a :class:`repro.core.fault.FaultPlan`) the
+    clients dial :class:`~repro.net.chaos.ChaosProxy` relays instead of
+    the shards directly; the proxies' action counts land in
+    ``result.proxies``.
 
     Returns a :class:`LaunchResult`; raises nothing on nonzero client
     exits (inspect ``.ok`` / ``.failures()``) but does raise if the
@@ -177,6 +278,7 @@ def launch_loopback(*,
                          f"[launcher] server stderr:\n{err}\n")
         raise
 
+    client_addrs, proxies = _interpose(addresses, chaos_plan)
     result = LaunchResult(addresses=addresses)
     client_procs: list[tuple[subprocess.Popen, str, list[str], str]] = []
     for i, cs in enumerate(client_sets):
@@ -184,7 +286,7 @@ def launch_loopback(*,
         cargs = _python() + [
             "-m", "repro.net.client",
             "--mode", mode,
-            "--addrs", ",".join(addresses),
+            "--addrs", ",".join(client_addrs),
             "--clients", ",".join(str(c) for c in cs),
             "--family", family,
             "--vocab-size", str(vocab_size),
@@ -213,6 +315,13 @@ def launch_loopback(*,
                 pr.result = json.load(f)
         result.clients.append(pr)
 
+    # Diagnostics want the shards' counters while they still answer.
+    if any(p.returncode != 0 for p in result.clients):
+        result.diagnostics["server_stats"] = _query_server_stats(addresses)
+
+    for p in proxies:
+        result.proxies.append(p.stats())
+        p.close()
     _send_shutdown(addresses)
     # A hung server must not hang the launcher: bounded wait, then kill.
     try:
@@ -224,31 +333,229 @@ def launch_loopback(*,
         rc = -9
     result.servers.append(ProcResult("server", server_args, rc,
                                      out or "", err or ""))
+    if not result.ok:
+        stats = result.diagnostics.get("server_stats", [])
+        _diagnose(result, addresses, server_alive=False)
+        result.diagnostics["server_stats"] = stats
     return result
 
 
-def _smoke() -> int:
-    """CI smoke: loopback BSP must be bit-exact with in-process BSP."""
-    import numpy as np
+def _strip_flag(args: list[str], flag: str) -> list[str]:
+    """``args`` without ``flag`` and its value (two-token options)."""
+    out: list[str] = []
+    i = 0
+    while i < len(args):
+        if args[i] == flag:
+            i += 2
+            continue
+        out.append(args[i])
+        i += 1
+    return out
 
-    t0 = time.perf_counter()
-    res = launch_loopback(client_sets=((0,), (1,)), n_rounds=3,
-                          timeout=240.0)
-    if not res.ok:
-        for p in res.failures():
-            sys.stderr.write(f"[smoke] {p.name} exit {p.returncode}\n"
-                             f"--- stdout ---\n{p.stdout}\n"
-                             f"--- stderr ---\n{p.stderr}\n")
-        return 1
 
-    # Both client processes must agree on the final state...
-    sums = [p.result["checksums"] for p in res.clients]
-    if sums[0] != sums[1]:
-        sys.stderr.write(f"[smoke] client checksums disagree: {sums}\n")
-        return 1
+def launch_failover(*,
+                    family: str = "lda",
+                    vocab_size: int = 64,
+                    n_topics: int = 4,
+                    n_shards: int = 1,
+                    client_sets: tuple[tuple[int, ...], ...] = ((0,), (1,)),
+                    n_rounds: int = 6,
+                    tau: int = 1,
+                    consistency: str = "bsp",
+                    kill_server_round: int | None = None,
+                    kill_client: int | None = None,
+                    kill_client_round: int | None = None,
+                    chaos_plan=None,
+                    n_docs: int = 16,
+                    doc_len: int = 12,
+                    corpus_seed: int = 3,
+                    seed: int = 0,
+                    timeout: float = 300.0,
+                    liveness_timeout: float = 120.0,
+                    reconnect_limit: int = 64,
+                    workdir: str | None = None,
+                    ) -> LaunchResult:
+    """The kill-and-rejoin choreography over real processes (§5.4 on the
+    wire, DESIGN.md §13).
 
-    # ...and match an in-process reference run exactly.
+    The shard process snapshots every finalized round; with
+    ``kill_server_round`` it ``exit(42)``\\ s once every shard reaches
+    that round, and the launcher relaunches it with ``--restore --ports``
+    so it rebinds the *same* addresses and resumes from its snapshot —
+    the clients ride it out through bounded RPC retry and replay their
+    buffered mutations on reconnect.  With ``kill_client`` (an index
+    into ``client_sets``) that worker snapshots every round, dies after
+    ``kill_client_round``, and is relaunched with ``--restore`` to
+    resume mid-run — the barrier, protected by ``liveness_timeout``,
+    waits instead of evicting.  ``chaos_plan`` interposes chaos proxies
+    exactly as :func:`launch_loopback`.
+
+    Under BSP the final statistics must be bit-exact with the
+    undisturbed in-process run — the acceptance property asserted by
+    ``--failover-smoke``, ``tools/ci.sh`` and ``tests/test_failover_tcp``.
+    """
+    n_clients = sum(len(cs) for cs in client_sets)
+    own_tmp = workdir is None
+    tmp = tempfile.mkdtemp(prefix="failover_") if own_tmp else workdir
+    addr_file = os.path.join(tmp, "addresses.json")
+    srv_snap = os.path.join(tmp, "server_snapshots")
+    env = _env()
+
+    base_server_args = _python() + [
+        "-m", "repro.net.server",
+        "--family", family,
+        "--vocab-size", str(vocab_size),
+        "--n-clients", str(n_clients),
+        "--n-shards", str(n_shards),
+        "--consistency", consistency,
+        "--barrier-timeout", str(timeout),
+        "--liveness-timeout", str(liveness_timeout),
+        "--snapshot-dir", srv_snap,
+        "--snapshot-every", "1",
+        "--address-file", addr_file,
+    ]
+    server_args = list(base_server_args)
+    if kill_server_round is not None:
+        server_args += ["--die-after-round", str(kill_server_round)]
+    server = subprocess.Popen(server_args, stdout=subprocess.PIPE,
+                              stderr=subprocess.PIPE, text=True, env=env)
+    try:
+        addresses = _wait_address_file(addr_file, server, timeout)
+    except Exception:
+        server.kill()
+        out, err = server.communicate()
+        sys.stderr.write(f"[launcher] server stdout:\n{out}\n"
+                         f"[launcher] server stderr:\n{err}\n")
+        raise
+    ports = ",".join(a.rsplit(":", 1)[1] for a in addresses)
+
+    client_addrs, proxies = _interpose(addresses, chaos_plan)
+    result = LaunchResult(addresses=addresses,
+                          restarts={"server": 0, "client": 0})
+
+    running: dict[str, list] = {}  # name -> [proc, args, out_json, victim]
+    for i, cs in enumerate(client_sets):
+        out_json = os.path.join(tmp, f"client{i}.json")
+        cargs = _python() + [
+            "-m", "repro.net.client",
+            "--mode", "train",
+            "--addrs", ",".join(client_addrs),
+            "--clients", ",".join(str(c) for c in cs),
+            "--family", family,
+            "--vocab-size", str(vocab_size),
+            "--n-topics", str(n_topics),
+            "--n-clients", str(n_clients),
+            "--n-rounds", str(n_rounds),
+            "--tau", str(tau),
+            "--consistency", consistency,
+            "--n-docs", str(n_docs),
+            "--doc-len", str(doc_len),
+            "--corpus-seed", str(corpus_seed),
+            "--seed", str(seed),
+            "--timeout", str(timeout),
+            "--reconnect-limit", str(reconnect_limit),
+            "--out", out_json,
+        ]
+        if i == kill_client:
+            if kill_client_round is None:
+                raise ValueError("kill_client requires kill_client_round")
+            cargs += ["--snapshot-dir",
+                      os.path.join(tmp, f"client{i}_snapshots"),
+                      "--snapshot-every", "1",
+                      "--die-after-round", str(kill_client_round)]
+        proc = subprocess.Popen(cargs, stdout=subprocess.PIPE,
+                                stderr=subprocess.PIPE, text=True, env=env)
+        running[f"client{i}"] = [proc, cargs, out_json, i == kill_client]
+
+    deadline = time.monotonic() + timeout
+    server_alive = True
+    while running and time.monotonic() < deadline:
+        # --- shard-process supervision -------------------------------
+        if server_alive and server.poll() is not None:
+            out, err = server.communicate()
+            expected = server.returncode == 42
+            result.servers.append(ProcResult(
+                "server#killed" if expected else "server", server_args,
+                server.returncode, out or "", err or "",
+                expected=expected))
+            if not expected:
+                server_alive = False  # unexpected death: let clients fail
+            else:
+                result.restarts["server"] += 1
+                # The stale address file must not satisfy the readiness
+                # poll before the restarted process has actually bound.
+                try:
+                    os.remove(addr_file)
+                except FileNotFoundError:
+                    pass
+                server_args = list(base_server_args) + [
+                    "--restore", "--ports", ports]
+                server = subprocess.Popen(
+                    server_args, stdout=subprocess.PIPE,
+                    stderr=subprocess.PIPE, text=True, env=env)
+                _wait_address_file(addr_file, server,
+                                   max(1.0, deadline - time.monotonic()))
+        # --- worker-process supervision ------------------------------
+        for name in list(running):
+            proc, cargs, out_json, victim = running[name]
+            rc = proc.poll()
+            if rc is None:
+                continue
+            out, err = proc.communicate()
+            if rc == 42 and victim:
+                result.clients.append(ProcResult(
+                    f"{name}#killed", cargs, rc, out or "", err or "",
+                    expected=True))
+                result.restarts["client"] += 1
+                new_args = _strip_flag(cargs, "--die-after-round") \
+                    + ["--restore"]
+                proc2 = subprocess.Popen(
+                    new_args, stdout=subprocess.PIPE,
+                    stderr=subprocess.PIPE, text=True, env=env)
+                running[name] = [proc2, new_args, out_json, False]
+                continue
+            pr = ProcResult(name, cargs, rc, out or "", err or "")
+            if rc == 0 and os.path.exists(out_json):
+                with open(out_json) as f:
+                    pr.result = json.load(f)
+            result.clients.append(pr)
+            del running[name]
+        time.sleep(0.1)
+
+    # Anything still running at the deadline is hung: kill + record.
+    for name, (proc, cargs, out_json, _victim) in running.items():
+        result.clients.append(_finish(proc, name, cargs, timeout=1.0))
+
+    if any(p.returncode != 0 and not p.expected for p in result.clients):
+        result.diagnostics["server_stats"] = _query_server_stats(addresses)
+
+    for p in proxies:
+        result.proxies.append(p.stats())
+        p.close()
+    if server_alive:
+        _send_shutdown(addresses)
+        try:
+            out, err = server.communicate(timeout=30.0)
+            rc = server.returncode
+        except subprocess.TimeoutExpired:
+            server.kill()
+            out, err = server.communicate()
+            rc = -9
+        result.servers.append(ProcResult("server", server_args, rc,
+                                         out or "", err or ""))
+    if not result.ok:
+        stats = result.diagnostics.get("server_stats", [])
+        _diagnose(result, addresses, server_alive=False)
+        result.diagnostics["server_stats"] = stats
+    return result
+
+
+def _reference_run(n_rounds: int) -> dict[str, Any]:
+    """The undisturbed in-process BSP reference for the smoke corpora:
+    final per-stat checksums plus held-out perplexity — what a disturbed
+    tcp run is compared against bit-for-bit."""
     import jax
+    import numpy as np
     from repro.core import family as fam_mod
     from repro.core.lda import LDAConfig
     from repro.data.synthetic import CorpusConfig, make_topic_corpus
@@ -260,10 +567,40 @@ def _smoke() -> int:
     ref = Trainer(LDAConfig(n_topics=4, vocab_size=64), tokens, mask,
                   config=TrainerConfig(n_clients=2, tau=1),
                   key=jax.random.PRNGKey(0))
-    for _ in range(3):
+    for _ in range(n_rounds):
         ref.step()
-    ref_sums = {n: _checksum(np.asarray(v)) for n, v in
-                fam_mod.get("lda").stats_dict(ref.shared).items()}
+    checksums = {n: _checksum(np.asarray(v)) for n, v in
+                 fam_mod.get("lda").stats_dict(ref.shared).items()}
+    return {"checksums": checksums, "perplexity": ref.perplexity()}
+
+
+def _dump_failures(tag: str, res: LaunchResult) -> None:
+    for p in res.failures():
+        sys.stderr.write(f"[{tag}] {p.name} exit {p.returncode}\n"
+                         f"--- stdout ---\n{p.stdout}\n"
+                         f"--- stderr ---\n{p.stderr}\n")
+    if res.diagnostics:
+        sys.stderr.write(f"[{tag}] diagnostics: "
+                         f"{json.dumps(res.diagnostics, indent=2)}\n")
+
+
+def _smoke() -> int:
+    """CI smoke: loopback BSP must be bit-exact with in-process BSP."""
+    t0 = time.perf_counter()
+    res = launch_loopback(client_sets=((0,), (1,)), n_rounds=3,
+                          timeout=240.0)
+    if not res.ok:
+        _dump_failures("smoke", res)
+        return 1
+
+    # Both client processes must agree on the final state...
+    sums = [p.result["checksums"] for p in res.clients]
+    if sums[0] != sums[1]:
+        sys.stderr.write(f"[smoke] client checksums disagree: {sums}\n")
+        return 1
+
+    # ...and match an in-process reference run exactly.
+    ref_sums = _reference_run(3)["checksums"]
     if ref_sums != sums[0]:
         sys.stderr.write(f"[smoke] loopback != in-process: "
                          f"{sums[0]} vs {ref_sums}\n")
@@ -274,11 +611,67 @@ def _smoke() -> int:
     return 0
 
 
+def _failover_smoke() -> int:
+    """CI failover smoke (DESIGN.md §13): BSP through chaos proxies with
+    a connection drop on the push path, one shard-process restart from
+    snapshot and one worker-process kill-and-rejoin — still bit-exact
+    with the undisturbed in-process run."""
+    from repro.core.fault import FaultEvent, FaultPlan
+
+    t0 = time.perf_counter()
+    n_rounds = 6
+    # Connection ordinal 0 (the first worker to reach the proxy) loses
+    # the connection instead of delivering its round-1 push (frame 5);
+    # every connection's round-0 pull (frame 2) is delayed.  Drops aim
+    # at a specific ordinal: a reconnected connection gets a fresh
+    # ordinal, so the drop fires exactly once.
+    plan = FaultPlan.scripted(
+        FaultEvent("conn_drop", client=0, start=5, stop=6, period=1),
+        FaultEvent("delay", client=-1, start=2, stop=3, period=1,
+                   magnitude=0.02))
+    res = launch_failover(client_sets=((0,), (1,)), n_rounds=n_rounds,
+                          kill_server_round=3,
+                          kill_client=1, kill_client_round=2,
+                          chaos_plan=plan, timeout=420.0)
+    if not res.ok:
+        _dump_failures("failover-smoke", res)
+        return 1
+    if res.restarts != {"server": 1, "client": 1}:
+        sys.stderr.write(f"[failover-smoke] expected exactly one shard "
+                         f"and one worker restart, got {res.restarts}\n")
+        return 1
+    drops = sum(p["actions"]["conn_drop"] for p in res.proxies)
+    if drops < 1:
+        sys.stderr.write("[failover-smoke] the scheduled conn_drop never "
+                         f"fired (proxies: {res.proxies})\n")
+        return 1
+
+    finals = [p for p in res.clients if p.returncode == 0 and p.result]
+    sums = [p.result["checksums"] for p in finals]
+    if not sums or any(s != sums[0] for s in sums):
+        sys.stderr.write(f"[failover-smoke] client checksums disagree: "
+                         f"{sums}\n")
+        return 1
+    ref_sums = _reference_run(n_rounds)["checksums"]
+    if ref_sums != sums[0]:
+        sys.stderr.write(f"[failover-smoke] disturbed tcp run != "
+                         f"in-process: {sums[0]} vs {ref_sums}\n")
+        return 1
+    dt = time.perf_counter() - t0
+    print(f"failover smoke OK: chaos proxy ({drops} drop), 1 shard "
+          f"restart from snapshot, 1 worker kill-and-rejoin, BSP "
+          f"bit-exact with in-process ({dt:.1f}s)")
+    return 0
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         description="loopback multi-process launcher (repro.net)")
     ap.add_argument("--smoke", action="store_true",
                     help="run the CI end-to-end parity smoke and exit")
+    ap.add_argument("--failover-smoke", action="store_true",
+                    help="run the chaos + kill-and-rejoin parity smoke "
+                         "and exit")
     ap.add_argument("--family", default="lda")
     ap.add_argument("--vocab-size", type=int, default=64)
     ap.add_argument("--n-topics", type=int, default=4)
@@ -294,6 +687,8 @@ def main(argv: list[str] | None = None) -> int:
 
     if args.smoke:
         return _smoke()
+    if args.failover_smoke:
+        return _failover_smoke()
 
     sets = tuple(
         tuple(range(i * args.clients_per_proc,
@@ -307,9 +702,8 @@ def main(argv: list[str] | None = None) -> int:
     for p in res.servers + res.clients:
         status = "ok" if p.returncode == 0 else f"EXIT {p.returncode}"
         print(f"{p.name}: {status}")
-        if p.returncode != 0:
-            sys.stderr.write(f"--- {p.name} stdout ---\n{p.stdout}\n"
-                             f"--- {p.name} stderr ---\n{p.stderr}\n")
+    if not res.ok:
+        _dump_failures("launch", res)
     return 0 if res.ok else 1
 
 

@@ -21,23 +21,35 @@ The paper's system is parameter-server *processes* serving sampler
   servers, so ``engine.Trainer`` runs unchanged over either backend via
   ``TrainerConfig(transport="inproc" | "tcp")``.
 
+* :mod:`repro.net.chaos` — :class:`~repro.net.chaos.ChaosProxy`: a
+  seeded, frame-aware TCP relay that drops, delays, and truncates frames
+  per a :class:`~repro.core.fault.FaultPlan`'s network events —
+  deterministic transport misbehavior for the fault-tolerance tests
+  (DESIGN.md §13).
+
 The in-process path survives as the zero-copy fast path behind the same
 interface; the multi-process loopback launcher lives in
 ``repro.launch.loopback``.
 """
 
+from repro.net.chaos import ChaosProxy, interpose
 from repro.net.client import RemoteParameterServer, RemoteError
-from repro.net.protocol import (ConnectionClosed, MsgType, ProtocolError,
-                                PROTOCOL_VERSION)
+from repro.net.protocol import (ConnectionClosed, IdleTimeout, MsgType,
+                                ProtocolError, PROTOCOL_VERSION,
+                                TransportError)
 from repro.net.server import ShardServer, serve_shards
 
 __all__ = [
+    "ChaosProxy",
     "ConnectionClosed",
+    "IdleTimeout",
     "MsgType",
     "PROTOCOL_VERSION",
     "ProtocolError",
     "RemoteError",
     "RemoteParameterServer",
     "ShardServer",
+    "TransportError",
+    "interpose",
     "serve_shards",
 ]

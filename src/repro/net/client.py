@@ -23,6 +23,22 @@ the last refresh — the server only ever sees post-filter pushes, so the
 pre-filter lag cannot be reconstructed server-side), reset on every
 refreshing pull.  The server keeps the clocks and answers NOT_MODIFIED.
 
+Fault tolerance (DESIGN.md §13): *every* RPC — mutations included —
+retries through a bounded reconnect-with-backoff loop.  That is safe
+because mutations are idempotent server-side (per-(client, round)
+sequence dedup): a retried PUSH whose first copy landed returns the
+recorded ack instead of double-applying, so BSP stays bit-exact under
+connection loss.  The client additionally keeps a bounded *replay
+buffer* of its acked mutation frames (INIT plus the last
+``REPLAY_WINDOW`` rounds of pushes, per server) and replays it —
+``replay``-flagged — after every re-handshake: a shard server restarted
+from a snapshot a few rounds back re-finalizes the missing rounds from
+the replayed deltas in the identical ascending-client order, which is
+what makes shard restart lossless.  Retryable failures are transport
+errors only (:class:`~repro.net.protocol.TransportError`,
+:class:`~repro.net.protocol.ConnectionClosed`, ``OSError``); a peer
+ERROR frame is a semantic refusal and propagates immediately.
+
 The module is also the client *process* entrypoint
 (``python -m repro.net.client``) used by ``repro.launch.loopback``:
 
@@ -41,6 +57,7 @@ from __future__ import annotations
 import argparse
 import hashlib
 import json
+import os
 import socket
 import time
 from typing import Any, Sequence
@@ -58,6 +75,20 @@ class RemoteError(ProtocolError):
     """The server answered ERROR (application-level failure)."""
 
 
+# Rounds of acked push frames kept for replay after a reconnect (INIT is
+# kept unconditionally).  Must stay below the server's MUTLOG_WINDOW so
+# every replayed frame either digest-matches the log or is fresh.
+REPLAY_WINDOW = 8
+
+# What a bounded retry may swallow: the transport failed, not the peer's
+# semantics.  A peer ERROR frame surfaces as a plain ProtocolError from
+# conn.recv and is never retried.
+_RETRYABLE = (protocol.TransportError, protocol.ConnectionClosed, OSError)
+
+_BACKOFF_BASE_S = 0.05
+_BACKOFF_CAP_S = 2.0
+
+
 def _connect(addr: str, timeout: float) -> protocol.FramedConnection:
     host, _, port = addr.rpartition(":")
     sock = socket.create_connection((host, int(port)), timeout=timeout)
@@ -72,7 +103,8 @@ class RemoteParameterServer:
     def __init__(self, addrs: Sequence[str], *, family, n_clients: int,
                  vocab_size: int, consistency: str = "bsp",
                  timeout: float = 60.0, sparse_push: bool = False,
-                 reconnect_limit: int = 3):
+                 reconnect_limit: int = 3,
+                 local_clients: Sequence[int] | None = None):
         self.family = (family_mod.get(family) if isinstance(family, str)
                        else family)
         self.n_clients = n_clients
@@ -82,16 +114,27 @@ class RemoteParameterServer:
         # Encode pushes as COO row-sliced PUSH_SPARSE frames (DESIGN.md
         # §12).  Off by default: dense PUSH is the reference encoding.
         self.sparse_push = sparse_push
-        # Bounded re-dial budget for dropped connections during PULL
-        # (read-only, so a retry on a fresh socket is always safe).
+        # Bounded re-dial budget for dropped connections on any RPC
+        # (mutations are retry-safe — the server dedups them by
+        # (client, round) sequence).
         self.reconnect_limit = reconnect_limit
+        self.retries = 0
+        self.reconnects = 0
         self._conns: list[protocol.FramedConnection] = []
         self._rows: list[tuple[int, int]] = []
         self._addrs: list[str] = []
+        # Acked mutation frames per server, replayed after a reconnect
+        # so a shard restored from a snapshot catches up losslessly:
+        # (msg_type, meta, arrays, seq) with seq = round (-1 for INIT).
+        self._replay: list[list[tuple]] = []
         self.project_every: int | None = None
         self._hello = {"family": self.family.name, "vocab_size": vocab_size,
                        "n_clients": n_clients,
                        "consistency": self.policy.key}
+        if local_clients is not None:
+            # Announced on HELLO: the server tracks which client ids a
+            # connection serves, for barrier-eviction liveness.
+            self._hello["clients"] = [int(c) for c in local_clients]
         pairs = []
         for addr in addrs:
             conn = _connect(addr, timeout)
@@ -125,6 +168,7 @@ class RemoteParameterServer:
             self.close()
             raise RemoteError(f"server row ranges cover [0, {cursor}) "
                               f"but vocab_size={vocab_size}")
+        self._replay = [[] for _ in self._conns]
         self._sharded: tuple[str, ...] = ()
 
     @property
@@ -159,22 +203,71 @@ class RemoteParameterServer:
                  for n, v in stats.items()}
         return self.family.shared_from_dict(stats)
 
+    def _rpc(self, i: int, msg_type: MsgType, meta: dict,
+             arrays: dict | None = None, *,
+             expect: tuple[MsgType, ...]):
+        """One RPC to server ``i`` with bounded retry-with-backoff.
+
+        A transport failure (dropped/reset/timed-out connection) burns
+        one unit of the ``reconnect_limit`` budget, sleeps an
+        exponential backoff, re-dials + re-handshakes + replays the
+        mutation buffer, and resends.  Safe for mutations because the
+        server dedups by (client, round) sequence: the retried frame
+        either applies (first copy never arrived) or returns the
+        recorded ack (the ack was lost).  Semantic refusals (peer ERROR
+        frames) propagate immediately — retrying them cannot help."""
+        failures = 0
+        while True:
+            try:
+                return self._conns[i].request(msg_type, meta, arrays,
+                                              expect=expect)
+            except _RETRYABLE as e:
+                failures += 1
+                self.retries += 1
+                if failures > self.reconnect_limit:
+                    raise RemoteError(
+                        f"{msg_type.name} to {self._addrs[i]} failed "
+                        f"after {self.reconnect_limit} reconnect "
+                        f"attempts: {e}") from e
+                time.sleep(min(_BACKOFF_BASE_S * (2 ** (failures - 1)),
+                               _BACKOFF_CAP_S))
+                try:
+                    self._reconnect(i)
+                except _RETRYABLE:
+                    # Dial/handshake/replay failure (server still down):
+                    # the next loop iteration fails fast on the dead
+                    # connection and burns the same bounded budget.
+                    pass
+
     def _request_all(self, msg_type: MsgType, metas: list[dict],
                      arrays_list: list[dict] | None = None, *,
                      expect: tuple[MsgType, ...]):
         out = []
-        for i, conn in enumerate(self._conns):
+        for i in range(len(self._conns)):
             arrays = None if arrays_list is None else arrays_list[i]
-            out.append(conn.request(msg_type, metas[i], arrays,
-                                    expect=expect))
+            out.append(self._rpc(i, msg_type, metas[i], arrays,
+                                 expect=expect))
         return out
+
+    def _buffer_mutation(self, i: int, msg_type: MsgType, meta: dict,
+                         arrays: dict | None, seq: int) -> None:
+        """Record an acked mutation for post-reconnect replay; prune
+        pushes older than the replay window (INIT, seq -1, is kept)."""
+        buf = self._replay[i]
+        buf.append((msg_type, meta, arrays, seq))
+        if seq >= 0:
+            horizon = seq - REPLAY_WINDOW
+            self._replay[i] = [e for e in buf
+                               if e[3] < 0 or e[3] >= horizon]
 
     def _reconnect(self, i: int) -> None:
         """Re-dial server ``i`` after a dropped connection: fresh socket,
-        fresh HELLO handshake, and a check that the server still serves
-        the same row range it did at construction (a restarted server
-        with a different partition is a config error, not a blip).  Wire
-        counters carry over so bench totals survive a reconnect."""
+        fresh HELLO handshake, a check that the server still serves the
+        same row range it did at construction (a restarted server with a
+        different partition is a config error, not a blip), then replay
+        of the buffered mutation window — so a shard restored from a
+        snapshot a few rounds back re-finalizes the gap from our acked
+        frames.  Wire counters carry over so bench totals survive."""
         old = self._conns[i]
         try:
             old.close()
@@ -184,6 +277,12 @@ class RemoteParameterServer:
         try:
             _, meta, _ = conn.request(MsgType.HELLO, self._hello,
                                       expect=(MsgType.WELCOME,))
+        except (protocol.TransportError, protocol.ConnectionClosed):
+            # A reset *or* clean close mid-handshake is the restart
+            # window (a chaos proxy whose upstream dial failed closes
+            # cleanly) — retryable, not a semantic refusal.
+            conn.close()
+            raise
         except ProtocolError as e:
             conn.close()
             raise RemoteError(
@@ -200,6 +299,14 @@ class RemoteParameterServer:
         conn.rpc_count += old.rpc_count
         conn.rpc_latency_s = old.rpc_latency_s + conn.rpc_latency_s
         self._conns[i] = conn
+        self.reconnects += 1
+        for mt, m, arrays, _seq in list(self._replay[i]):
+            # replay-flagged: an already-applied frame digest-matches the
+            # server's mutation log (recorded ack), a pruned/finalized one
+            # acks {"ignored": true}, and a missing one applies — the
+            # catch-up that makes shard restart lossless.
+            conn.request(mt, {**m, "replay": True}, arrays,
+                         expect=(MsgType.OK,))
 
     # ------------------------------------------------------------- protocol
     def init_push(self, client_id: int, shared) -> None:
@@ -217,8 +324,11 @@ class RemoteParameterServer:
             part.update(aux)
             arrays_list.append(part)
         meta = {"client": int(client_id), "sharded": list(sharded)}
-        self._request_all(MsgType.INIT, [meta] * self.n_servers,
-                          arrays_list, expect=(MsgType.OK,))
+        for i in range(self.n_servers):
+            self._rpc(i, MsgType.INIT, meta, arrays_list[i],
+                      expect=(MsgType.OK,))
+            self._buffer_mutation(i, MsgType.INIT, meta,
+                                  arrays_list[i], -1)
 
     def pull(self, round_idx: int, cached_version: int | None = None
              ) -> tuple[Any, int, bool]:
@@ -231,34 +341,9 @@ class RemoteParameterServer:
         meta = {"round": int(round_idx)}
         if cached_version is not None:
             meta["cached_version"] = int(cached_version)
-        # PULL is read-only, so a dropped connection is retried on a
-        # fresh socket — bounded by ``reconnect_limit`` consecutive
-        # failures per server (the ``pull_retry_limit`` idiom): past the
-        # budget the failure propagates instead of spinning forever
-        # against a dead server.
-        replies = []
-        for i in range(self.n_servers):
-            failures = 0
-            while True:
-                try:
-                    replies.append(self._conns[i].request(
-                        MsgType.PULL, meta,
-                        expect=(MsgType.STATE, MsgType.NOT_MODIFIED)))
-                    break
-                except (protocol.ConnectionClosed, OSError) as e:
-                    failures += 1
-                    if failures > self.reconnect_limit:
-                        raise RemoteError(
-                            f"pull from {self._addrs[i]} failed after "
-                            f"{self.reconnect_limit} reconnects: {e}") \
-                            from e
-                    try:
-                        self._reconnect(i)
-                    except OSError:
-                        # Dial failure (server down): the dead connection
-                        # stays in place, the next loop iteration fails
-                        # fast and burns the same bounded budget.
-                        pass
+        replies = [self._rpc(i, MsgType.PULL, meta,
+                             expect=(MsgType.STATE, MsgType.NOT_MODIFIED))
+                   for i in range(self.n_servers)]
         kinds = {mt for mt, _, _ in replies}
         if kinds == {MsgType.NOT_MODIFIED}:
             return None, int(cached_version), False
@@ -307,8 +392,11 @@ class RemoteParameterServer:
         meta = {"round": int(round_idx), "client": int(client_id)}
         parts = self._split_rows(nps, names)
         if not self.sparse_push:
-            self._request_all(MsgType.PUSH, [meta] * self.n_servers,
-                              parts, expect=(MsgType.OK,))
+            for i in range(self.n_servers):
+                self._rpc(i, MsgType.PUSH, meta, parts[i],
+                          expect=(MsgType.OK,))
+                self._buffer_mutation(i, MsgType.PUSH, meta, parts[i],
+                                      int(round_idx))
             return
         metas: list[dict] = []
         arrays_list: list[dict[str, np.ndarray]] = []
@@ -324,8 +412,24 @@ class RemoteParameterServer:
             metas.append({**meta, "n_rows": int(hi - lo),
                           "sparse": list(names)})
             arrays_list.append(arrays)
-        self._request_all(MsgType.PUSH_SPARSE, metas, arrays_list,
-                          expect=(MsgType.OK,))
+        for i in range(self.n_servers):
+            self._rpc(i, MsgType.PUSH_SPARSE, metas[i], arrays_list[i],
+                      expect=(MsgType.OK,))
+            self._buffer_mutation(i, MsgType.PUSH_SPARSE, metas[i],
+                                  arrays_list[i], int(round_idx))
+
+    def push_ghost(self, round_idx: int, client_id: int) -> None:
+        """Fill the client's barrier slot for ``round_idx`` without a
+        delta or clock tick — how a trainer-level simulated fault
+        (crash/straggle/lost_push mask) rides the wire while keeping the
+        round finalization flowing, bit-exact with the in-process mask
+        (DESIGN.md §13)."""
+        meta = {"round": int(round_idx), "client": int(client_id),
+                "ghost": True}
+        for i in range(self.n_servers):
+            self._rpc(i, MsgType.PUSH, meta, None, expect=(MsgType.OK,))
+            self._buffer_mutation(i, MsgType.PUSH, meta, None,
+                                  int(round_idx))
 
     def project(self) -> None:
         self._request_all(MsgType.PROJECT, [{}] * self.n_servers,
@@ -352,9 +456,48 @@ class RemoteParameterServer:
         return min(rounds), np.asarray(replies[0][1]["clocks"])
 
     def rejoin(self, client_id: int) -> None:
+        """Elastic rejoin: clear the client's pending pushes and open
+        mutation-log entries server-side, and lift any eviction."""
         self._request_all(MsgType.REJOIN,
                           [{"client": int(client_id)}] * self.n_servers,
                           expect=(MsgType.OK,))
+        # Frames from the dead incarnation must not resurface on the next
+        # reconnect and digest-conflict with the fresh ones.
+        for buf in self._replay:
+            buf[:] = [e for e in buf
+                      if e[3] < 0 or int(e[1].get("client", -2))
+                      != int(client_id)]
+
+    def leave(self, client_id: int) -> None:
+        """Voluntary elastic leave: the barrier stops requiring the
+        client immediately (no liveness deadline) and its clock freezes
+        until a rejoin."""
+        self._request_all(
+            MsgType.REJOIN,
+            [{"client": int(client_id), "action": "leave"}]
+            * self.n_servers, expect=(MsgType.OK,))
+
+    def snapshot_write(self, directory: str,
+                       step: int | None = None) -> list[dict[str, Any]]:
+        """Ask every shard to persist its state (SNAPSHOT_WRITE) —
+        returns the per-shard {step, name, path} acks."""
+        meta: dict[str, Any] = {"directory": directory}
+        if step is not None:
+            meta["step"] = int(step)
+        return [m for _, m, _ in self._request_all(
+            MsgType.SNAPSHOT_WRITE, [meta] * self.n_servers,
+            expect=(MsgType.OK,))]
+
+    def snapshot_restore(self, directory: str,
+                         step: int | None = None) -> list[int]:
+        """Ask every shard to reload from its snapshot (SNAPSHOT_RESTORE)
+        — returns the per-shard restored rounds."""
+        meta: dict[str, Any] = {"directory": directory}
+        if step is not None:
+            meta["step"] = int(step)
+        return [int(m["server_round"]) for _, m, _ in self._request_all(
+            MsgType.SNAPSHOT_RESTORE, [meta] * self.n_servers,
+            expect=(MsgType.OK,))]
 
     def server_stats(self) -> list[dict[str, Any]]:
         return [m for _, m, _ in self._request_all(
@@ -388,6 +531,8 @@ class RemoteParameterServer:
             "rpc_count": sum(c["rpc_count"] for c in per),
             "rpc_p50_ms": pct(0.50),
             "rpc_p99_ms": pct(0.99),
+            "retries": self.retries,
+            "reconnects": self.reconnects,
             "per_connection": per,
         }
 
@@ -445,12 +590,29 @@ def _run_train(args) -> dict[str, Any]:
         n_clients=args.n_clients, tau=args.tau, layout=args.layout,
         consistency=args.consistency, project_every=args.project_every,
         transport="tcp", server_addrs=tuple(args.addrs.split(",")),
-        local_clients=clients)
-    trainer = Trainer(cfg, tokens, mask, config=tcfg,
-                      key=jax.random.PRNGKey(args.seed))
+        local_clients=clients, reconnect_limit=args.reconnect_limit,
+        snapshot_every=args.snapshot_every,
+        snapshot_dir=args.snapshot_dir)
+    key = jax.random.PRNGKey(args.seed)
+    if args.restore:
+        # Worker restart: rebuild from the latest local snapshot and
+        # resume at the recorded round — the servers' barrier has been
+        # waiting for this client's missing pushes.
+        trainer = Trainer.restore(cfg, tokens, mask, config=tcfg, key=key)
+    else:
+        trainer = Trainer(cfg, tokens, mask, config=tcfg, key=key)
     t0 = time.perf_counter()
-    for _ in range(args.n_rounds):
+    rounds_done = 0
+    while trainer.round_idx < args.n_rounds:
         trainer.step()
+        rounds_done += 1
+        if args.die_after_round is not None \
+                and trainer.round_idx >= args.die_after_round:
+            # Deterministic kill point (failover tests): the round-N
+            # snapshot was written by step() before we get here, so the
+            # relaunched --restore incarnation resumes at exactly N.
+            print(f"DYING round {trainer.round_idx}", flush=True)
+            os._exit(42)
     trainer._sync()
     dt = time.perf_counter() - t0
     shared = trainer.shared
@@ -460,7 +622,9 @@ def _run_train(args) -> dict[str, Any]:
         "mode": "train",
         "clients": list(clients),
         "rounds": args.n_rounds,
-        "rounds_per_s": args.n_rounds / max(dt, 1e-9),
+        "rounds_done": rounds_done,
+        "restored": bool(args.restore),
+        "rounds_per_s": rounds_done / max(dt, 1e-9),
         "checksums": {n: _checksum(v) for n, v in stats.items()},
         "sums": {n: float(v.sum()) for n, v in stats.items()},
         "perplexity": trainer.perplexity(),
@@ -532,6 +696,17 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--corpus-seed", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--timeout", type=float, default=60.0)
+    ap.add_argument("--reconnect-limit", type=int, default=3,
+                    help="bounded retry budget per RPC (each unit is one "
+                         "reconnect attempt with exponential backoff)")
+    ap.add_argument("--snapshot-dir", default=None)
+    ap.add_argument("--snapshot-every", type=int, default=0)
+    ap.add_argument("--restore", action="store_true",
+                    help="resume from the latest snapshot in "
+                         "--snapshot-dir (worker restart)")
+    ap.add_argument("--die-after-round", type=int, default=None,
+                    help="exit(42) after completing this round "
+                         "(deterministic kill point for failover tests)")
     ap.add_argument("--out", default=None, help="result JSON path")
     args = ap.parse_args(argv)
 

@@ -75,6 +75,20 @@ class ConnectionClosed(ProtocolError):
     plain ProtocolError (truncation)."""
 
 
+class TransportError(ProtocolError):
+    """The *network* failed (reset, timeout mid-read, EOF inside a
+    frame), as opposed to a malformed frame or a semantic refusal.  The
+    distinction drives the client's retry policy (DESIGN.md §13): a
+    TransportError is safely retryable through the idempotent-replay
+    path, a peer ERROR frame or a corrupt frame is not."""
+
+
+class IdleTimeout(TransportError):
+    """The socket timed out at a frame boundary with zero bytes read —
+    the peer may be healthy but silent.  Servers use this as the liveness
+    sweep tick; clients treat it like any other TransportError."""
+
+
 class MsgType(enum.IntEnum):
     """Message-type registry (DESIGN.md §11).  Values are wire-stable:
     append only, never renumber."""
@@ -102,6 +116,13 @@ class MsgType(enum.IntEnum):
     #                    carries round/client plus "sparse" (stat names)
     #                    and "n_rows" (the shard's dense row count, so the
     #                    server can cross-check before scatter-adding).
+    SNAPSHOT_WRITE = 18    # client → server: persist shard state to disk
+    #                        (meta: directory, optional step) → OK with
+    #                        the written step; admin path, DESIGN.md §13.
+    SNAPSHOT_RESTORE = 19  # client → server: reload shard state from a
+    #                        snapshot (meta: directory, optional step) →
+    #                        OK with the restored round; also taken by a
+    #                        restarted shard process before serving.
 
 
 def _require(cond: bool, msg: str) -> None:
@@ -158,23 +179,29 @@ def recv_all(sock: socket.socket, n: int, *,
     """Read exactly ``n`` bytes or raise.
 
     EOF before the first byte of a frame is a clean close
-    (:class:`ConnectionClosed`, when ``at_boundary``); EOF anywhere else
-    is truncation (:class:`ProtocolError`).  ``recv`` may return short
-    reads at any time — this loop is the exact-read discipline the whole
-    protocol rests on."""
+    (:class:`ConnectionClosed`, when ``at_boundary``); a socket timeout
+    there with zero bytes is :class:`IdleTimeout` (the liveness-sweep
+    tick); EOF or a socket error anywhere else is a
+    :class:`TransportError` (truncation — retryable by clients).
+    ``recv`` may return short reads at any time — this loop is the
+    exact-read discipline the whole protocol rests on."""
     chunks: list[bytes] = []
     got = 0
     while got < n:
         try:
             chunk = sock.recv(min(n - got, 1 << 20))
-        except (ConnectionResetError, BrokenPipeError, socket.timeout,
-                TimeoutError) as e:
-            raise ProtocolError(f"socket error after {got}/{n} bytes: "
-                                f"{type(e).__name__}") from e
+        except (socket.timeout, TimeoutError) as e:
+            if at_boundary and got == 0:
+                raise IdleTimeout("idle at frame boundary") from e
+            raise TransportError(f"socket timeout after {got}/{n} bytes"
+                                 ) from e
+        except (ConnectionResetError, BrokenPipeError, OSError) as e:
+            raise TransportError(f"socket error after {got}/{n} bytes: "
+                                 f"{type(e).__name__}") from e
         if not chunk:
             if at_boundary and got == 0:
                 raise ConnectionClosed("peer closed connection")
-            raise ProtocolError(
+            raise TransportError(
                 f"connection closed mid-read ({got}/{n} bytes)")
         chunks.append(chunk)
         got += len(chunk)

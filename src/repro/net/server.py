@@ -51,11 +51,42 @@ decodes, and only under the server lock, so a fuzzed connection can
 never corrupt the store or wedge the barrier for healthy clients.
 Blocking waits (barrier pulls, SNAPSHOT/CLOCK with ``min_round``) are
 bounded by ``barrier_timeout`` and answer ERROR instead of hanging.
+
+Fault tolerance across the wire (DESIGN.md §13) adds three mechanisms:
+
+* **idempotent mutation replay** — every PUSH/PUSH_SPARSE/INIT is a
+  *sequenced mutation*: key ``(client, seq)`` with ``seq = round`` for
+  pushes and ``-1`` for INIT.  The server keeps a bounded mutation log
+  of ``(content digest, recorded reply)`` per key under the store lock;
+  a replayed frame whose digest matches returns the recorded ack
+  without touching the store (exactly-once application under
+  at-least-once delivery), a same-key frame with *different* content is
+  a hard error, and a replay-flagged frame for a pruned/finalized round
+  acks ``{"ignored": true}``.  This is what makes client-side
+  retry-after-reconnect safe on the mutation path — BSP stays bit-exact
+  because a retried delta can never double-apply;
+* **shard snapshot/restore** — the full barrier state (store, aux,
+  pending per-round deltas, ghost markers, clocks, round, eviction set,
+  mutation log) persists through :mod:`repro.checkpoint.ckpt` on a
+  round cadence and on SNAPSHOT_WRITE; a restarted shard process
+  restores it (SNAPSHOT_RESTORE or ``--restore``) and resumes mid-run —
+  clients replay their unacked/windowed mutations on reconnect, so
+  rounds past the snapshot re-finalize in the identical ascending
+  client order;
+* **barrier eviction** — handler sockets carry timeouts + SO_KEEPALIVE,
+  so a dead peer surfaces as a transport error naming the shard's rows
+  and the client ids the connection served.  A client whose every
+  connection is gone becomes *suspect*; past the liveness deadline it
+  is evicted from the round barrier: rounds finalize from the remaining
+  contributors (same ascending-id fold — bit-exact with the in-process
+  crash mask) and its SSP clock freezes.  Any later frame from the
+  client (HELLO/INIT/PUSH/REJOIN) un-evicts it.
 """
 
 from __future__ import annotations
 
 import argparse
+import hashlib
 import json
 import os
 import socket
@@ -65,6 +96,7 @@ from typing import Any
 
 import numpy as np
 
+from repro.checkpoint import ckpt
 from repro.core import family as family_mod
 from repro.core import projection
 from repro.core import server as server_mod
@@ -85,6 +117,30 @@ class _BarrierTimeout(RuntimeError):
     """A bounded server-side wait expired (slow/dead peer)."""
 
 
+# Finalized rounds whose mutation-log entries are kept for replay dedup;
+# older entries answer ``ignored`` to replay-flagged frames.  Must cover
+# the client replay window (client.REPLAY_WINDOW) with slack.
+MUTLOG_WINDOW = 64
+
+_GHOST_DIGEST = "__ghost__"
+
+
+def mutation_digest(deltas: dict[str, np.ndarray] | None) -> str:
+    """Content digest of a mutation's arrays — the idempotency check.
+    Covers names, shapes, dtypes, and raw bytes, so a replayed frame is
+    accepted iff it is byte-identical to the recorded application."""
+    if deltas is None:
+        return _GHOST_DIGEST
+    h = hashlib.sha256()
+    for n in sorted(deltas):
+        v = np.ascontiguousarray(deltas[n])
+        h.update(n.encode())
+        h.update(str(v.shape).encode())
+        h.update(v.dtype.str.encode())
+        h.update(v.tobytes())
+    return h.hexdigest()
+
+
 class ShardServer:
     """One row-range shard of the parameter server, served over TCP.
 
@@ -98,7 +154,11 @@ class ShardServer:
                  n_clients: int, rows: tuple[int, int] | None = None,
                  consistency: str = "bsp", project_every: int = 1,
                  host: str = "127.0.0.1", port: int = 0,
-                 barrier_timeout: float = 60.0):
+                 barrier_timeout: float = 60.0,
+                 liveness_timeout: float = 15.0,
+                 snapshot_dir: str | None = None,
+                 snapshot_every: int = 0,
+                 snapshot_name: str = "shard"):
         self.family = family_mod.get(family_name)
         if type(self.family).post_round is not family_mod.ModelFamily.post_round:
             raise NotImplementedError(
@@ -116,6 +176,12 @@ class ShardServer:
         self.policy = server_mod.make_consistency(consistency)
         self.project_every = project_every
         self.barrier_timeout = barrier_timeout
+        self.liveness_timeout = liveness_timeout
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_every = int(snapshot_every)
+        # Stable per-shard snapshot name: a restarted process serving the
+        # same row range finds its own files.
+        self._snap_name = f"{snapshot_name}-{self.rows[0]}-{self.rows[1]}"
 
         self._cond = threading.Condition()
         # Canonical row-sliced store + unsharded aux (merged at INIT,
@@ -131,6 +197,20 @@ class ShardServer:
         # the only rules a row-range can apply locally (aggregates are
         # client-side); resolved once the stat names are known.
         self._rules: tuple[projection.Rule, ...] = ()
+        # Idempotency: (client, seq) -> (content digest, recorded reply
+        # meta).  seq = round for pushes, -1 for INIT; pruned past
+        # MUTLOG_WINDOW finalized rounds.  Pending slots may hold None —
+        # a ghost push (simulated-fault barrier filler, no delta/clock).
+        self._mutlog: dict[tuple[int, int], tuple[str, dict]] = {}
+        # Liveness: client -> eviction deadline while every connection
+        # that served it is gone; past the deadline the client moves to
+        # _evicted and the barrier stops requiring it.
+        self._suspects: dict[int, float] = {}
+        self._evicted: set[int] = set()
+        self._evictions = 0
+        self._live_conns: dict[int, set[int]] = {}
+        self._conn_seq = 0
+        self._snapshots_written = 0
         self._stop = False
         self._protocol_errors = 0
         self._latency_s: list[float] = []
@@ -186,13 +266,38 @@ class ShardServer:
             self._threads.append(t)
 
     def _serve_conn(self, sock: socket.socket) -> None:
+        # Per-socket timeout + keepalive: a dead or half-open peer can no
+        # longer park this thread in recv_all forever while the barrier
+        # waits — it surfaces as a transport error within the liveness
+        # deadline, naming this shard and the clients it served.
+        try:
+            sock.setsockopt(socket.SOL_SOCKET, socket.SO_KEEPALIVE, 1)
+        except OSError:
+            pass
+        sock.settimeout(min(1.0, max(self.liveness_timeout, 0.05)))
         conn = protocol.FramedConnection(sock)
+        clients: set[int] = set()
+        with self._cond:
+            self._conn_seq += 1
+            conn_id = self._conn_seq
+            self._live_conns[conn_id] = clients
         try:
             while not self._stop:
                 try:
                     mt, meta, arrays = conn.recv()
+                except protocol.IdleTimeout:
+                    # Idle peer is normal; use the tick to run the
+                    # liveness sweep for everyone else's dead clients.
+                    with self._cond:
+                        self._sweep_liveness_locked()
+                    continue
                 except protocol.ConnectionClosed:
                     break
+                except protocol.TransportError as e:
+                    raise ProtocolError(
+                        f"shard rows {list(self.rows)} lost the connection "
+                        f"serving clients {sorted(clients)}: {e}") from e
+                self._note_clients(clients, meta)
                 t0 = time.perf_counter()
                 try:
                     reply = self._dispatch(mt, meta, arrays)
@@ -215,9 +320,9 @@ class ShardServer:
                         self._cond.notify_all()
                     break
         except ProtocolError as e:
-            # Malformed frame: the stream can no longer be trusted.  The
-            # store was never touched (mutation happens only after a full
-            # decode), so only this connection dies.
+            # Malformed frame or dead transport: the stream can no longer
+            # be trusted.  The store was never touched (mutation happens
+            # only after a full decode), so only this connection dies.
             with self._cond:
                 self._protocol_errors += 1
             try:
@@ -226,8 +331,71 @@ class ShardServer:
                 pass
         finally:
             with self._cond:
+                self._live_conns.pop(conn_id, None)
+                self._mark_suspects_locked(clients)
                 self._conn_counters.append(conn.counters())
             conn.close()
+
+    def _note_clients(self, clients: set[int], meta: dict) -> None:
+        """Record which client ids this connection serves (HELLO sends
+        the full list, mutations name one) and clear their suspect /
+        evicted status — any frame from a client proves it is alive."""
+        fresh: set[int] = set()
+        announced = meta.get("clients")
+        if isinstance(announced, (list, tuple)):
+            for x in announced:
+                try:
+                    fresh.add(int(x))
+                except (TypeError, ValueError):
+                    pass
+        if "client" in meta:
+            try:
+                fresh.add(int(meta["client"]))
+            except (TypeError, ValueError):
+                pass
+        if not fresh:
+            return
+        clients.update(fresh)
+        with self._cond:
+            revived = False
+            for c in fresh:
+                self._suspects.pop(c, None)
+                if c in self._evicted:
+                    self._evicted.discard(c)
+                    revived = True
+            if revived:
+                self._cond.notify_all()
+
+    # ----------------------------------------------------------- liveness
+    def _mark_suspects_locked(self, clients: set[int]) -> None:
+        """A connection died: its clients become eviction suspects unless
+        another live connection still serves them."""
+        still: set[int] = set()
+        for s in self._live_conns.values():
+            still |= s
+        now = time.monotonic()
+        for c in clients:
+            if c in still or c in self._evicted:
+                continue
+            self._suspects.setdefault(c, now + self.liveness_timeout)
+
+    def _sweep_liveness_locked(self) -> None:
+        """Evict suspects past their deadline: the barrier stops
+        requiring them (rounds finalize from the survivors) and their
+        clocks freeze — the wire analogue of the in-process crash mask."""
+        if not self._suspects:
+            return
+        now = time.monotonic()
+        expired = [c for c, dl in self._suspects.items() if now >= dl]
+        if not expired:
+            return
+        for c in expired:
+            del self._suspects[c]
+            self._evicted.add(c)
+            self._evictions += 1
+        if self._store is not None:
+            self._advance_locked()
+        self._cond.notify_all()
 
     # ------------------------------------------------------------ dispatch
     def _dispatch(self, mt: MsgType, meta: dict, arrays: dict):
@@ -250,6 +418,10 @@ class ShardServer:
             return MsgType.OK, {"server_round": self._round}, None
         if mt is MsgType.SNAPSHOT:
             return self._on_snapshot(meta)
+        if mt is MsgType.SNAPSHOT_WRITE:
+            return self._on_snapshot_write(meta)
+        if mt is MsgType.SNAPSHOT_RESTORE:
+            return self._on_snapshot_restore(meta)
         if mt is MsgType.CLOCK:
             return self._on_clock(meta)
         if mt is MsgType.REJOIN:
@@ -292,8 +464,25 @@ class ShardServer:
                     f"INIT stat {n!r} has shape {v.shape}; this server "
                     f"owns rows [{lo}, {hi}) and expects ({hi - lo}, K)")
         aux = {n: arrays[n] for n in arrays if n not in sharded}
+        digest = mutation_digest(dict(arrays))
         with self._cond:
+            rec = self._mutlog.get((c, -1))
+            if rec is not None:
+                if rec[0] == digest:
+                    # Idempotent replay of an already-applied INIT (the
+                    # ack was lost, or the client re-replays its buffer
+                    # after a reconnect): recorded reply, no mutation.
+                    return MsgType.OK, dict(rec[1]), None
+                raise ValueError(
+                    f"conflicting INIT replay for client {c}: same "
+                    "sequence, different content digest")
             if self._store is not None:
+                if meta.get("replay"):
+                    # Sealed via snapshot restore and the log entry was
+                    # not carried (or pruned): the INIT is already folded
+                    # into the restored store — acknowledge and ignore.
+                    return MsgType.OK, {"server_round": self._round,
+                                        "client": c, "ignored": True}, None
                 raise ValueError("INIT after the store was sealed")
             if self._sharded and self._sharded != sharded:
                 raise ValueError(f"INIT sharded-name mismatch: {sharded} "
@@ -303,8 +492,10 @@ class ShardServer:
             if len(self._init_parts) == self.n_clients:
                 self._seal_store_locked()
                 self._cond.notify_all()
-        return MsgType.OK, {"server_round": self._round,
-                            "initialized": self._store is not None}, None
+            reply = {"server_round": self._round,
+                     "initialized": self._store is not None, "client": c}
+            self._mutlog[(c, -1)] = (digest, reply)
+        return MsgType.OK, dict(reply), None
 
     def _seal_store_locked(self) -> None:
         """Merge the per-client initial statistics in ascending client id
@@ -339,11 +530,18 @@ class ShardServer:
         while not pred():
             if self._stop:
                 raise _BarrierTimeout("server is shutting down")
+            # Wake on a short tick so a waiter also runs the liveness
+            # sweep — a barrier stalled by a dead client resolves at the
+            # eviction deadline, not at barrier_timeout.
+            self._sweep_liveness_locked()
+            if pred():
+                return
             remaining = deadline - time.monotonic()
-            if remaining <= 0 or not self._cond.wait(timeout=remaining):
+            if remaining <= 0:
                 raise _BarrierTimeout(
                     f"timed out after {self.barrier_timeout:.1f}s waiting "
                     f"for {what} (server at round {self._round})")
+            self._cond.wait(timeout=min(remaining, 0.25))
 
     def _on_pull(self, meta: dict):
         r = int(meta["round"])
@@ -393,6 +591,13 @@ class ShardServer:
         lo, hi = self.rows
         with self._cond:
             self._require_store()
+            if meta.get("ghost"):
+                # Simulated-fault barrier filler (DESIGN.md §13): fills
+                # the client's slot so the round finalizes, but carries
+                # no delta and ticks no clock — the wire analogue of the
+                # in-process push mask.
+                return self._apply_push_locked(
+                    r, c, None, replay=bool(meta.get("replay")))
             deltas = {}
             for n in self._sharded:
                 v = arrays[n]
@@ -401,7 +606,8 @@ class ShardServer:
                         f"PUSH delta {n!r} has shape {v.shape}, store has "
                         f"{self._store[n].shape} (rows [{lo}, {hi}))")
                 deltas[n] = v
-            return self._apply_push_locked(r, c, deltas)
+            return self._apply_push_locked(
+                r, c, deltas, replay=bool(meta.get("replay")))
 
     def _on_push_sparse(self, meta: dict, arrays: dict):
         """The COO row-sliced push frame (DESIGN.md §12): ``rows`` carries
@@ -460,18 +666,43 @@ class ShardServer:
                 dense = np.zeros(self._store[n].shape, v.dtype)
                 dense[rows] = v
                 deltas[n] = dense
-            return self._apply_push_locked(r, c, deltas)
+            return self._apply_push_locked(
+                r, c, deltas, replay=bool(meta.get("replay")))
 
     def _apply_push_locked(self, r: int, c: int,
-                           deltas: dict[str, np.ndarray]):
-        """Shared tail of the dense and sparse push paths — the policy
-        split (async immediate vs barrier buffering) and the ack."""
+                           deltas: dict[str, np.ndarray] | None, *,
+                           replay: bool = False):
+        """Shared tail of the dense, sparse, and ghost push paths — the
+        idempotency check (mutation log), the policy split (async
+        immediate vs barrier buffering), and the ack.
+
+        Dedup rule (DESIGN.md §13): the sequence number of a push *is*
+        its round, so the log key is (client, round).  A key hit with a
+        matching content digest returns the recorded ack — the frame was
+        already applied and the retry is the lost ack coming back; a hit
+        with a different digest is a protocol violation (two different
+        deltas claiming one sequence slot); a miss for an
+        already-finalized round is stale — rejected, unless the client
+        flagged it as a buffered replay (reconnect catch-up), which acks
+        ``ignored`` because the finalized store already contains it.
+        """
+        digest = mutation_digest(deltas)
+        rec = self._mutlog.get((c, r))
+        if rec is not None:
+            if rec[0] == digest:
+                return MsgType.OK, dict(rec[1]), None
+            raise ValueError(
+                f"conflicting PUSH replay (round {r}, client {c}): same "
+                "sequence number, different delta digest")
         if self.policy.immediate:
             # Async: apply on arrival (Gauss-Seidel in arrival order).
-            for n in deltas:
-                self._store[n] = self._store[n] + deltas[n]
-            self._clocks[c] += 1
-            done = int(self._clocks.min())
+            if deltas is not None:
+                for n in deltas:
+                    self._store[n] = self._store[n] + deltas[n]
+                self._clocks[c] += 1
+            mask = self._clock_mask_locked()
+            done = int(self._clocks[mask].min()) if mask.any() \
+                else self._round
             if self.project_every and done > self._round:
                 for m in range(self._round, done):
                     if m % self.project_every == 0:
@@ -479,41 +710,91 @@ class ShardServer:
                 self._round = done
             elif done > self._round:
                 self._round = done
+            reply = {"server_round": self._round, "round": r, "client": c}
+            self._mutlog[(c, r)] = (digest, reply)
+            self._prune_mutlog_locked()
             self._cond.notify_all()
-        else:
-            if r < self._round:
-                raise ValueError(
-                    f"PUSH for already-finalized round {r} "
-                    f"(server at {self._round})")
-            slot = self._pending.setdefault(r, {})
-            if c in slot:
-                raise ValueError(f"duplicate PUSH (round {r}, "
-                                 f"client {c})")
-            slot[c] = deltas
-            self._advance_locked()
-        return MsgType.OK, {"server_round": self._round,
-                            "round": r, "client": c}, None
+            return MsgType.OK, dict(reply), None
+        if r < self._round:
+            if replay:
+                return MsgType.OK, {"server_round": self._round,
+                                    "round": r, "client": c,
+                                    "ignored": True}, None
+            raise ValueError(
+                f"PUSH for already-finalized round {r} "
+                f"(server at {self._round})")
+        slot = self._pending.setdefault(r, {})
+        if c in slot:
+            # Unreachable while the mutation log covers pending rounds
+            # (it is pruned only below the finalized horizon) — keep the
+            # old invariant as a backstop.
+            raise ValueError(f"duplicate PUSH (round {r}, client {c})")
+        slot[c] = deltas
+        reply = {"server_round": self._round, "round": r, "client": c}
+        self._mutlog[(c, r)] = (digest, reply)
+        self._advance_locked()
+        reply["server_round"] = self._round
+        return MsgType.OK, dict(reply), None
+
+    def _clock_mask_locked(self) -> np.ndarray:
+        """Clients whose clocks still gate round advancement — everyone
+        not evicted (an evicted client's frozen clock must not hold the
+        async round back forever)."""
+        mask = np.ones((self.n_clients,), bool)
+        for c in self._evicted:
+            mask[c] = False
+        return mask
+
+    def _required_locked(self) -> list[int]:
+        """The barrier's required contributor set: every non-evicted
+        client."""
+        return [c for c in range(self.n_clients)
+                if c not in self._evicted]
 
     def _advance_locked(self) -> None:
         """Finalize every consecutive complete round: sum the pending
-        deltas in ascending client order, apply once, advance clocks,
-        project on cadence — the reference loop's barrier, verbatim."""
-        while len(self._pending.get(self._round, {})) == self.n_clients:
+        deltas in ascending client order, apply once, advance the
+        contributors' clocks, project on cadence — the reference loop's
+        barrier, verbatim.  A round is complete when every *required*
+        (non-evicted) client has a slot; ghost slots (None) count for
+        completeness but contribute no delta and tick no clock, exactly
+        the in-process push mask."""
+        while True:
+            required = self._required_locked()
+            slot = self._pending.get(self._round)
+            if not required or slot is None \
+                    or not all(c in slot for c in required):
+                break
             r = self._round
             slot = self._pending.pop(r)
+            contributors = [c for c in sorted(slot) if slot[c] is not None]
             total: dict[str, np.ndarray] | None = None
-            for c in sorted(slot):
+            for c in contributors:
                 d = slot[c]
                 total = ({n: np.array(v) for n, v in d.items()}
                          if total is None
                          else {n: total[n] + d[n] for n in total})
-            for n in total:
-                self._store[n] = self._store[n] + total[n]
-            self._clocks += 1
+            if total is not None:
+                for n in total:
+                    self._store[n] = self._store[n] + total[n]
+            for c in contributors:
+                self._clocks[c] += 1
             if self.project_every and r % self.project_every == 0:
                 self._project_locked()
             self._round = r + 1
+            self._prune_mutlog_locked()
+            if self.snapshot_dir and self.snapshot_every \
+                    and self._round % self.snapshot_every == 0:
+                self._snapshot_locked(self.snapshot_dir, self._round)
             self._cond.notify_all()
+
+    def _prune_mutlog_locked(self) -> None:
+        horizon = self._round - MUTLOG_WINDOW
+        if horizon <= 0:
+            return
+        stale = [k for k in self._mutlog if 0 <= k[1] < horizon]
+        for k in stale:
+            del self._mutlog[k]
 
     def _project_locked(self) -> None:
         """The family's elementwise shared rules on the row slices
@@ -550,14 +831,183 @@ class ShardServer:
         c = int(meta["client"])
         if not 0 <= c < self.n_clients:
             raise ValueError(f"client id {c} out of range")
+        action = meta.get("action", "join")
         with self._cond:
+            if action == "leave":
+                # Voluntary elastic leave: same effect as liveness
+                # eviction, but immediate — the barrier stops requiring
+                # the client and its clock freezes until it rejoins.
+                self._suspects.pop(c, None)
+                if c not in self._evicted:
+                    self._evicted.add(c)
+                    self._evictions += 1
+                if self._store is not None:
+                    self._advance_locked()
+                self._cond.notify_all()
+                return MsgType.OK, {"server_round": self._round,
+                                    "client": c, "evicted": True}, None
             # Read-my-writes lag lives at the client edge; server-side the
             # rejoin clears any stale pending push the crashed incarnation
-            # left in unfinalized rounds (it will re-push after re-pulling).
+            # left in unfinalized rounds (it will re-push after re-pulling)
+            # and drops the matching mutation-log entries so the fresh
+            # incarnation's different delta is not a digest conflict.
+            self._suspects.pop(c, None)
+            if c in self._evicted:
+                self._evicted.discard(c)
             for slot in self._pending.values():
                 slot.pop(c, None)
+            for k in [k for k in self._mutlog
+                      if k[0] == c and k[1] >= self._round]:
+                del self._mutlog[k]
+            self._cond.notify_all()
             return MsgType.OK, {"server_round": self._round,
                                 "client": c}, None
+
+    # ----------------------------------------------------- snapshot/restore
+    def _snapshot_locked(self, directory: str, step: int) -> str:
+        """Persist the full barrier state as one flat npz through
+        :mod:`repro.checkpoint.ckpt` (write-then-rename, step history).
+        Arrays carry the heavy state (store, aux, pending deltas); one
+        JSON blob carries everything else (round, clocks, eviction set,
+        ghost markers, mutation log) so a restarted shard resumes with
+        replay dedup intact."""
+        flat: dict[str, np.ndarray] = {}
+        for n, v in self._store.items():
+            flat[f"store/{n}"] = v
+        for n, v in self._aux.items():
+            flat[f"aux/{n}"] = v
+        ghosts: list[list[int]] = []
+        for r, slot in self._pending.items():
+            for c, d in slot.items():
+                if d is None:
+                    ghosts.append([int(r), int(c)])
+                else:
+                    for n, v in d.items():
+                        flat[f"pending/{r}/{c}/{n}"] = v
+        blob = {
+            "family": self.family_name,
+            "vocab_size": self.vocab_size,
+            "n_clients": self.n_clients,
+            "consistency": self.policy.key,
+            "rows": list(self.rows),
+            "round": int(self._round),
+            "clocks": [int(x) for x in self._clocks],
+            "sharded": list(self._sharded),
+            "evicted": sorted(int(c) for c in self._evicted),
+            "ghosts": ghosts,
+            "mutlog": [[int(c), int(s), dg, dict(rm)]
+                       for (c, s), (dg, rm) in self._mutlog.items()],
+        }
+        flat["__meta__"] = np.frombuffer(
+            json.dumps(blob).encode("utf-8"), np.uint8).copy()
+        path = ckpt.save(directory, self._snap_name, step, flat)
+        self._snapshots_written += 1
+        return path
+
+    def snapshot_to(self, directory: str | None = None,
+                    step: int | None = None) -> str:
+        directory = directory or self.snapshot_dir
+        if not directory:
+            raise ValueError("no snapshot directory configured")
+        with self._cond:
+            self._require_store()
+            return self._snapshot_locked(
+                directory, self._round if step is None else int(step))
+
+    def restore_from(self, directory: str | None = None,
+                     step: int | None = None) -> int:
+        """Reload the shard's state from the newest readable snapshot and
+        resume serving mid-run.  Validates identity (family, vocab,
+        n_clients, consistency, row range) semantically — the snapshot is
+        read template-free because a fresh process has no sealed store to
+        validate against."""
+        directory = directory or self.snapshot_dir
+        if not directory:
+            raise ValueError("no snapshot directory configured")
+        step, flat = ckpt.load_raw(directory, self._snap_name, step)
+        raw = flat.pop("__meta__", None)
+        if raw is None:
+            raise ValueError(
+                f"snapshot {self._snap_name} step {step} has no __meta__ "
+                "blob — not a shard-server snapshot")
+        blob = json.loads(bytes(raw.tobytes()).decode("utf-8"))
+        for field, mine in (("family", self.family_name),
+                            ("vocab_size", self.vocab_size),
+                            ("n_clients", self.n_clients),
+                            ("consistency", self.policy.key),
+                            ("rows", list(self.rows))):
+            theirs = blob.get(field)
+            if theirs != mine:
+                raise ValueError(
+                    f"snapshot identity mismatch on {field}: snapshot "
+                    f"has {theirs!r}, server has {mine!r}")
+        store: dict[str, np.ndarray] = {}
+        aux: dict[str, np.ndarray] = {}
+        pending: dict[int, dict[int, dict[str, np.ndarray] | None]] = {}
+        for key, v in flat.items():
+            if key.startswith("store/"):
+                store[key[len("store/"):]] = np.array(v)
+            elif key.startswith("aux/"):
+                aux[key[len("aux/"):]] = np.array(v)
+            elif key.startswith("pending/"):
+                _, r, c, n = key.split("/", 3)
+                pending.setdefault(int(r), {}).setdefault(
+                    int(c), {})[n] = np.array(v)
+            else:
+                raise ValueError(f"unknown snapshot leaf {key!r}")
+        for r, c in blob.get("ghosts", []):
+            pending.setdefault(int(r), {})[int(c)] = None
+        with self._cond:
+            self._store = store
+            self._aux = aux
+            self._sharded = tuple(blob["sharded"])
+            self._pending = pending
+            self._round = int(blob["round"])
+            self._clocks = np.asarray(blob["clocks"], np.int64)
+            self._evicted = set(int(c) for c in blob.get("evicted", []))
+            self._suspects.clear()
+            self._mutlog = {(int(c), int(s)): (dg, dict(rm))
+                            for c, s, dg, rm in blob.get("mutlog", [])}
+            self._init_parts.clear()
+            names = set(self._sharded)
+            self._rules = tuple(
+                r for r in self.family.shared_rules
+                if {r.a} | ({r.b} if r.b else set()) <= names)
+            self._cond.notify_all()
+            return self._round
+
+    def _on_snapshot_write(self, meta: dict):
+        directory = meta.get("directory") or self.snapshot_dir
+        if not directory:
+            raise ValueError(
+                "SNAPSHOT_WRITE needs meta['directory'] (the server has "
+                "no --snapshot-dir configured)")
+        with self._cond:
+            self._require_store()
+            step = self._round if meta.get("step") is None \
+                else int(meta["step"])
+            path = self._snapshot_locked(directory, step)
+        return MsgType.OK, {"server_round": self._round, "step": step,
+                            "name": self._snap_name,
+                            "path": os.path.basename(path)}, None
+
+    def _on_snapshot_restore(self, meta: dict):
+        directory = meta.get("directory") or self.snapshot_dir
+        if not directory:
+            raise ValueError(
+                "SNAPSHOT_RESTORE needs meta['directory'] (the server "
+                "has no --snapshot-dir configured)")
+        step = None if meta.get("step") is None else int(meta["step"])
+        try:
+            restored = self.restore_from(directory, step)
+        except (FileNotFoundError, ckpt.CorruptSnapshotError) as e:
+            raise ValueError(f"restore failed: {e}") from e
+        return MsgType.OK, {"server_round": restored,
+                            "name": self._snap_name}, None
+
+    def round_reached(self, n: int) -> bool:
+        with self._cond:
+            return self._round >= n
 
     # -------------------------------------------------------------- admin
     def stats(self) -> dict[str, Any]:
@@ -575,6 +1025,11 @@ class ShardServer:
                 "server_round": self._round,
                 "rows": list(self.rows),
                 "clocks": [int(x) for x in self._clocks],
+                "evicted": sorted(int(c) for c in self._evicted),
+                "suspects": sorted(int(c) for c in self._suspects),
+                "evictions": self._evictions,
+                "mutlog_entries": len(self._mutlog),
+                "snapshots_written": self._snapshots_written,
                 "protocol_errors": self._protocol_errors,
                 "rpc_count": len(self._latency_s),
                 "rpc_p50_ms": pct(0.50),
@@ -589,12 +1044,18 @@ def serve_shards(family_name: str, *, vocab_size: int, n_clients: int,
                  n_shards: int = 1, consistency: str = "bsp",
                  project_every: int = 1, host: str = "127.0.0.1",
                  ports: tuple[int, ...] | None = None,
-                 barrier_timeout: float = 60.0) -> list[ShardServer]:
+                 barrier_timeout: float = 60.0,
+                 liveness_timeout: float = 15.0,
+                 snapshot_dir: str | None = None,
+                 snapshot_every: int = 0,
+                 restore: bool = False) -> list[ShardServer]:
     """Start the ``n_shards`` row-range servers of a balanced
     :class:`~repro.core.server.ShardSpec` partition (one listener each,
     all in this process) and return them running.  Row ranges match the
     in-process ``ShardSpec.rows_of`` exactly, so either transport shards
-    the vocabulary identically."""
+    the vocabulary identically.  With ``restore`` each shard reloads its
+    latest snapshot from ``snapshot_dir`` before serving (the restarted
+    shard-process path)."""
     spec = server_mod.ShardSpec(vocab_size, n_shards)
     servers = []
     for s in range(n_shards):
@@ -603,7 +1064,11 @@ def serve_shards(family_name: str, *, vocab_size: int, n_clients: int,
             rows=spec.rows_of(s), consistency=consistency,
             project_every=project_every, host=host,
             port=0 if ports is None else ports[s],
-            barrier_timeout=barrier_timeout)
+            barrier_timeout=barrier_timeout,
+            liveness_timeout=liveness_timeout,
+            snapshot_dir=snapshot_dir, snapshot_every=snapshot_every)
+        if restore:
+            srv.restore_from(snapshot_dir)
         servers.append(srv.start())
     return servers
 
@@ -619,16 +1084,42 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--project-every", type=int, default=1)
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--barrier-timeout", type=float, default=60.0)
+    ap.add_argument("--liveness-timeout", type=float, default=15.0,
+                    help="evict a client from the round barrier this many "
+                         "seconds after its last connection died")
+    ap.add_argument("--snapshot-dir", default=None)
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="persist shard state every N finalized rounds "
+                         "(0 = only on SNAPSHOT_WRITE)")
+    ap.add_argument("--restore", action="store_true",
+                    help="reload the latest snapshot from --snapshot-dir "
+                         "before serving (shard-process restart)")
+    ap.add_argument("--ports", default=None,
+                    help="comma-separated listen ports, one per shard — a "
+                         "restarted process must rebind its published "
+                         "addresses")
+    ap.add_argument("--die-after-round", type=int, default=None,
+                    help="exit(42) once every shard reaches this round "
+                         "(deterministic kill point for failover tests)")
     ap.add_argument("--address-file", default=None,
                     help="write the bound addresses as JSON (the launcher "
                          "polls this instead of parsing stdout)")
     args = ap.parse_args(argv)
 
+    ports = None
+    if args.ports:
+        ports = tuple(int(p) for p in args.ports.split(","))
+        if len(ports) != args.n_shards:
+            ap.error(f"--ports names {len(ports)} ports for "
+                     f"{args.n_shards} shards")
     servers = serve_shards(
         args.family, vocab_size=args.vocab_size, n_clients=args.n_clients,
         n_shards=args.n_shards, consistency=args.consistency,
-        project_every=args.project_every, host=args.host,
-        barrier_timeout=args.barrier_timeout)
+        project_every=args.project_every, host=args.host, ports=ports,
+        barrier_timeout=args.barrier_timeout,
+        liveness_timeout=args.liveness_timeout,
+        snapshot_dir=args.snapshot_dir,
+        snapshot_every=args.snapshot_every, restore=args.restore)
     addrs = [f"{h}:{p}" for h, p in (s.address for s in servers)]
     if args.address_file:
         tmp = args.address_file + ".tmp"
@@ -639,6 +1130,14 @@ def main(argv: list[str] | None = None) -> int:
         print(f"READY {a}", flush=True)
     try:
         while any(not s._stop for s in servers):
+            if args.die_after_round is not None and all(
+                    s.round_reached(args.die_after_round)
+                    for s in servers):
+                # round_reached takes the store lock, so the round-N
+                # snapshot (written under the same lock) is complete
+                # before the kill fires.
+                print(f"DYING round {args.die_after_round}", flush=True)
+                os._exit(42)
             time.sleep(0.1)
     except KeyboardInterrupt:
         pass

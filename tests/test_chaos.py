@@ -1,0 +1,152 @@
+"""Chaos-proxy determinism and recovery (DESIGN.md §13).
+
+The proxy's actions are a pure function of (plan, connection ordinal,
+frame ordinal), so replaying a scripted schedule twice must corrupt
+exactly the same frames — giving byte-identical server stores and
+identical client retry counts.  And because every mutation is
+idempotent (seq-dedup on the server, bounded retry + replay on the
+client), a run through scheduled drops/truncations/delays must still
+finish with the exact no-failure sum.
+
+These are the transport-level complements of the placement-fuzz cases
+in tests/test_wire_protocol.py: the protocol tests corrupt encodings,
+the chaos tests corrupt *delivery*.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import family as fam_mod
+from repro.core.fault import FaultEvent, FaultPlan
+from repro.net.chaos import ChaosProxy, interpose
+from repro.net.client import RemoteParameterServer, stress_delta
+from repro.net.server import serve_shards
+
+TIMEOUT = 30.0
+SHAPE = (64, 4)
+
+
+def _zero_shared():
+    fam = fam_mod.get("lda")
+    n_wk = np.zeros(SHAPE, np.float32)
+    return fam.shared_from_dict({"n_wk": n_wk, "n_k": n_wk.sum(0)})
+
+
+def _want(rounds: int) -> np.ndarray:
+    want = np.zeros(SHAPE, np.float32)
+    for r in range(rounds):
+        want = want + stress_delta(r, 0, SHAPE)
+    return want
+
+
+def _run_through_chaos(plan, rounds: int = 3):
+    """One single-client stress run through a proxied shard; returns
+    (store bytes, client counters, proxy stats)."""
+    servers = serve_shards("lda", vocab_size=64, n_clients=1,
+                           barrier_timeout=TIMEOUT)
+    addrs = ["%s:%d" % s.address for s in servers]
+    proxied, proxies = interpose(addrs, plan)
+    rps = RemoteParameterServer(proxied, family="lda", n_clients=1,
+                                vocab_size=64, timeout=TIMEOUT,
+                                reconnect_limit=10, local_clients=(0,))
+    try:
+        rps.init_push(0, _zero_shared())
+        for r in range(rounds):
+            rps.pull(r)
+            rps.push(r, 0, {"n_wk": stress_delta(r, 0, SHAPE)})
+        rps.clock(min_round=rounds)
+        store = rps.pull_keys(["n_wk"])["n_wk"].tobytes()
+        counters = rps.counters()
+    finally:
+        rps.close()
+        for p in proxies:
+            p.close()
+        for s in servers:
+            s.close()
+    stats = [p.stats() for p in proxies]
+    return store, counters, stats
+
+
+# Frame ordinals (see chaos.py): HELLO=0, INIT=1, PULL(r)=2+2r,
+# PUSH(r)=3+2r.  Connection ordinal 0 is the original link; each
+# reconnect gets the next ordinal, so a drop aimed at one ordinal fires
+# exactly once.
+SCHEDULE = FaultPlan.scripted(
+    # Every connection's HELLO is delayed — latency without loss.
+    FaultEvent("delay", client=-1, start=0, stop=1, period=1,
+               magnitude=0.01),
+    # The original connection loses its round-0 push on the wire.
+    FaultEvent("conn_drop", client=0, start=3, stop=4, period=1),
+    # The first reconnect's retried push is cut mid-payload.
+    FaultEvent("frame_truncate", client=1, start=2, stop=3, period=1,
+               magnitude=0.5),
+)
+
+
+def test_chaos_run_recovers_to_exact_sum():
+    """Drops, truncations, and delays on the mutation path change
+    nothing about the final store — idempotent replay absorbs them."""
+    store, counters, stats = _run_through_chaos(SCHEDULE)
+    assert store == _want(3).tobytes()
+    # One retry per severed link, one reconnect per retry that re-dialed.
+    assert counters["retries"] >= 2
+    assert counters["reconnects"] >= 2
+    acts = stats[0]["actions"]
+    assert acts["conn_drop"] == 1 and acts["frame_truncate"] == 1
+    assert acts["delay"] == stats[0]["connections"]
+
+
+def test_chaos_schedule_replay_is_deterministic():
+    """The same scripted schedule replayed against a fresh server:
+    byte-identical store, identical retry/reconnect counts, identical
+    proxy action counts — the property that makes chaos runs debuggable."""
+    store_a, counters_a, stats_a = _run_through_chaos(SCHEDULE)
+    store_b, counters_b, stats_b = _run_through_chaos(SCHEDULE)
+    assert store_a == store_b
+    assert counters_a["retries"] == counters_b["retries"]
+    assert counters_a["reconnects"] == counters_b["reconnects"]
+    assert [s["actions"] for s in stats_a] == \
+           [s["actions"] for s in stats_b]
+    assert [s["connections"] for s in stats_a] == \
+           [s["connections"] for s in stats_b]
+
+
+def test_chaos_passthrough_is_invisible():
+    """A proxy with no scheduled events is a pure relay: exact sum, no
+    retries, no actions."""
+    store, counters, stats = _run_through_chaos(FaultPlan.none())
+    assert store == _want(3).tobytes()
+    assert counters["retries"] == 0 and counters["reconnects"] == 0
+    assert all(v == 0 for v in stats[0]["actions"].values())
+    assert stats[0]["frames_forwarded"] > 0
+
+
+@pytest.mark.parametrize("magnitude", [0.0, 0.25, 0.75])
+def test_chaos_truncation_fuzz_placement(magnitude):
+    """Placement fuzz: cutting the round-0 push at different payload
+    fractions (header-only through nearly-whole) always yields a clean
+    frame loss — never a corrupt application — and the retry completes
+    the exact sum."""
+    plan = FaultPlan.scripted(
+        FaultEvent("frame_truncate", client=0, start=3, stop=4, period=1,
+                   magnitude=magnitude))
+    store, counters, stats = _run_through_chaos(plan)
+    assert store == _want(3).tobytes()
+    assert counters["retries"] >= 1
+    assert stats[0]["actions"]["frame_truncate"] == 1
+
+
+def test_round_kind_events_stay_with_the_trainer():
+    """One FaultPlan can mix round-level kinds (the trainer's) with
+    network kinds (the proxy's): the proxy takes only its own."""
+    plan = FaultPlan.scripted(
+        FaultEvent("crash", client=0, start=0, stop=1),
+        FaultEvent("delay", client=-1, start=0, stop=1, period=1,
+                   magnitude=0.01))
+    proxy = ChaosProxy("127.0.0.1:1", plan)
+    try:
+        assert [e.kind for e in proxy.events] == ["delay"]
+    finally:
+        proxy.close()

@@ -294,7 +294,12 @@ def test_concurrent_stress_exact_sum():
             s.close()
 
 
-def test_duplicate_and_stale_push_rejected():
+def test_duplicate_push_idempotent_conflict_rejected():
+    """The seq-dedup rule (DESIGN.md §13): a byte-identical re-push is
+    the lost-ack retry — acked, applied exactly once; different content
+    claiming the same (client, round) sequence slot is refused, before
+    and after the round finalizes."""
+    from repro.net.protocol import ProtocolError
     servers = _servers("lda", n_clients=2)
     try:
         r0 = _fresh_remote(servers, n_clients=2)
@@ -304,17 +309,53 @@ def test_duplicate_and_stale_push_rejected():
         d = np.ones((64, 4), np.float32)
         r0.pull(0)
         r0.push(0, 0, {"n_wk": d})
-        from repro.net.protocol import ProtocolError
+        # Identical duplicate (even from another connection): recorded
+        # ack, no second application.
+        r1.push(0, 0, {"n_wk": d})
+        # Conflicting content for a recorded sequence slot: refused.
         with pytest.raises(ProtocolError):
-            r1.push(0, 0, {"n_wk": d})  # duplicate (round, client)
-        r1.close()
-        r1 = _fresh_remote(servers, n_clients=2)
+            r1.push(0, 0, {"n_wk": 2 * d})
         r1.push(0, 1, {"n_wk": d})      # completes round 0
         r1.clock(min_round=1)
+        # After finalization the log still answers: identical → ack,
+        # conflicting → refused.
+        r1.push(0, 1, {"n_wk": d})
         with pytest.raises(ProtocolError):
-            r1.push(0, 1, {"n_wk": d})  # round already finalized
+            r1.push(0, 1, {"n_wk": 3 * d})
+        # Exactly one application per (client, round) despite the dups.
+        final = r0.pull_keys(["n_wk"])["n_wk"]
+        np.testing.assert_array_equal(final, 2 * d)
         r1.close()
         r0.close()
+    finally:
+        for s in servers:
+            s.close()
+
+
+def test_stale_push_replay_flag_vs_unflagged():
+    """A push for a round below the finalized horizon whose log entry
+    has been pruned: a replay-flagged frame (reconnect catch-up) acks
+    ``ignored``; an unflagged one is a real protocol violation."""
+    from repro.net.protocol import MsgType, ProtocolError
+    from repro.net.server import MUTLOG_WINDOW
+    servers = _servers("lda", n_clients=1)
+    rounds = MUTLOG_WINDOW + 2
+    try:
+        with _fresh_remote(servers) as rps:
+            rps.init_push(0, _zero_shared())
+            d = np.ones((64, 4), np.float32)
+            for r in range(rounds):
+                rps.pull(r)
+                rps.push(r, 0, {"n_wk": d})
+            # (client 0, round 0) is now below the pruned horizon.
+            conn = rps._conns[0]
+            _, meta, _ = conn.request(
+                MsgType.PUSH, {"round": 0, "client": 0, "replay": True},
+                {"n_wk": d}, expect=(MsgType.OK,))
+            assert meta.get("ignored") is True
+            with pytest.raises(ProtocolError):
+                conn.request(MsgType.PUSH, {"round": 0, "client": 0},
+                             {"n_wk": d}, expect=(MsgType.OK,))
     finally:
         for s in servers:
             s.close()
@@ -427,9 +468,172 @@ def test_pull_reconnect_budget_exhausts_on_dead_server():
             s.close()
         for conn in rps._conns:
             conn.sock.close()
-        with pytest.raises(RemoteError, match="after 2 reconnects"):
+        with pytest.raises(RemoteError, match="after 2 reconnect"):
             rps.pull(0)
     finally:
         rps.close()
         for s in servers:
             s.close()
+
+
+# ---------------------------------------------------------------------------
+# Eviction, shard restart, worker restart (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def test_dead_client_evicted_from_barrier_then_rejoins():
+    """A client whose connections die stops the barrier only until the
+    liveness deadline: it is evicted, rounds finalize from the
+    survivors, and a later rejoin re-admits it after a forced-fresh
+    pull."""
+    servers = serve_shards("lda", vocab_size=64, n_clients=2,
+                           barrier_timeout=TIMEOUT, liveness_timeout=0.4)
+    d = np.ones((64, 4), np.float32)
+    try:
+        r0 = _fresh_remote(servers, n_clients=2)
+        r1 = _fresh_remote(servers, n_clients=2)
+        r0.init_push(0, _zero_shared())
+        r1.init_push(1, _zero_shared())
+        r0.pull(0)
+        r0.push(0, 0, {"n_wk": d})
+        r1.pull(0)
+        r1.push(0, 1, {"n_wk": d})          # round 0 complete
+        r1.close()                          # client 1 dies for good
+        r0.pull(1)
+        r0.push(1, 0, {"n_wk": d})          # round 1 waits on client 1...
+        r0.pull(2)                          # ...until the liveness sweep
+        st = servers[0].stats()             #    evicts it mid-wait
+        assert st["evicted"] == [1] and st["evictions"] == 1
+        # Survivor-only round applied exactly its one delta.
+        np.testing.assert_array_equal(r0.pull_keys(["n_wk"])["n_wk"], 3 * d)
+
+        # Rejoin: fresh connection, REJOIN, forced-fresh pull, and the
+        # barrier requires both clients again.
+        r1b = _fresh_remote(servers, n_clients=2)
+        r1b.rejoin(1)
+        assert servers[0].stats()["evicted"] == []
+        r1b.pull(2, None)
+        r1b.push(2, 1, {"n_wk": d})
+        r0.push(2, 0, {"n_wk": d})          # completes round 2 (both)
+        r0.clock(min_round=3)
+        np.testing.assert_array_equal(r0.pull_keys(["n_wk"])["n_wk"], 5 * d)
+        r1b.close()
+        r0.close()
+    finally:
+        for s in servers:
+            s.close()
+
+
+def test_voluntary_leave_unblocks_barrier_immediately():
+    """REJOIN action=leave drops the client from the required set with
+    no liveness wait — the elastic scale-down path."""
+    servers = serve_shards("lda", vocab_size=64, n_clients=2,
+                           barrier_timeout=TIMEOUT, liveness_timeout=60.0)
+    d = np.ones((64, 4), np.float32)
+    try:
+        r0 = _fresh_remote(servers, n_clients=2)
+        r0.init_push(0, _zero_shared())
+        r0.init_push(1, _zero_shared())
+        r0.leave(1)
+        r0.pull(0)
+        r0.push(0, 0, {"n_wk": d})          # finalizes without client 1
+        r0.clock(min_round=1)
+        np.testing.assert_array_equal(r0.pull_keys(["n_wk"])["n_wk"], d)
+    finally:
+        r0.close()
+        for s in servers:
+            s.close()
+
+
+def test_shard_restart_from_snapshot_resumes_midrun(tmp_path):
+    """Kill the shard servers mid-run and restart them on the same ports
+    from their own snapshots: the client reconnects, replays its buffered
+    mutations (all dedup against the restored mutation log), and the run
+    finishes with the exact no-failure sum."""
+    shape = (64, 4)
+    kw = dict(vocab_size=64, n_clients=1, n_shards=2,
+              barrier_timeout=TIMEOUT, snapshot_dir=str(tmp_path),
+              snapshot_every=1)
+    servers = serve_shards("lda", **kw)
+    ports = [s.address[1] for s in servers]
+    rps = RemoteParameterServer(_addrs(servers), family="lda", n_clients=1,
+                                vocab_size=64, timeout=TIMEOUT,
+                                reconnect_limit=10)
+    try:
+        rps.init_push(0, _zero_shared())
+        for r in range(3):
+            rps.pull(r)
+            rps.push(r, 0, {"n_wk": stress_delta(r, 0, shape)})
+        for s in servers:                   # hard kill, no shutdown
+            s.close()
+        servers = serve_shards("lda", ports=ports, restore=True, **kw)
+        assert all(s.stats()["server_round"] == 3 for s in servers)
+        for r in range(3, 6):
+            rps.pull(r)
+            rps.push(r, 0, {"n_wk": stress_delta(r, 0, shape)})
+        rps.clock(min_round=6)
+        want = np.zeros(shape, np.float32)
+        for r in range(6):
+            want = want + stress_delta(r, 0, shape)
+        np.testing.assert_array_equal(rps.pull_keys(["n_wk"])["n_wk"], want)
+        assert rps.counters()["reconnects"] >= 2  # one per shard
+    finally:
+        rps.close()
+        for s in servers:
+            s.close()
+
+
+def test_snapshot_write_restore_rpcs(tmp_path):
+    """The SNAPSHOT_WRITE / SNAPSHOT_RESTORE frames: persist on demand,
+    mutate, reload — the store rolls back to the persisted round."""
+    servers = _servers("lda", n_clients=1)
+    d = np.ones((64, 4), np.float32)
+    try:
+        with _fresh_remote(servers) as rps:
+            rps.init_push(0, _zero_shared())
+            rps.pull(0)
+            rps.push(0, 0, {"n_wk": d})
+            acks = rps.snapshot_write(str(tmp_path))
+            assert [a["step"] for a in acks] == [1]
+            rps.pull(1)
+            rps.push(1, 0, {"n_wk": d})
+            np.testing.assert_array_equal(
+                rps.pull_keys(["n_wk"])["n_wk"], 2 * d)
+            assert rps.snapshot_restore(str(tmp_path)) == [1]
+            np.testing.assert_array_equal(
+                rps.pull_keys(["n_wk"])["n_wk"], d)
+    finally:
+        for s in servers:
+            s.close()
+
+
+def test_trainer_tcp_fault_plan_ghost_parity():
+    """A scripted crash fault over tcp (ghost pushes riding the wire)
+    matches the identical in-process faulted run bit for bit."""
+    from repro.core.fault import FaultPlan
+    tokens, mask, _ = _corpus()
+    cfg = make_family_cfg("lda", n_topics=4, vocab_size=64)
+    plan = FaultPlan.crash(1, 1, 3)
+    rounds = 5
+
+    def _faulted(transport_kw):
+        t = Trainer(cfg, tokens, mask, key=jax.random.PRNGKey(0),
+                    config=TrainerConfig(n_clients=2, tau=1,
+                                         fault_plan=plan, **transport_kw))
+        for _ in range(rounds):
+            t.step()
+        out = _stats("lda", t)
+        rejoins = t.rejoins
+        t.close()
+        return out, rejoins
+
+    want, ref_rejoins = _faulted({})
+    servers = _servers("lda", n_clients=2)
+    try:
+        got, tcp_rejoins = _faulted(dict(transport="tcp",
+                                         server_addrs=_addrs(servers)))
+    finally:
+        for s in servers:
+            s.close()
+    assert ref_rejoins == tcp_rejoins == 1
+    for n in want:
+        np.testing.assert_array_equal(want[n], got[n], err_msg=n)

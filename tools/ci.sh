@@ -73,10 +73,20 @@ for name, res in pols.items():
     kr = res["kill_rejoin"]
     assert "recovery_rounds" in kr and "degradation" in kr, (name, kr)
     assert kr["degradation"] <= 0.05, (name, kr)
+# The tcp section (DESIGN.md §13) is the process-level kill-and-rejoin:
+# shard restarted from its snapshot + worker relaunched with --restore,
+# through chaos proxies.  BSP must come back bit-exact.
+tcp = art["tcp"]
+assert tcp["bsp_bitexact"] is True, tcp
+assert tcp["degradation"] <= 0.05, tcp
+assert tcp["restarts"] == {"server": 1, "client": 1}, tcp
+assert tcp["conn_drops"] >= 1, tcp
 print("failover artifact OK:", ", ".join(
     f"{n}: +{pols[n]['kill_rejoin']['degradation']*100:.1f}% ppl, "
     f"{pols[n]['kill_rejoin']['recovery_rounds']} rounds to recover"
-    for n in sorted(pols)))
+    for n in sorted(pols))
+    + f"; tcp: bit-exact, {tcp['recovery_rounds']} rounds re-executed, "
+    f"{tcp['conn_drops']} wire drops survived")
 EOF
 python - <<'EOF'
 import json
@@ -132,6 +142,17 @@ echo "=== loopback e2e smoke: 1 shard server + 2 client processes ==="
 # across the socket).  timeout(1) guards against a hung server — a
 # protocol bug must fail CI, not wedge it.
 timeout 540 python -m repro.launch.loopback --smoke
+
+echo "=== tcp kill-and-rejoin smoke: chaos proxy + shard restart + worker rejoin ==="
+# The DESIGN.md §13 acceptance run as a process-level smoke: a BSP
+# loopback run through chaos proxies (connection drop on the push path)
+# in which one shard-server process is killed at its round barrier and
+# restarted from its snapshot (--restore --ports, same addresses) and
+# one worker process is killed mid-run and relaunched with --restore.
+# The smoke asserts exactly one restart of each, that the scheduled
+# drop fired, and that the final checksums are bit-exact with the
+# undisturbed in-process run.  timeout(1) again guards against hangs.
+timeout 540 python -m repro.launch.loopback --failover-smoke
 
 echo "=== artifacts ==="
 ls -l BENCH_*.json bench_results.csv
