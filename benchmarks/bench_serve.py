@@ -1,0 +1,218 @@
+"""Serving benchmark (DESIGN.md §14): fold-in latency/throughput + quality.
+
+Trains a small LDA model in-process, freezes it into an
+:class:`repro.serve.InferenceSnapshot`, then measures the online
+inference service end to end:
+
+* **latency / throughput** — a real :class:`repro.serve.server.
+  InferenceServer` on loopback under ≥ 2 concurrent client connections
+  (each its own thread + socket, documents batched into shared fused
+  sweeps by the server's batcher); reports client-observed p50/p99
+  request latency, aggregate docs/s, and the server's load-shed count,
+* **parity** — a sample of the concurrently-served results is re-derived
+  through :func:`reference_fold_in` (the training ``family.sweep`` path
+  with pushes dropped) and must match bit-for-bit — the §14 determinism
+  contract re-verified on every bench run,
+* **quality gate** — held-out documents folded in through the engine
+  must score a perplexity within ``QUALITY_TOL`` of the training-time
+  evaluator (``family.perplexity``) on the same documents.  A fold-in
+  chain that silently diverged from the model would fail here even if
+  it stayed deterministic.
+
+Artifact: ``BENCH_serve.json`` — gated for completeness by tools/ci.sh.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.core import family as fam_mod
+from repro.data.synthetic import CorpusConfig, make_topic_corpus
+from repro.engine import Trainer, TrainerConfig
+from repro.serve import (FoldInEngine, InferRequest, ServeConfig,
+                         fold_in_perplexity, from_trainer)
+from repro.serve.client import InferenceClient, requests_for
+from repro.serve.engine import InferResult, reference_fold_in, \
+    result_checksum
+from repro.serve.server import InferenceServer
+
+from benchmarks import common
+
+# Fold-in perplexity may not exceed the training-time evaluator's by more
+# than this factor on the same held-out documents (it is usually *lower*:
+# the harvested theta is a fitted point estimate, family.perplexity
+# averages over its own short internal chains).
+QUALITY_TOL = 1.25
+PARITY_DOCS = 3
+
+
+def _serve_concurrent(addr: str, *, n_clients: int, n_docs: int,
+                      vocab_size: int, max_len: int
+                      ) -> tuple[dict[int, InferResult], list[float], float]:
+    """Drive ``n_clients`` concurrent client connections; returns
+    (results by uid, per-request client latencies ms, wall seconds)."""
+    results: dict[int, InferResult] = {}
+    latencies: list[float] = []
+    errors: list[BaseException] = []
+    lock = threading.Lock()
+
+    def client_main(cid: int) -> None:
+        try:
+            reqs = requests_for(cid, vocab_size=vocab_size, n_docs=n_docs,
+                                max_len=max_len, corpus_seed=7,
+                                seed_base=1000)
+            with InferenceClient(addr, timeout=300.0) as cli:
+                for req in reqs:
+                    t0 = time.perf_counter()
+                    res = cli.infer(req.uid, req.tokens, seed=req.seed)
+                    dt = (time.perf_counter() - t0) * 1e3
+                    with lock:
+                        results[res.uid] = res
+                        latencies.append(dt)
+        except BaseException as e:  # surfaced after join
+            with lock:
+                errors.append(e)
+
+    threads = [threading.Thread(target=client_main, args=(c,),
+                                name=f"bench-serve-client-{c}")
+               for c in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    return results, latencies, wall
+
+
+def run(quick: bool = True) -> None:
+    if quick:
+        vocab, n_topics, n_train, doc_len = 400, 8, 64, 48
+        rounds, n_clients, docs_per_client = 3, 2, 5
+        n_sweeps, max_slots, held_out = 4, 4, 12
+    else:
+        vocab, n_topics, n_train, doc_len = 1200, 16, 256, 96
+        rounds, n_clients, docs_per_client = 6, 3, 12
+        n_sweeps, max_slots, held_out = 8, 8, 32
+
+    # --- train + freeze -------------------------------------------------
+    tokens, mask, _ = make_topic_corpus(CorpusConfig(
+        n_topics=n_topics, vocab_size=vocab, n_docs=n_train + held_out,
+        doc_len=doc_len, seed=0))
+    fam = fam_mod.get("lda")
+    cfg = fam.config_cls(n_topics=n_topics, vocab_size=vocab)
+    trainer = Trainer(cfg, tokens[:n_train], mask[:n_train],
+                      config=TrainerConfig(n_clients=1),
+                      key=jax.random.PRNGKey(0))
+    with common.Timer() as t_train:
+        trainer.run(rounds, eval_every=rounds + 1)
+    snap = from_trainer(trainer)
+    ho_tokens = np.asarray(tokens[n_train:])
+    ho_mask = np.asarray(mask[n_train:], bool)
+
+    scfg = ServeConfig(max_slots=max_slots, max_len=doc_len,
+                       n_sweeps=n_sweeps)
+
+    # --- concurrent service on loopback ---------------------------------
+    server = InferenceServer(snap, scfg, max_queue=2 * max_slots,
+                             max_batch_delay=0.005).start()
+    addr = "%s:%d" % server.address
+    try:
+        results, lat_ms, wall = _serve_concurrent(
+            addr, n_clients=n_clients, n_docs=docs_per_client,
+            vocab_size=vocab, max_len=doc_len)
+        sstats = server.stats()
+    finally:
+        server.close()
+    total_docs = n_clients * docs_per_client
+    assert len(results) == total_docs, \
+        f"served {len(results)} of {total_docs} docs"
+    lat = sorted(lat_ms)
+
+    def pct(p: float) -> float:
+        return lat[min(len(lat) - 1, int(round(p * (len(lat) - 1))))]
+
+    docs_per_s = total_docs / wall
+
+    # --- parity: a sample of the served results vs the training path ----
+    sample = requests_for(0, vocab_size=vocab, n_docs=docs_per_client,
+                          max_len=doc_len, corpus_seed=7,
+                          seed_base=1000)[:PARITY_DOCS]
+    bit_exact = True
+    for req in sample:
+        _, theta, z = reference_fold_in(snap, req.tokens, req.seed,
+                                        n_sweeps=n_sweeps,
+                                        max_len=doc_len)
+        ref = InferResult(uid=req.uid, theta=theta, assignments=z,
+                          n_sweeps=n_sweeps)
+        bit_exact &= (result_checksum(ref)
+                      == result_checksum(results[req.uid]))
+
+    # --- quality gate: fold-in perplexity vs training-time eval ---------
+    ho_lens = ho_mask.sum(axis=1).astype(int)
+    ho_reqs = [InferRequest(uid=i, tokens=ho_tokens[i, :ho_lens[i]],
+                            seed=5000 + i)
+               for i in range(ho_tokens.shape[0])]
+    eng = FoldInEngine(snap, scfg)
+    ho_results = eng.run(ho_reqs)
+    thetas = np.stack([ho_results[i].theta
+                       for i in range(len(ho_reqs))])
+    fold_ppl = fold_in_perplexity(snap, thetas, ho_tokens, ho_mask)
+    eval_ppl = float(fam.perplexity(cfg, snap.shared, ho_tokens, ho_mask,
+                                    jax.random.PRNGKey(123)))
+    ratio = fold_ppl / eval_ppl
+    within = bool(ratio <= QUALITY_TOL)
+
+    artifact = {
+        "quick": quick,
+        "vocab": vocab, "n_topics": n_topics, "doc_len": doc_len,
+        "train_docs": n_train, "train_rounds": rounds,
+        "train_s": t_train.elapsed,
+        "serve": {
+            "n_clients": n_clients,
+            "docs": total_docs,
+            "n_sweeps": n_sweeps,
+            "max_slots": max_slots,
+            "docs_per_s": docs_per_s,
+            "latency_ms": {"p50": pct(0.50), "p99": pct(0.99)},
+            "server_latency_ms": {"p50": sstats["latency_p50_ms"],
+                                  "p99": sstats["latency_p99_ms"]},
+            "shed": sstats["shed"],
+            "sweeps_run": sstats["sweeps_run"],
+        },
+        "parity": {"bit_exact": bool(bit_exact),
+                   "docs_checked": len(sample)},
+        "quality": {
+            "held_out_docs": int(ho_tokens.shape[0]),
+            "fold_in_ppl": float(fold_ppl),
+            "train_eval_ppl": eval_ppl,
+            "ratio": float(ratio),
+            "tolerance": QUALITY_TOL,
+            "within_tolerance": within,
+        },
+    }
+    common.emit("serve", n_clients=n_clients, docs=total_docs,
+                docs_per_s=docs_per_s, p50_ms=pct(0.50),
+                p99_ms=pct(0.99), shed=sstats["shed"],
+                fold_in_ppl=float(fold_ppl), train_eval_ppl=eval_ppl,
+                ppl_ratio=float(ratio))
+    common.write_artifact("serve", artifact)
+
+    if not bit_exact:
+        raise AssertionError(
+            "concurrently-served fold-in diverged from the "
+            "reference_fold_in training path")
+    if not within:
+        raise AssertionError(
+            f"fold-in perplexity {fold_ppl:.2f} exceeds training-time "
+            f"eval {eval_ppl:.2f} by {ratio:.3f}x (> {QUALITY_TOL}x)")
+
+
+if __name__ == "__main__":
+    run(quick=True)

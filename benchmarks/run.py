@@ -22,6 +22,10 @@ Mapping to the paper:
   bench_scale       §6.3   (V, K) scale ladder — K-tiled sweep tokens/s,
                            incremental alias-build ms/row, dense-vs-sparse
                            bytes/round (reaches V=65536, K=256 in quick)
+  bench_serve       §14    online fold-in serving — p50/p99 latency +
+                           docs/s under concurrent clients, load-shed
+                           count, reference-path parity bit, and the
+                           fold-in-vs-training perplexity quality gate
 
 Besides the CSV, benchmark modules write machine-readable
 ``BENCH_<name>.json`` artifacts (``common.write_artifact``) so the perf
@@ -40,7 +44,7 @@ from benchmarks import common
 
 MODULES = ("lda", "pdp", "hdp", "projection", "scaling", "throughput",
            "filters", "consistency", "failover", "stale_sync", "roofline",
-           "wire", "scale")
+           "wire", "scale", "serve")
 
 
 def main(argv=None) -> int:

@@ -26,6 +26,8 @@ from repro.core.server import (Async, BSP, Consistency, ParameterServer,
 from repro.engine import RunResult, Trainer, TrainerConfig
 from repro.net import RemoteParameterServer, serve_shards
 from repro.net.protocol import ProtocolError
+from repro.serve import (FoldInEngine, InferenceSnapshot, ServeConfig,
+                         freeze_snapshot)
 
 __all__ = [
     "Async",
@@ -34,16 +36,20 @@ __all__ = [
     "FaultEvent",
     "FaultPlan",
     "FilterSpec",
+    "FoldInEngine",
+    "InferenceSnapshot",
     "ParameterServer",
     "ProtocolError",
     "RemoteParameterServer",
     "RunResult",
     "SSP",
+    "ServeConfig",
     "ServerState",
     "ShardSpec",
     "Trainer",
     "TrainerConfig",
     "family",
+    "freeze_snapshot",
     "get_family",
     "make_consistency",
     "serve_shards",

@@ -275,9 +275,14 @@ class ModelFamily:
 
     def sorted_chunk(self, cfg, shared, tables, stale: Array,
                      lay: segment.SortedLayout, e_sorted: Array,
-                     ndk_rows: Array, key: Array, tile_v: int, tile_b: int
-                     ) -> Array:
-        """Run the family's fused kernel over one sorted chunk."""
+                     ndk_rows: Array, key: Array, tile_v: int, tile_b: int,
+                     uniforms: tuple[Array, ...] | None = None) -> Array:
+        """Run the family's fused kernel over one sorted chunk.
+
+        ``uniforms`` (optional) overrides the chain's internal uniform
+        draw with caller-supplied ``(slot, coin, u_mix, u_sparse, u_acc)``
+        streams in sorted-stream order — see ``ops.mhw_sweep_sorted``.
+        """
         raise NotImplementedError
 
     def finalize_sorted(self, cfg, local, e_grid: Array, n_dk: Array,
@@ -288,8 +293,8 @@ class ModelFamily:
 
     def sweep_sorted(self, cfg, local, shared, tables, stale: Array,
                      tokens: Array, mask: Array, key: Array,
-                     layouts: tuple[segment.SortedLayout, ...] | None
-                     ) -> tuple[Any, dict[str, Array]]:
+                     layouts: tuple[segment.SortedLayout, ...] | None,
+                     chunk_uniforms=None) -> tuple[Any, dict[str, Array]]:
         """Token-sorted MHW sweep: fused tile-skipping chains per shard.
 
         The sweep runs as ``cfg.sorted_chunks`` sequential position-chunks.
@@ -300,6 +305,12 @@ class ModelFamily:
         per sweep (the scan layout's Gauss-Seidel recurrence, coarsened).
         The shared statistics stay the sweep-start snapshot throughout,
         exactly as in the scan layout.
+
+        ``chunk_uniforms`` (optional) is a callback ``(c, lay, tile_b) ->
+        uniforms | None`` giving the per-chunk uniform streams for
+        :meth:`sorted_chunk`; the serving engine supplies per-request
+        streams here so each document's chain is independent of its
+        batch-mates (DESIGN.md §14).
         """
         d, l = tokens.shape
         tile_v = self.sorted_tile_v(cfg)
@@ -343,9 +354,11 @@ class ModelFamily:
             e_s = segment.sort_values(lay, e_flat, fill=0)
             ndk = n_dk[lay.docs]   # raw rows; the kernel applies the ^{-di}
 
+            uniforms = (chunk_uniforms(c, lay, tile_b)
+                        if chunk_uniforms is not None else None)
             e_new_s = self.sorted_chunk(cfg, shared, tables, stale, lay,
                                         e_s, ndk, jax.random.fold_in(key, c),
-                                        tile_v, tile_b)
+                                        tile_v, tile_b, uniforms=uniforms)
 
             e_new_flat = segment.unsort_values(lay, e_new_s, e_flat)
             e_new_c = jnp.where(mask_c, e_new_flat.reshape(d, e - s), e_c)
@@ -392,13 +405,14 @@ class _LMFamilyBase(ModelFamily):
         return local.z
 
     def sorted_chunk(self, cfg, shared, tables, stale, lay, e_sorted,
-                     ndk_rows, key, tile_v, tile_b) -> Array:
+                     ndk_rows, key, tile_v, tile_b, uniforms=None) -> Array:
         return ops.mhw_sweep_sorted(
             tables, stale, shared.n_wk, shared.n_k,
             self.sparse_prior(cfg, shared), lay.rows, e_sorted, ndk_rows,
             lay.vstart, lay.vcount, key, mh_steps=cfg.mh_steps,
             beta=cfg.beta, beta_bar=cfg.beta * cfg.vocab_size,
-            tile_v=tile_v, tile_b=tile_b, tile_k=self.sorted_tile_k(cfg))
+            tile_v=tile_v, tile_b=tile_b, tile_k=self.sorted_tile_k(cfg),
+            uniforms=uniforms)
 
     def _delta_wk(self, cfg, tokens, mask, z_old, z_new) -> Array:
         w_flat = tokens.reshape(-1)
@@ -598,7 +612,7 @@ class PDPFamily(ModelFamily):
         return e % cfg.n_topics
 
     def sorted_chunk(self, cfg, shared, tables, stale, lay, e_sorted,
-                     ndk_rows, key, tile_v, tile_b) -> Array:
+                     ndk_rows, key, tile_v, tile_b, uniforms=None) -> Array:
         stirl = stirling.as_jax(cfg.stirling_n_max, cfg.discount)
         return ops.pdp_sweep_sorted(
             tables, stale, shared.m_wk, shared.s_wk, shared.m_k, shared.s_k,
@@ -607,7 +621,8 @@ class PDPFamily(ModelFamily):
             lay.vcount, key, mh_steps=cfg.mh_steps,
             concentration=cfg.concentration, discount=cfg.discount,
             gamma=cfg.gamma, gamma_bar=cfg.gamma * cfg.vocab_size,
-            tile_v=tile_v, tile_b=tile_b, tile_k=self.sorted_tile_k(cfg))
+            tile_v=tile_v, tile_b=tile_b, tile_k=self.sorted_tile_k(cfg),
+            uniforms=uniforms)
 
     def finalize_sorted(self, cfg, local, e_grid, n_dk, tokens, mask):
         z_new = e_grid % cfg.n_topics

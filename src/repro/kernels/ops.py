@@ -117,13 +117,23 @@ def mhw_sweep_sorted(tables: AliasTable, stale: jax.Array, n_wk: jax.Array,
                      tile_v: int = _sample.DEFAULT_TILE_V,
                      tile_b: int = _sample.DEFAULT_TILE_B,
                      tile_k: int | None = None,
+                     uniforms: tuple[jax.Array, ...] | None = None,
                      interpret: bool | None = None) -> jax.Array:
     """Fused sorted-layout MHW chain for the lm families (LDA: prior = α·1,
     HDP: prior = b1·θ0): draws the per-step uniforms and runs
-    ``kernels.mhw_fused.mhw_sweep_fused`` (see that module's docstring)."""
+    ``kernels.mhw_fused.mhw_sweep_fused`` (see that module's docstring).
+
+    ``uniforms`` overrides the ``_step_uniforms`` draw with caller-supplied
+    ``(slot, coin, u_mix, u_sparse, u_acc)`` streams, each ``(mh_steps, b)``
+    in sorted-stream order; ``key`` is then unused.  The serving engine uses
+    this to keep each document's chain a pure function of its own request
+    seed regardless of which slots it shares a batch with.
+    """
     k = tables.prob.shape[-1]
     b = rows.shape[0]
-    slot, coin, u_mix, u_sparse, u_acc = _step_uniforms(key, k, mh_steps, b)
+    if uniforms is None:
+        uniforms = _step_uniforms(key, k, mh_steps, b)
+    slot, coin, u_mix, u_sparse, u_acc = uniforms
     return _fused.mhw_sweep_fused(
         tables.prob, tables.alias, tables.mass, stale, n_wk, n_k, prior,
         rows, z0, ndk, slot, coin, u_mix, u_sparse, u_acc, vstart, vcount,
@@ -142,14 +152,17 @@ def pdp_sweep_sorted(tables: AliasTable, stale: jax.Array, m_wk: jax.Array,
                      tile_v: int = _sample.DEFAULT_TILE_V,
                      tile_b: int = _sample.DEFAULT_TILE_B,
                      tile_k: int | None = None,
+                     uniforms: tuple[jax.Array, ...] | None = None,
                      interpret: bool | None = None) -> jax.Array:
     """Fused sorted-layout MHW chain for PDP's joint 2K outcome space:
     draws the per-step uniforms (slot over [0, 2K)) and runs
-    ``kernels.mhw_fused.pdp_sweep_fused``."""
+    ``kernels.mhw_fused.pdp_sweep_fused``.  ``uniforms`` overrides the
+    draw exactly as in :func:`mhw_sweep_sorted`."""
     e_out = tables.prob.shape[-1]
     b = rows.shape[0]
-    slot, coin, u_mix, u_sparse, u_acc = _step_uniforms(key, e_out,
-                                                        mh_steps, b)
+    if uniforms is None:
+        uniforms = _step_uniforms(key, e_out, mh_steps, b)
+    slot, coin, u_mix, u_sparse, u_acc = uniforms
     return _fused.pdp_sweep_fused(
         tables.prob, tables.alias, tables.mass, stale, m_wk, s_wk, m_k, s_k,
         stirl, prior, rows, e0, ndk, slot, coin, u_mix, u_sparse, u_acc,

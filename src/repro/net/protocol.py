@@ -123,6 +123,14 @@ class MsgType(enum.IntEnum):
     #                        snapshot (meta: directory, optional step) →
     #                        OK with the restored round; also taken by a
     #                        restarted shard process before serving.
+    INFER = 20         # client → inference server: fold one document in —
+    #                    meta {"uid": int, "seed": int}, arrays
+    #                    {"tokens": (L,) int32}; answered by INFER_RESULT
+    #                    (or ERROR: bad doc / queue overflow load-shed).
+    #                    DESIGN.md §14.
+    INFER_RESULT = 21  # inference server → client: meta {"uid",
+    #                    "n_sweeps"}, arrays {"theta": (K,) float32,
+    #                    "assignments": (doc_len,) int32}.
 
 
 def _require(cond: bool, msg: str) -> None:

@@ -1,0 +1,28 @@
+"""Online topic-inference serving (DESIGN.md §14): snapshot-frozen
+fold-in engine, INFER service, and client."""
+
+from repro.serve.engine import (FoldInEngine, InferRequest, InferResult,
+                                ServeConfig, fold_in_perplexity,
+                                reference_fold_in, result_checksum)
+from repro.serve.snapshot import (InferenceSnapshot, freeze,
+                                  from_checkpoint, from_servers,
+                                  from_trainer)
+
+# The unambiguous name for top-level re-export (repro.freeze_snapshot).
+freeze_snapshot = freeze
+
+__all__ = [
+    "freeze_snapshot",
+    "FoldInEngine",
+    "InferRequest",
+    "InferResult",
+    "InferenceSnapshot",
+    "ServeConfig",
+    "fold_in_perplexity",
+    "freeze",
+    "from_checkpoint",
+    "from_servers",
+    "from_trainer",
+    "reference_fold_in",
+    "result_checksum",
+]

@@ -1,185 +1,360 @@
-"""Batched serving engine: slot-based continuous batching over the
-prefill / decode_step pair from ``repro.models.model``.
+"""Fold-in serving engine: continuous batching of documents (DESIGN.md §14).
 
-The engine owns a fixed pool of ``batch`` decode slots sharing one
-preallocated KV cache (the decode_32k / long_500k dry-run shapes are this
-engine's two production configurations).  Requests are admitted into free
-slots; each engine step runs ONE fused decode_step for the whole pool, so
-throughput is batch-amortized exactly as in the paper's multi-client
-sampler — many logical streams, one vectorized sweep.
+Online topic inference folds an unseen document into a *frozen* trained
+model: the document gets its own assignment chain ``z`` and doc-topic
+counts ``n_dk``, the shared statistics stay read-only, and after a fixed
+number of local-only MHW sweeps the document's topic proportions are
+harvested from ``n_dk``.  No pushes ⇒ no deltas, no barrier, no
+projection conflicts — serving is embarrassingly parallel across
+documents and across replicas of the snapshot.
 
-Slot lifecycle:
-  admit()   — prefill the prompt (per-request), scatter its KV into the
-              pool cache at the slot index, mark the slot live.
-  step()    — one decode_step for all live slots; dead slots decode
-              garbage that is masked out (the SPMD-friendly analogue of
-              dynamic batching — no recompilation when occupancy changes).
-  harvest() — collect finished sequences (EOS or max_tokens).
+The engine batches live documents into a slot grid ``(max_slots,
+max_len)`` and runs ONE fused token-sorted sweep (the exact
+``ModelFamily.sweep_sorted`` pipeline training uses — ``mhw.mix_chain``
+semantics, tile-skipping sorted kernels) over every live slot per
+:meth:`FoldInEngine.step`.  Slots are continuous: a document can be
+admitted while its batch-mates are mid-chain, and harvested as soon as
+its own chain has mixed ``n_sweeps`` sweeps.
+
+**Determinism contract** (the serving analogue of the sorted-vs-scan
+parity contract): a document's chain is a pure function of (snapshot,
+tokens, request seed) — independent of which slots it happens to share
+batches with.  The fused kernels make this possible because every
+per-token MH step consumes explicit uniform streams in sorted-stream
+order (``ops._step_uniforms``); the engine draws each slot's streams
+under the *single-document* layout geometry with the slot's own
+``fold_in(fold_in(PRNGKey(seed), sweep), chunk)`` key and permutes them
+into the batched sorted order.  The result is bit-identical to
+:func:`reference_fold_in` — the Trainer path (``family.sweep`` with
+``layout="sorted"``) run on a one-document shard with its pushes
+dropped — which is exactly what tests/test_serve_engine.py asserts per
+family.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable
+import dataclasses
+import hashlib
+from typing import Any, Iterable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
-from repro.models import model as model_lib
+from repro.data import segment
+from repro.kernels import ops
+from repro.serve.snapshot import InferenceSnapshot
 
 Array = jax.Array
 
 
-@dataclass
-class Request:
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Engine-side serving knobs (the service layer adds queueing on top).
+
+    ``n_sweeps`` is the fold-in chain length: how many local-only sweeps
+    a document mixes before harvest.  Fold-in converges fast — the
+    training-time perplexity evaluators use 10 — so the default matches
+    the eval convention.
+    """
+
+    max_slots: int = 8
+    max_len: int = 256
+    n_sweeps: int = 10
+
+
+@dataclasses.dataclass(frozen=True)
+class InferRequest:
+    """One document to fold in.  ``seed`` fixes the request's chain: the
+    same (snapshot, tokens, seed) triple always yields the same result,
+    no matter how the request is batched or which replica serves it."""
+
     uid: int
-    prompt: np.ndarray            # (S,) int32
-    max_new_tokens: int = 32
-    # filled by the engine:
-    output: list[int] = field(default_factory=list)
-    done: bool = False
+    tokens: Sequence[int]
+    seed: int = 0
 
 
-@dataclass
-class EngineConfig:
-    batch: int = 8                # decode slot count
-    max_len: int = 512            # KV capacity per slot
-    eos_id: int = -1              # -1: never stop on a token
-    greedy: bool = True
-    temperature: float = 1.0
+@dataclasses.dataclass(frozen=True)
+class InferResult:
+    uid: int
+    theta: np.ndarray        # (K,) topic proportions
+    assignments: np.ndarray  # (doc_len,) final topic per token
+    n_sweeps: int
 
 
-class Engine:
-    """Single-host engine; the distributed version shards the same cache
-    pytree with ``repro.train.sharding.cache_specs`` (see launch/serve.py)."""
+@dataclasses.dataclass
+class _Slot:
+    uid: int
+    length: int
+    key: Array               # PRNGKey(seed) — the request's chain root
+    age: int                 # completed sweeps
+    # Per-chunk single-document geometry (order, padded width) — the
+    # layout reference_fold_in's sweep derives for a (1, L) shard, under
+    # which this slot's uniform streams are drawn.
+    orders: tuple[np.ndarray, ...]
+    widths: tuple[int, ...]
 
-    def __init__(self, cfg: ModelConfig, params: Any, ecfg: EngineConfig,
-                 key: Array | None = None):
-        self.cfg = cfg
-        self.params = params
-        self.ecfg = ecfg
-        self.key = key if key is not None else jax.random.PRNGKey(0)
-        self.cache = model_lib.init_cache(cfg, ecfg.batch, ecfg.max_len)
-        # per-slot bookkeeping (host side)
-        self.slot_req: list[Request | None] = [None] * ecfg.batch
-        self.slot_pos = np.zeros(ecfg.batch, np.int32)   # tokens generated
-        self.last_tok = np.zeros(ecfg.batch, np.int32)
-        self._decode = jax.jit(
-            lambda params, cache, toks: model_lib.decode_step(
-                cfg, params, cache, toks))
-        self._prefill = jax.jit(
-            lambda params, batch: model_lib.prefill(cfg, params, batch,
-                                                    ecfg.max_len))
 
-    # ------------------------------------------------------------------
-    def free_slots(self) -> list[int]:
-        return [i for i, r in enumerate(self.slot_req) if r is None]
+def _theta(prior: np.ndarray, n_dk_row: np.ndarray, length: int
+           ) -> np.ndarray:
+    """Posterior-mean topic proportions from a folded-in doc's counts."""
+    return (n_dk_row + prior) / (float(length) + float(prior.sum()))
 
+
+def result_checksum(res: InferResult) -> str:
+    """Order-independent digest of one result — what the loopback smoke
+    compares across client processes and the in-process reference."""
+    h = hashlib.sha256()
+    h.update(np.int64(res.uid).tobytes())
+    h.update(np.ascontiguousarray(res.assignments, np.int32).tobytes())
+    h.update(np.ascontiguousarray(res.theta, np.float32).tobytes())
+    return h.hexdigest()
+
+
+class FoldInEngine:
+    """Slot-based continuous batching of fold-in chains over one frozen
+    :class:`~repro.serve.snapshot.InferenceSnapshot`."""
+
+    def __init__(self, snap: InferenceSnapshot,
+                 scfg: ServeConfig | None = None):
+        self.snap = snap
+        self.scfg = scfg or ServeConfig()
+        self.fam = snap.family
+        self.cfg = snap.cfg
+        s, l = self.scfg.max_slots, self.scfg.max_len
+        self._tokens = jnp.zeros((s, l), jnp.int32)
+        self._mask = jnp.zeros((s, l), bool)
+        # Slot-grid local state; rows are rewritten wholesale at admit, so
+        # the init values never reach a result.
+        self._local, _ = self.fam.init_state(
+            self.cfg, self._tokens, self._mask, jax.random.PRNGKey(0))
+        self._slots: list[_Slot | None] = [None] * s
+        self._layouts = None      # batched chunk layouts; rebuilt on change
+        self._prior = np.asarray(snap.topic_prior(), np.float32)
+        n_chunks = max(1, min(self.cfg.sorted_chunks, l))
+        self._bounds = segment.chunk_bounds(l, n_chunks)
+        # Counters for the benchmark/service layer.
+        self.sweeps_run = 0
+        self.docs_admitted = 0
+        self.docs_harvested = 0
+
+    # ------------------------------------------------------------ occupancy
     @property
     def live(self) -> int:
-        return sum(r is not None for r in self.slot_req)
+        return sum(s is not None for s in self._slots)
 
-    def _scatter_cache(self, slot: int, req_cache: Any) -> None:
-        """Copy a single-request prefill cache into slot ``slot`` of the
-        pool cache.  Batch is dim 1 of every (L, B, ...) leaf."""
+    def free_slots(self) -> int:
+        return sum(s is None for s in self._slots)
 
-        def scatter(pool: Array, one: Array) -> Array:
-            if pool.ndim == 0 or pool is one:
-                return pool
-            return pool.at[:, slot:slot + 1].set(one.astype(pool.dtype))
+    # --------------------------------------------------------------- admit
+    def admit(self, req: InferRequest) -> bool:
+        """Pack a request into a free slot; False when the grid is full.
 
-        pool_layers = jax.tree.map(scatter, self.cache["layers"],
-                                   req_cache["layers"])
-        self.cache = dict(self.cache)
-        self.cache["layers"] = pool_layers
-        if "shared_attn" in self.cache:
-            self.cache["shared_attn"] = jax.tree.map(
-                scatter, self.cache["shared_attn"], req_cache["shared_attn"])
-        if "cross" in self.cache:
-            self.cache["cross"] = jax.tree.map(
-                scatter, self.cache["cross"], req_cache["cross"])
-
-    def admit(self, req: Request, extra_inputs: dict[str, Array] | None = None
-              ) -> bool:
-        """Prefill ``req`` into a free slot.  Returns False when full.
-
-        NOTE: the pool decodes all slots at one shared position counter, so
-        this engine pads/aligns prompts to a common length: the admitted
-        prompt must have length == current cache['pos'] (0 for the first
-        admit of a generation wave).  launch/serve.py batches a wave of
-        same-length prompts, which is the production pattern for benchmark
-        serving; ragged admission would use per-slot position tracking.
-        """
-        free = self.free_slots()
-        if not free:
+        Raises ``ValueError`` for an empty document, one longer than
+        ``max_len``, or out-of-vocabulary token ids (the service layer
+        maps this to a semantic ERROR frame, never a truncation)."""
+        toks = np.asarray(req.tokens, np.int32).reshape(-1)
+        if toks.size == 0:
+            raise ValueError("empty document")
+        if toks.size > self.scfg.max_len:
+            raise ValueError(
+                f"document has {toks.size} tokens, max_len is "
+                f"{self.scfg.max_len}")
+        if toks.min() < 0 or toks.max() >= self.cfg.vocab_size:
+            raise ValueError("token id out of range for vocab_size "
+                             f"{self.cfg.vocab_size}")
+        try:
+            j = self._slots.index(None)
+        except ValueError:
             return False
-        slot = free[0]
-        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
-        if extra_inputs:
-            batch.update(extra_inputs)
-        logits, req_cache = self._prefill(self.params, batch)
-        self._scatter_cache(slot, req_cache)
-        self.cache["pos"] = req_cache["pos"]
-        if "key_pos" in req_cache:
-            self.cache["key_pos"] = req_cache["key_pos"]
-        tok = int(jnp.argmax(logits[0, 0, :self.cfg.vocab_size]))
-        req.output.append(tok)
-        self.slot_req[slot] = req
-        self.slot_pos[slot] = 1
-        self.last_tok[slot] = tok
+        l = self.scfg.max_len
+        row_tok = np.zeros((1, l), np.int32)
+        row_tok[0, :toks.size] = toks
+        row_mask = np.zeros((1, l), bool)
+        row_mask[0, :toks.size] = True
+        tok1 = jnp.asarray(row_tok)
+        mask1 = jnp.asarray(row_mask)
+        key = jax.random.PRNGKey(int(req.seed))
+        # The slot's chain init IS the oracle's: family init on the
+        # single-document shard, keyed by the request.
+        local0, _ = self.fam.init_state(self.cfg, tok1, mask1, key)
+        ld = self.fam.local_dict(self._local)
+        for name, row in self.fam.local_dict(local0).items():
+            ld[name] = ld[name].at[j].set(row[0])
+        self._local = self.fam.local_from_dict(ld)
+        self._tokens = self._tokens.at[j].set(tok1[0])
+        self._mask = self._mask.at[j].set(mask1[0])
+        # Single-doc sorted geometry per chunk: the inverse of these
+        # orders routes the slot's uniform columns to flat positions.
+        lays = self.fam.build_sorted_layouts(self.cfg, tok1, mask1)
+        self._slots[j] = _Slot(
+            uid=req.uid, length=int(toks.size), key=key, age=0,
+            orders=tuple(np.asarray(la.order) for la in lays),
+            widths=tuple(int(la.rows.shape[0]) for la in lays))
+        self._layouts = None
+        self.docs_admitted += 1
         return True
 
-    def step(self) -> None:
-        """One fused decode step for every live slot."""
-        toks = jnp.asarray(self.last_tok, jnp.int32)[:, None]
-        logits, self.cache = self._decode(self.params, self.cache, toks)
-        logits = logits[:, 0, :self.cfg.vocab_size]
-        if self.ecfg.greedy:
-            nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
-        else:
-            self.key, k = jax.random.split(self.key)
-            nxt = np.asarray(jax.random.categorical(
-                k, logits / self.ecfg.temperature, axis=-1), np.int32)
-        for i, req in enumerate(self.slot_req):
-            if req is None:
+    # ------------------------------------------------------------ uniforms
+    def _chunk_uniforms(self, c: int, lay: segment.SortedLayout,
+                        tile_b: int):
+        """Per-request uniform streams for batched chunk ``c``: each live
+        slot's streams are drawn under ITS single-doc geometry and key,
+        mapped through its single-doc sorted order, then permuted into the
+        batched sorted order.  Empty slots get neutral values (their
+        outputs are masked away)."""
+        s_chunk, e_chunk = self._bounds[c], self._bounds[c + 1]
+        clen = e_chunk - s_chunk
+        e_out = self.fam.n_outcomes(self.cfg)
+        mh = self.cfg.mh_steps
+        cols = []
+        for slot in self._slots:
+            if slot is None:
+                cols.append((np.zeros((mh, clen), np.int32),)
+                            + tuple(np.full((mh, clen), 0.5, np.float32)
+                                    for _ in range(4)))
                 continue
-            tok = int(nxt[i])
-            req.output.append(tok)
-            self.slot_pos[i] += 1
-            self.last_tok[i] = tok
-            if (tok == self.ecfg.eos_id
-                    or self.slot_pos[i] >= req.max_new_tokens):
-                req.done = True
+            ck = jax.random.fold_in(
+                jax.random.fold_in(slot.key, slot.age), c)
+            u = ops._step_uniforms(ck, e_out, mh, slot.widths[c])
+            order = slot.orders[c]
+            inv = np.empty(clen, np.int64)
+            inv[order] = np.arange(clen)
+            cols.append(tuple(np.asarray(a)[:, inv] for a in u))
+        # (mh, max_slots*clen) flat streams, slot-major like the grid.
+        flat = [np.concatenate([col[i] for col in cols], axis=1)
+                for i in range(5)]
+        order_b = np.asarray(lay.order)
+        pad = int(lay.rows.shape[0]) - order_b.shape[0]
+        out = []
+        for i, f in enumerate(flat):
+            g = f[:, order_b]
+            if pad:
+                fill = np.zeros((mh, pad), np.int32) if i == 0 else \
+                    np.full((mh, pad), 0.5, np.float32)
+                g = np.concatenate([g, fill], axis=1)
+            out.append(jnp.asarray(g))
+        return tuple(out)
 
-    def harvest(self) -> list[Request]:
-        done = []
-        for i, req in enumerate(self.slot_req):
-            if req is not None and req.done:
-                done.append(req)
-                self.slot_req[i] = None
-        return done
+    # ---------------------------------------------------------------- step
+    def step(self) -> int:
+        """One fused local-only sweep across every live slot.  Shared
+        statistics are read-only; the returned deltas are dropped on the
+        floor (fold-in never pushes).  Returns the number of live slots
+        swept (0 = nothing to do)."""
+        if self.live == 0:
+            return 0
+        if self._layouts is None:
+            self._layouts = self.fam.build_sorted_layouts(
+                self.cfg, self._tokens, self._mask)
+        local2, _deltas = self.fam.sweep_sorted(
+            self.cfg, self._local, self.snap.shared, self.snap.tables,
+            self.snap.stale, self._tokens, self._mask,
+            jax.random.PRNGKey(0),  # unused: every chunk gets uniforms
+            self._layouts, chunk_uniforms=self._chunk_uniforms)
+        self._local = self.fam.local_project(local2)
+        n = 0
+        for slot in self._slots:
+            if slot is not None:
+                slot.age += 1
+                n += 1
+        self.sweeps_run += 1
+        return n
 
-    # ------------------------------------------------------------------
-    def run(self, requests: list[Request],
-            extra_inputs: Callable[[Request], dict[str, Array]] | None = None,
-            ) -> list[Request]:
-        """Drive a full wave of same-length-prompt requests to completion."""
-        pending = list(requests)
-        finished: list[Request] = []
-        # Admit as many as fit (same prompt length ⇒ shared cache pos).
-        while pending and self.free_slots():
-            r = pending.pop(0)
-            self.admit(r, extra_inputs(r) if extra_inputs else None)
-        while self.live:
+    # ------------------------------------------------------------- harvest
+    def harvest(self) -> list[InferResult]:
+        """Free every slot whose chain has mixed ``n_sweeps`` sweeps and
+        return its topic proportions + final assignments."""
+        out = []
+        ld = self.fam.local_dict(self._local)
+        n_dk = np.asarray(ld["n_dk"])
+        z = np.asarray(ld["z"])
+        for j, slot in enumerate(self._slots):
+            if slot is None or slot.age < self.scfg.n_sweeps:
+                continue
+            out.append(InferResult(
+                uid=slot.uid,
+                theta=_theta(self._prior, n_dk[j], slot.length),
+                assignments=z[j, :slot.length].copy(),
+                n_sweeps=slot.age))
+            self._slots[j] = None
+            self._mask = self._mask.at[j].set(False)
+            self._layouts = None
+            self.docs_harvested += 1
+        return out
+
+    # ----------------------------------------------------------------- run
+    def run(self, requests: Iterable[InferRequest]
+            ) -> dict[int, InferResult]:
+        """Continuous-batching driver: admit as slots free up, sweep,
+        harvest, until every request is served."""
+        queue = list(requests)
+        results: dict[int, InferResult] = {}
+        while queue or self.live:
+            while queue and self.admit(queue[0]):
+                queue.pop(0)
             self.step()
-            finished.extend(self.harvest())
-            # same-wave refill only when cache positions still align
-            if not self.live and pending:
-                self.cache = model_lib.init_cache(
-                    self.cfg, self.ecfg.batch, self.ecfg.max_len)
-                while pending and self.free_slots():
-                    r = pending.pop(0)
-                    self.admit(r, extra_inputs(r) if extra_inputs else None)
-        return finished
+            for res in self.harvest():
+                results[res.uid] = res
+        return results
+
+
+# ---------------------------------------------------------------------------
+# The oracle: fold-in through the Trainer path with pushes disabled
+# ---------------------------------------------------------------------------
+
+def reference_fold_in(snap: InferenceSnapshot, tokens: Sequence[int],
+                      seed: int, *, n_sweeps: int,
+                      max_len: int) -> tuple[Any, np.ndarray, np.ndarray]:
+    """Fold one document in via the training code path: ``family.sweep``
+    (the jitted per-family entry Trainer calls) on a one-document shard
+    with ``layout="sorted"``, deltas dropped — i.e. pushes disabled.
+
+    Returns ``(local_state, theta, assignments)``.  ``max_len`` must
+    match the engine's slot width: chunk boundaries are derived from the
+    padded length, so the geometry is part of the chain's identity.
+    """
+    fam, cfg = snap.family, snap.cfg
+    toks = np.asarray(tokens, np.int32).reshape(-1)
+    if toks.size > max_len:
+        raise ValueError(f"document has {toks.size} tokens > {max_len}")
+    row_tok = np.zeros((1, max_len), np.int32)
+    row_tok[0, :toks.size] = toks
+    row_mask = np.zeros((1, max_len), bool)
+    row_mask[0, :toks.size] = True
+    tok1, mask1 = jnp.asarray(row_tok), jnp.asarray(row_mask)
+    key = jax.random.PRNGKey(int(seed))
+    local, _ = fam.init_state(cfg, tok1, mask1, key)
+    layouts = fam.build_sorted_layouts(cfg, tok1, mask1)
+    for s in range(n_sweeps):
+        local, _deltas = fam.sweep(
+            cfg, local, snap.shared, snap.tables, snap.stale, tok1, mask1,
+            jax.random.fold_in(key, s), method="mhw", layout="sorted",
+            sorted_layouts=layouts)
+        local = fam.local_project(local)
+    n_dk = np.asarray(local.n_dk[0])
+    prior = np.asarray(snap.topic_prior(), np.float32)
+    theta = _theta(prior, n_dk, int(toks.size))
+    z = np.asarray(local.z[0, :toks.size])
+    return local, theta, z
+
+
+# ---------------------------------------------------------------------------
+# Fold-in quality: held-out perplexity of harvested proportions
+# ---------------------------------------------------------------------------
+
+def fold_in_perplexity(snap: InferenceSnapshot,
+                       thetas: np.ndarray, tokens: np.ndarray,
+                       mask: np.ndarray) -> float:
+    """Held-out perplexity of documents under their *harvested* topic
+    proportions and the frozen per-topic word distributions — the
+    serving-side counterpart of ``family.perplexity`` (which folds in
+    with its own internal chains).  The benchmark's quality gate compares
+    the two."""
+    phi = np.asarray(snap.language_model(), np.float32)  # (V, K)
+    k = thetas.shape[1]
+    pw = np.einsum("dk,dlk->dl", np.asarray(thetas, np.float32),
+                   phi[np.asarray(tokens)][..., :k])
+    m = np.asarray(mask, bool)
+    logs = np.log(np.maximum(pw, 1e-30))[m]
+    return float(np.exp(-logs.sum() / max(1, m.sum())))

@@ -1,0 +1,153 @@
+"""Inference snapshots: a trained model frozen for serving (DESIGN.md §14).
+
+Serving never mutates the model.  An :class:`InferenceSnapshot` captures
+everything the fold-in engine needs — the family name, the model config,
+the dense shared statistics, and the alias proposal built over them — as
+an immutable value.  Three provenance paths produce one:
+
+* :func:`freeze` — from in-memory shared statistics (tests, notebooks);
+* :func:`from_trainer` — from a live :class:`~repro.engine.trainer.Trainer`
+  via its canonical ``Trainer.shared`` snapshot (works over both the
+  in-process server and tcp);
+* :func:`from_checkpoint` — from a ``checkpoint/ckpt.py`` manifest written
+  by ``Trainer.save_snapshot`` (restores only the ``server/shards`` and
+  ``server/aux`` leaves — the serving process never materializes client
+  locals or the SSP cache);
+* :func:`from_servers` — the PULL path: assemble the canonical statistics
+  from live shard-server processes over the framed wire protocol.
+
+The alias tables are built exactly once, at freeze time, with the same
+``family.build_alias`` producer training uses — so the proposal the
+serving chain mixes against is bit-identical to a training-time refresh
+over the same statistics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.core import family as family_mod
+from repro.core import server as server_mod
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class InferenceSnapshot:
+    """A trained model frozen for fold-in serving.
+
+    ``shared`` is the family's dense SharedStats NamedTuple; ``tables`` /
+    ``stale`` are the alias proposal built over it (``family.build_alias``).
+    The snapshot is read-only by construction: the engine threads it into
+    local-only sweeps and never writes any leaf back.
+    """
+
+    family_name: str
+    cfg: Any
+    shared: Any
+    tables: Any
+    stale: Array
+
+    @property
+    def family(self) -> family_mod.ModelFamily:
+        return family_mod.get(self.family_name)
+
+    @property
+    def vocab_size(self) -> int:
+        return self.cfg.vocab_size
+
+    @property
+    def n_topics(self) -> int:
+        return self.cfg.n_topics
+
+    def topic_prior(self) -> Array:
+        """(K,) per-topic prior mass used when normalizing harvested
+        proportions — the family's sparse prior, truncated to the first
+        K entries for PDP (whose joint outcome space is 2K with the same
+        α in both halves)."""
+        prior = self.family.sparse_prior(self.cfg, self.shared)
+        return prior[: self.cfg.n_topics]
+
+    def language_model(self) -> Array:
+        """(V, K) per-topic word distributions φ under the frozen stats."""
+        return self.family.language_model(self.cfg, self.shared)
+
+
+def freeze(cfg: Any, shared: Any) -> InferenceSnapshot:
+    """Freeze dense shared statistics into a serving snapshot, building
+    the alias proposal over them."""
+    fam = family_mod.family_of(cfg)
+    tables, stale = fam.build_alias(cfg, shared)
+    return InferenceSnapshot(family_name=fam.name, cfg=cfg, shared=shared,
+                             tables=tables, stale=stale)
+
+
+def from_trainer(trainer: Any) -> InferenceSnapshot:
+    """Freeze a live Trainer's canonical statistics (``Trainer.shared``
+    waits for every stepped round to finalize, so the snapshot is a
+    consistent round boundary, not a mid-round torn read)."""
+    return freeze(trainer.cfg, trainer.shared)
+
+
+def _shared_template(fam: family_mod.ModelFamily, cfg: Any, n_shards: int
+                     ) -> tuple[dict, tuple[str, ...]]:
+    """A ``{"server": {"shards": ..., "aux": ...}}`` template whose flat
+    leaf paths match the ``server/shards/<s>/<stat>`` / ``server/aux/<stat>``
+    keys a Trainer snapshot records for its ServerState — restore matches
+    leaves by flat string key and ignores every other saved leaf, which is
+    what lets the serving process skip client locals entirely."""
+    dummy_tok = jnp.zeros((1, 1), jnp.int32)
+    dummy_mask = jnp.zeros((1, 1), bool)
+    _, shared = fam.init_state(cfg, dummy_tok, dummy_mask,
+                               jax.random.PRNGKey(0))
+    srv = server_mod.make_server(fam, cfg.vocab_size, n_shards=n_shards)
+    shards, aux = srv.split(shared)
+    sharded = tuple(sorted(shards[0]))
+    return {"server": {"shards": tuple(dict(s) for s in shards),
+                       "aux": dict(aux)}}, sharded
+
+
+def _assemble(fam: family_mod.ModelFamily, shards, aux: dict,
+              sharded: tuple[str, ...]) -> Any:
+    dense = {n: jnp.concatenate([jnp.asarray(s[n]) for s in shards], axis=0)
+             for n in sharded}
+    dense.update({n: jnp.asarray(v) for n, v in aux.items()})
+    return fam.shared_from_dict(dense)
+
+
+def from_checkpoint(directory: str, cfg: Any, *, n_shards: int = 1,
+                    name: str = "trainer",
+                    step: int | None = None) -> InferenceSnapshot:
+    """Freeze the newest readable Trainer snapshot under ``directory``.
+
+    ``n_shards`` must match the partition the snapshot was written with
+    (shape validation catches a mismatch).  Only the shared statistics
+    are restored; the snapshot's client locals, SSP cache, clocks and
+    alias proposal are ignored and the proposal is rebuilt fresh.
+    """
+    fam = family_mod.family_of(cfg)
+    template, sharded = _shared_template(fam, cfg, n_shards)
+    snap = ckpt.restore_latest(directory, name, template, step=step)
+    shared = _assemble(fam, snap["server"]["shards"],
+                       snap["server"]["aux"], sharded)
+    return freeze(cfg, shared)
+
+
+def from_servers(addrs: Any, cfg: Any, *, n_clients: int,
+                 consistency: str = "bsp", timeout: float = 60.0,
+                 min_round: int = 0) -> InferenceSnapshot:
+    """Freeze the canonical assembled statistics of live shard servers
+    (the PULL path): one SNAPSHOT round-trip per shard, after every round
+    below ``min_round`` has finalized."""
+    from repro.net import client as net_client
+    with net_client.RemoteParameterServer(
+            tuple(addrs), family=family_mod.family_of(cfg),
+            n_clients=n_clients, consistency=consistency,
+            vocab_size=cfg.vocab_size, timeout=timeout) as remote:
+        shared = remote.snapshot(min_round=min_round)
+    return freeze(cfg, shared)

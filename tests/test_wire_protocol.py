@@ -380,3 +380,143 @@ def test_sparse_push_applies_bitexact_with_dense():
     np.testing.assert_array_equal(results["dense"], results["sparse"])
     # The push genuinely applied (it is not two untouched stores).
     assert results["dense"][2, 1] != 0.0 or results["dense"][2, 0] != 0.0
+
+
+# ---------------------------------------------------------------------------
+# INFER frame fuzz (DESIGN.md §14) — the inference service speaks the same
+# wire format; malformed requests must get a clean ERROR without taking
+# the batcher down, and the engine output after abuse must stay
+# bit-identical to an untouched in-process engine.
+# ---------------------------------------------------------------------------
+
+V_INF, K_INF, LEN_INF = 16, 4, 8
+
+
+@pytest.fixture(scope="module")
+def infer_server():
+    import jax
+    from repro.core import family as fam_mod
+    from repro.data.synthetic import CorpusConfig, make_topic_corpus
+    from repro.serve import ServeConfig, freeze
+    from repro.serve.server import InferenceServer
+
+    fam = fam_mod.get("lda")
+    cfg = fam.config_cls(n_topics=K_INF, vocab_size=V_INF)
+    tokens, mask, _ = make_topic_corpus(CorpusConfig(
+        n_topics=K_INF, vocab_size=V_INF, n_docs=8, doc_len=LEN_INF,
+        seed=0))
+    _, shared = fam.init_state(cfg, tokens, mask, jax.random.PRNGKey(0))
+    snap = freeze(cfg, shared)
+    scfg = ServeConfig(max_slots=2, max_len=LEN_INF, n_sweeps=2)
+    srv = InferenceServer(snap, scfg, idle_timeout=SOCK_TIMEOUT).start()
+    yield srv, snap, scfg
+    srv.close()
+
+
+def _good_doc():
+    return (np.arange(6, dtype=np.int32) % V_INF)
+
+
+def _infer_roundtrip(srv, uid=7, seed=3):
+    """A valid INFER through a real client; returns the result."""
+    from repro.serve.client import InferenceClient
+    with InferenceClient("%s:%d" % srv.address,
+                         timeout=SOCK_TIMEOUT * 4) as cli:
+        return cli.infer(uid, _good_doc(), seed=seed)
+
+
+def _reference_result(snap, scfg, uid=7, seed=3):
+    from repro.serve import FoldInEngine, InferRequest
+    eng = FoldInEngine(snap, scfg)
+    return eng.run([InferRequest(uid=uid, tokens=_good_doc(),
+                                 seed=seed)])[uid]
+
+
+def _infer_frame(meta=None, arrays=None):
+    if meta is None:
+        meta = {"uid": 1, "seed": 0}
+    if arrays is None:
+        arrays = {"tokens": _good_doc()}
+    return protocol.pack_frame(MsgType.INFER, meta, arrays)
+
+
+@pytest.mark.parametrize("frame_fn", [
+    lambda: _infer_frame(meta={"seed": 0}),                  # no uid
+    lambda: _infer_frame(meta={"uid": "seven", "seed": 0}),
+    lambda: _infer_frame(meta={"uid": True, "seed": 0}),
+    lambda: _infer_frame(meta={"uid": 1, "seed": "x"}),
+    lambda: _infer_frame(arrays={}),                         # no tokens
+    lambda: _infer_frame(arrays={"tokens": np.zeros((2, 3), np.int32)}),
+    lambda: _infer_frame(arrays={"tokens": np.ones(4, np.float32)}),
+    lambda: _infer_frame(arrays={"tokens": np.zeros(0, np.int32)}),
+    lambda: _infer_frame(                                    # oversized doc
+        arrays={"tokens": np.zeros(LEN_INF + 1, np.int32)}),
+    lambda: _infer_frame(                                    # out-of-vocab
+        arrays={"tokens": np.asarray([V_INF], np.int32)}),
+], ids=["no-uid", "uid-str", "uid-bool", "seed-str", "no-tokens",
+        "tokens-2d", "tokens-float", "tokens-empty", "oversized",
+        "oov"])
+def test_fuzz_infer_malformed_rejected_service_lives(infer_server,
+                                                     frame_fn):
+    """Malformed-but-well-framed INFER: clean ERROR + close, then a valid
+    request on a fresh connection still serves the bit-exact result."""
+    srv, snap, scfg = infer_server
+    from repro.serve.engine import result_checksum
+    sock = socket.create_connection(srv.address, timeout=SOCK_TIMEOUT)
+    sock.settimeout(SOCK_TIMEOUT)
+    try:
+        sock.sendall(frame_fn())
+        _expect_error_then_close(sock)
+    finally:
+        sock.close()
+    res = _infer_roundtrip(srv)
+    ref = _reference_result(snap, scfg)
+    assert result_checksum(res) == result_checksum(ref)
+
+
+def test_fuzz_infer_mid_payload_disconnect(infer_server):
+    """A client that vanishes mid-INFER is a protocol error on that
+    connection only; the batcher keeps serving everyone else."""
+    srv, snap, scfg = infer_server
+    from repro.serve.engine import result_checksum
+    before = srv.stats()["protocol_errors"]
+    sock = socket.create_connection(srv.address, timeout=SOCK_TIMEOUT)
+    sock.settimeout(SOCK_TIMEOUT)
+    try:
+        full = _infer_frame()
+        sock.sendall(full[:protocol.HEADER_SIZE + 10])  # then vanish
+    finally:
+        sock.close()
+    res = _infer_roundtrip(srv, uid=9, seed=5)
+    ref = _reference_result(snap, scfg, uid=9, seed=5)
+    assert result_checksum(res) == result_checksum(ref)
+    assert srv.stats()["protocol_errors"] >= before + 1
+
+
+def test_fuzz_infer_garbage_header_service_lives(infer_server):
+    """The generic malformed-header abuse, against the inference port."""
+    srv, snap, scfg = infer_server
+    sock = socket.create_connection(srv.address, timeout=SOCK_TIMEOUT)
+    sock.settimeout(SOCK_TIMEOUT)
+    try:
+        sock.sendall(b"EVIL" + protocol.pack_frame(
+            MsgType.INFER, {"uid": 1, "seed": 0},
+            {"tokens": _good_doc()})[4:])
+        _expect_error_then_close(sock)
+    finally:
+        sock.close()
+    assert _infer_roundtrip(srv, uid=11).n_sweeps == 2
+
+
+def test_infer_wrong_type_rejected(infer_server):
+    """A shard-protocol frame (PULL) at the inference server: semantic
+    ERROR, connection closed, service lives."""
+    srv, _, _ = infer_server
+    sock = socket.create_connection(srv.address, timeout=SOCK_TIMEOUT)
+    sock.settimeout(SOCK_TIMEOUT)
+    try:
+        sock.sendall(protocol.pack_frame(MsgType.PULL, {"round": 0}))
+        _expect_error_then_close(sock)
+    finally:
+        sock.close()
+    assert _infer_roundtrip(srv, uid=13).n_sweeps == 2

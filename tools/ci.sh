@@ -43,7 +43,13 @@ echo "=== quick benchmarks: throughput + families + consistency + failover ==="
 # The scale module is the (V, K) ladder (DESIGN.md §12): K-tiled sorted
 # sweep tokens/s, incremental alias-build ms/row and dense-vs-sparse
 # frame bytes up to (V=65536, K=256) in quick mode.
-python -m benchmarks.run --only throughput,lda,pdp,hdp,consistency,failover,wire,scale --quick
+# The serve module is the online fold-in serving bench (DESIGN.md §14):
+# a real InferenceServer under concurrent client connections;
+# BENCH_serve.json must carry p50/p99 latency, docs/s, the shed count
+# and the fold-in-vs-training perplexity quality gate, and the module
+# itself hard-fails if the served results are not bit-exact with the
+# reference_fold_in training path or the gate is exceeded.
+python -m benchmarks.run --only throughput,lda,pdp,hdp,consistency,failover,wire,scale,serve --quick
 python - <<'EOF'
 import json
 art = json.load(open("BENCH_consistency.json"))
@@ -134,6 +140,27 @@ print("scale artifact OK:", ", ".join(
     f"V={p['vocab']} K={p['n_topics']}: {p['tokens_per_s']:.0f} tok/s, "
     f"sparse {p['bytes_per_round']['ratio']:.0f}x" for p in pts))
 EOF
+python - <<'EOF'
+import json
+art = json.load(open("BENCH_serve.json"))
+srv = art["serve"]
+assert srv["n_clients"] >= 2, srv
+assert srv["docs"] > 0 and srv["docs_per_s"] > 0, srv
+lat = srv["latency_ms"]
+assert lat["p50"] > 0 and lat["p99"] >= lat["p50"], lat
+assert srv["shed"] >= 0, srv
+assert art["parity"]["bit_exact"] is True, art["parity"]
+q = art["quality"]
+for k in ("fold_in_ppl", "train_eval_ppl", "ratio", "tolerance"):
+    assert q[k] > 0, (k, q)
+assert q["within_tolerance"] is True, q
+print(f"serve artifact OK: {srv['docs_per_s']:.2f} docs/s over "
+      f"{srv['n_clients']} clients (p50 {lat['p50']:.0f} ms, "
+      f"p99 {lat['p99']:.0f} ms, shed {srv['shed']}); "
+      f"fold-in ppl {q['fold_in_ppl']:.1f} vs eval "
+      f"{q['train_eval_ppl']:.1f} ({q['ratio']:.2f}x <= "
+      f"{q['tolerance']}x)")
+EOF
 
 echo "=== loopback e2e smoke: 1 shard server + 2 client processes ==="
 # Real processes over 127.0.0.1 speaking the framed protocol end to end;
@@ -153,6 +180,16 @@ echo "=== tcp kill-and-rejoin smoke: chaos proxy + shard restart + worker rejoin
 # drop fired, and that the final checksums are bit-exact with the
 # undisturbed in-process run.  timeout(1) again guards against hangs.
 timeout 540 python -m repro.launch.loopback --failover-smoke
+
+echo "=== serve e2e smoke: 1 inference server + 2 concurrent client processes ==="
+# The DESIGN.md §14 acceptance as a process-level smoke: train a small
+# model, snapshot it, boot an inference-server process from the
+# checkpoint and two concurrent client processes over 127.0.0.1, and
+# require every served result checksum to be bit-identical to an
+# in-process FoldInEngine replay of the same requests (the determinism
+# contract across process + socket boundaries).  timeout(1) again
+# guards against a hung batcher.
+timeout 540 python -m repro.launch.serve --smoke
 
 echo "=== artifacts ==="
 ls -l BENCH_*.json bench_results.csv
